@@ -1,0 +1,138 @@
+"""Emit the data-driven sections of EXPERIMENTS.md from the dry-run JSONs.
+
+  PYTHONPATH=src:. python -m benchmarks.emit_experiments > /tmp/tables.md
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.roofline import OUT_DIR, analyze_cell, wire_bytes_dev
+
+BASE_DIR = os.path.join(os.path.dirname(__file__), "out", "dryrun_baseline")
+
+
+def load(path):
+    with open(path) as fh:
+        return json.load(fh)
+
+
+def dryrun_table(dirname: str, mesh: str) -> str:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dirname, f"*__{mesh}.json"))):
+        if os.path.basename(path).count("__") != 2:
+            continue
+        j = load(path)
+        m = j.get("memory", {})
+        c = j.get("corrected", {})
+        rows.append(
+            f"| {j['arch']} | {j['shape']} | {j['kind']} | {j['mesh']} | "
+            f"{m.get('argument_size_in_bytes', 0)/2**30:.2f} | "
+            f"{m.get('temp_size_in_bytes', 0)/2**30:.2f} | "
+            f"{c.get('dot_flops', 0):.3e} | "
+            f"{c.get('coll_total_bytes', 0):.3e} | "
+            f"{j.get('compile_s', 0):.0f} |"
+        )
+    hdr = (
+        "| arch | shape | kind | mesh | args GiB/dev | temp GiB/dev | "
+        "dot FLOPs/dev | coll B/dev | compile s |\n"
+        "|---|---|---|---|---|---|---|---|---|"
+    )
+    return hdr + "\n" + "\n".join(rows)
+
+
+def roofline_rows(dirname: str) -> list[dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(dirname, "*__single.json"))):
+        if os.path.basename(path).count("__") != 2:
+            continue
+        out.append(analyze_cell(load(path)))
+    return out
+
+
+def roofline_table(dirname: str) -> str:
+    rows = roofline_rows(dirname)
+    hdr = (
+        "| arch | shape | compute s | memory s | collective s | dominant | "
+        "MODEL_FLOPS | useful | roofline frac | next lever |\n"
+        "|---|---|---|---|---|---|---|---|---|---|"
+    )
+    body = []
+    for a in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        body.append(
+            f"| {a['arch']} | {a['shape']} | {a['compute_s']:.4g} | {a['memory_s']:.4g} | "
+            f"{a['collective_s']:.4g} | **{a['dominant']}** | {a['model_flops_global']:.2e} | "
+            f"{a['useful_ratio']:.2f} | {a['roofline_fraction']:.3f} | {a['suggestion']} |"
+        )
+    return hdr + "\n" + "\n".join(body)
+
+
+def variant_row(path: str, label: str) -> str:
+    j = load(path)
+    a = analyze_cell(j)
+    return (
+        f"| {label} | {a['compute_s']:.4g} | {a['memory_s']:.4g} | {a['collective_s']:.4g} | "
+        f"{a['dominant']} | {a['roofline_fraction']:.3f} |"
+    )
+
+
+def perf_tables() -> str:
+    out = []
+    groups = {
+        "grok_1_314b x train_4k": [
+            (os.path.join(BASE_DIR, "grok_1_314b__train_4k__single.json"), "baseline (paper-faithful naive)"),
+            (os.path.join(OUT_DIR, "grok_1_314b__train_4k__single_ef_shard.json"), "iter 1: expert_ff->model rule"),
+            (os.path.join(OUT_DIR, "grok_1_314b__train_4k__single_h_ffshard.json"), "iter 3: h constrained to ff shard"),
+            (os.path.join(OUT_DIR, "grok_1_314b__train_4k__single_local_dispatch.json"), "iter 4: group-local dispatch (final)"),
+        ],
+        "deepseek_v3_671b x train_4k": [
+            (os.path.join(BASE_DIR, "deepseek_v3_671b__train_4k__single.json"), "baseline (paper-faithful naive)"),
+            (os.path.join(OUT_DIR, "deepseek_v3_671b__train_4k__single_moe_pin.json"), "iter 2: pin dispatch buffer (refuted)"),
+            (os.path.join(OUT_DIR, "deepseek_v3_671b__train_4k__single_local_dispatch.json"), "iter 4: group-local dispatch"),
+            (os.path.join(OUT_DIR, "deepseek_v3_671b__train_4k__single_combine_pin.json"), "iter 8: pin combine output (refuted)"),
+            (os.path.join(OUT_DIR, "deepseek_v3_671b__train_4k__single_dp64_fsdp.json"), "iter 9: dp64 + FSDP (final)"),
+        ],
+        "command_r_35b x decode_32k": [
+            (os.path.join(BASE_DIR, "command_r_35b__decode_32k__single.json"), "baseline (paper-faithful naive)"),
+            (os.path.join(OUT_DIR, "command_r_35b__decode_32k__single_seqshard.json"), "iter 10: cache seq-sharded over model"),
+            (os.path.join(OUT_DIR, "command_r_35b__decode_32k__single_dp32.json"), "iter 11: mesh 32x8 (kv=8 divides TP) (final)"),
+        ],
+        "qwen3_8b x train_4k (bonus)": [
+            (os.path.join(BASE_DIR, "qwen3_8b__train_4k__single.json"), "baseline"),
+            (os.path.join(OUT_DIR, "qwen3_8b__train_4k__single_seqpar.json"), "iter 5: sequence-parallel constraint (refuted)"),
+            (os.path.join(OUT_DIR, "qwen3_8b__train_4k__single_rematdots.json"), "iter 6: remat=dots (marginal)"),
+            (os.path.join(OUT_DIR, "qwen3_8b__train_4k__single_fsdp.json"), "iter 7a: FSDP rules"),
+            (os.path.join(OUT_DIR, "qwen3_8b__train_4k__single_fsdp_dp64.json"), "iter 7b: FSDP + dp64/tp4"),
+            (os.path.join(OUT_DIR, "qwen3_8b__train_4k__single_fsdp_dp256.json"), "iter 7c: FSDP + dp256/tp1 (final)"),
+        ],
+    }
+    for title, entries in groups.items():
+        out.append(f"\n#### {title}\n")
+        out.append("| variant | compute s | memory s | collective s | dominant | roofline frac |")
+        out.append("|---|---|---|---|---|---|")
+        for path, label in entries:
+            if os.path.exists(path):
+                out.append(variant_row(path, label))
+            else:
+                out.append(f"| {label} | - | - | - | missing | - |")
+    return "\n".join(out)
+
+
+def main() -> None:
+    print("## AUTO-GENERATED TABLES\n")
+    print("### Dry-run (single-pod 16x16, optimized defaults)\n")
+    print(dryrun_table(OUT_DIR, "single"))
+    print("\n### Dry-run (multi-pod 2x16x16, optimized defaults)\n")
+    print(dryrun_table(OUT_DIR, "multi"))
+    print("\n### Roofline — paper-faithful BASELINE (single-pod)\n")
+    print(roofline_table(BASE_DIR))
+    print("\n### Roofline — OPTIMIZED defaults (single-pod)\n")
+    print(roofline_table(OUT_DIR))
+    print("\n### Perf iterations\n")
+    print(perf_tables())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Fig. 5 / Section 4.5 — aggregate-throughput crossover analysis.
+
+Reproduces every headline number from the models (Eqs. 1-7) and reports
+model-vs-paper deltas.  Also recalibrates the same equations with TPU-pod
+constants (DESIGN.md §2) to size the data/checkpoint tiers for the
+production mesh.
+"""
+
+from __future__ import annotations
+
+from repro.core.cluster import paper_average_cluster, tpu_v5e_pod
+from repro.core.iomodel import (
+    hdfs_aggregate_read,
+    ofs_aggregate_read,
+    section45_report,
+    tls_aggregate_read,
+    tls_read,
+)
+
+PAPER = {
+    (10.0, "read_vs_ofs"): 43,
+    (10.0, "read_vs_tls_f02"): 53,
+    (10.0, "read_vs_tls_f05"): 83,
+    (10.0, "write_vs_ofs_and_tls"): 259,
+    (50.0, "read_vs_ofs"): 211,
+    (50.0, "read_vs_tls_f02"): 262,
+    (50.0, "read_vs_tls_f05"): 414,
+    (50.0, "write_vs_ofs_and_tls"): 1294,
+}
+
+
+def run() -> list[tuple[str, float, str]]:
+    rows: list[tuple[str, float, str]] = []
+    for agg in (10_000.0, 50_000.0):
+        spec = paper_average_cluster(pfs_aggregate_mbps=agg)
+        rep = section45_report(spec)
+        g = agg / 1000.0
+        for field in ("read_vs_ofs", "read_vs_tls_f02", "read_vs_tls_f05", "write_vs_ofs_and_tls"):
+            got = getattr(rep, field)
+            want = PAPER[(g, field)]
+            rows.append((f"fig5.{int(g)}gbs.{field}", got, f"paper={want} delta={got-want}"))
+        rows.append(
+            (f"fig5.{int(g)}gbs.tls_gain_f02_pct", round(100 * rep.tls_read_gain_f02, 1), "paper ~25%")
+        )
+        rows.append(
+            (f"fig5.{int(g)}gbs.tls_gain_f05_pct", round(100 * rep.tls_read_gain_f05, 1), "paper ~95%")
+        )
+
+    # Beyond-paper: the same model calibrated for a TPU-v5e pod's input
+    # pipeline — how many hosts until host-local caching beats the PFS.
+    pod = tpu_v5e_pod(n_hosts=64, n_storage=16)
+    n_even = None
+    for n in range(1, 4096):
+        if n * pod.disk_read_mbps > tls_aggregate_read(pod.with_nodes(n_compute=n), n, 0.5):
+            n_even = n
+            break
+    rows.append(("fig5.tpu_pod.crossover_hosts_f05", float(n_even or -1), "hosts until NVMe beats TLS(f=0.5)"))
+    rows.append(
+        ("fig5.tpu_pod.tls_read_gbps_f05", round(tls_read(pod, 0.5) / 1000.0, 2), "per-host, f=0.5")
+    )
+    return rows

@@ -1,0 +1,89 @@
+"""Recompile one dry-run cell and print the top computations by
+(dot FLOPs x multiplier) and the collective payload breakdown — the
+'profiler' for the §Perf hypothesis loop (no real TPU: the lowered IR is
+the profile, per the methodology note).
+
+  PYTHONPATH=src python -m benchmarks.inspect_cell --arch grok-1-314b --shape train_4k
+"""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse
+import re
+from collections import defaultdict
+
+from repro.launch.dryrun import run_cell  # noqa: E402  (sets XLA_FLAGS first)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi", action="store_true")
+    ap.add_argument("--seq-shard", action="store_true")
+    ap.add_argument("--top", type=int, default=12)
+    args = ap.parse_args()
+
+    import repro.launch.dryrun as dmod
+    from repro.launch.hlo_analysis import _entry_name, analyze_computations, multipliers
+
+    # capture the HLO text from inside run_cell (single compile)
+    captured = {}
+    orig = dmod.hlo_analyze
+
+    def capture(hlo):
+        captured["hlo"] = hlo
+        return orig(hlo)
+
+    dmod.hlo_analyze = capture
+    try:
+        res = dmod.run_cell(
+            args.arch.replace("-", "_"), args.shape, args.multi, seq_shard=args.seq_shard
+        )
+    finally:
+        dmod.hlo_analyze = orig
+    hlo = captured["hlo"]
+
+    print("== cell summary ==")
+    print({k: res[k] for k in ("arch", "shape", "mesh", "compile_s")})
+    print("corrected:", {k: f"{v:.3e}" for k, v in res["corrected"].items() if isinstance(v, float)})
+    print("coll by type:", res["corrected"]["coll_bytes_by_type"])
+
+    stats = analyze_computations(hlo)
+    entry = _entry_name(hlo) or ""
+    mult = multipliers(stats, entry)
+    rows = []
+    for name, cs in stats.items():
+        m = mult.get(name, 0.0)
+        if cs.dot_flops * m > 0:
+            rows.append((cs.dot_flops * m, m, name))
+    rows.sort(reverse=True)
+    print(f"\n== top {args.top} computations by corrected dot FLOPs ==")
+    for fl, m, name in rows[: args.top]:
+        print(f"  {fl:12.4e}  x{m:<8.0f} {name}")
+
+    print("\n== collectives by computation ==")
+    crows = []
+    for name, cs in stats.items():
+        m = mult.get(name, 0.0)
+        tot = sum(cs.coll_bytes.values()) * m
+        if tot > 0:
+            crows.append((tot, m, name, dict(cs.coll_counts)))
+    crows.sort(reverse=True)
+    for tot, m, name, counts in crows[: args.top]:
+        print(f"  {tot:12.4e}B x{m:<8.0f} {name} {counts}")
+
+    print("\n== biggest individual collective lines ==")
+    lines = []
+    for line in hlo.splitlines():
+        if re.search(r"\s(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)(-start)?\(", line):
+            lines.append(line.strip()[:220])
+    lines.sort(key=len, reverse=True)
+    for l in lines[:8]:
+        print("  ", l)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Benchmark entry point: ``python -m benchmarks.run``.
+
+One module per paper table/figure; prints ``name,value,derived`` CSV
+(value is the figure's native unit: MB/s, node counts, seconds, ratios —
+noted in the derived column).
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import fig1_tiers, fig5_crossover, fig6_mountain, fig7_terasort, roofline
+
+    modules = [
+        ("fig1", fig1_tiers),
+        ("fig5", fig5_crossover),
+        ("fig6", fig6_mountain),
+        ("fig7", fig7_terasort),
+        ("roofline", roofline),
+    ]
+    print("name,value,derived")
+    failures = 0
+    for label, mod in modules:
+        t0 = time.perf_counter()
+        try:
+            rows = mod.run()
+        except Exception as e:  # keep the harness running
+            failures += 1
+            print(f"{label}.ERROR,0,{type(e).__name__}: {e}")
+            continue
+        for name, value, derived in rows:
+            print(f"{name},{value},{derived}")
+        print(f"{label}.elapsed_s,{time.perf_counter() - t0:.2f},harness")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

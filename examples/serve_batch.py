@@ -1,0 +1,79 @@
+"""Batched serving: prefill a batch of prompts, decode greedily, report
+per-phase throughput — plus the two-level KV-cache story at decode time
+(hot ring vs cold history, the paper's read mode (f) in serving form).
+
+    PYTHONPATH=src python examples/serve_batch.py [--tokens 32]
+"""
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_reduced, make_model
+from repro.core.cluster import ClusterSpec
+from repro.core.iomodel import tls_read
+from repro.launch.steps import make_prefill_step, make_serve_step
+from repro.nn.module import init_with_axes
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3_1b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--tokens", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = get_reduced(args.arch)
+    model = make_model(cfg)
+    params, _ = init_with_axes(model.init, jax.random.PRNGKey(0), dtype=jnp.float32)
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab, (args.batch, args.prompt_len)), jnp.int32)
+
+    max_len = args.prompt_len + args.tokens + 1
+    caches = model.init_caches(args.batch, max_len, jnp.bfloat16)
+    prefill = jax.jit(make_prefill_step(model, cfg))
+    serve = jax.jit(make_serve_step(model, cfg))
+
+    t0 = time.perf_counter()
+    tok, caches = prefill(params, {"inputs": prompts}, caches)
+    tok = tok[:, None]
+    jax.block_until_ready(tok)
+    prefill_s = time.perf_counter() - t0
+    print(f"prefill: {args.batch}x{args.prompt_len} tokens in {prefill_s:.3f}s "
+          f"({args.batch * args.prompt_len / prefill_s:,.0f} tok/s)")
+
+    out = [tok]
+    t0 = time.perf_counter()
+    for _ in range(args.tokens):
+        tok, caches = serve(params, tok, caches)
+        out.append(tok)
+    jax.block_until_ready(tok)
+    decode_s = time.perf_counter() - t0
+    gen = jnp.concatenate(out, axis=1)
+    print(f"decode:  {args.tokens} steps x batch {args.batch} in {decode_s:.3f}s "
+          f"({args.batch * args.tokens / decode_s:,.0f} tok/s)")
+    print(f"sample continuation (row 0): {np.asarray(gen[0])[:16].tolist()}")
+
+    # The decode-time two-tier read model (DESIGN.md L2/L3): a hot window in
+    # fast memory vs the cold KV history — Eq. 7 with TPU-class constants.
+    vmem_like = ClusterSpec(
+        name="tpu-decode-tiers", n_compute=1, n_data=1,
+        backplane_mbps=1e12, nic_mbps=1e12,
+        disk_read_mbps=1.0, disk_write_mbps=1.0,
+        data_disk_read_mbps=819_000.0, data_disk_write_mbps=819_000.0,  # HBM
+        ram_mbps=20_000_000.0,  # VMEM-class
+    )
+    total = args.prompt_len + args.tokens
+    for window in (0, total // 2, total):
+        f = window / total
+        q = tls_read(vmem_like, f)
+        print(f"  tiered-KV model: hot fraction f={f:.2f} -> effective read {q/1e6:.2f} TB/s")
+
+
+if __name__ == "__main__":
+    main()

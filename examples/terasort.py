@@ -1,0 +1,52 @@
+"""TeraSort on three storage organizations (the paper's Section 5.3
+evaluation, miniaturized but moving real bytes).
+
+    PYTHONPATH=src python examples/terasort.py [--records 200000]
+"""
+
+import argparse
+import os
+import tempfile
+
+from repro.apps.terasort import teragen, terasort
+from repro.core import ReadMode, TwoLevelStore, WriteMode
+
+MB = 2**20
+
+MODES = {
+    "hdfs-like (memory only)": (WriteMode.MEMORY_ONLY, ReadMode.MEMORY_ONLY, WriteMode.MEMORY_ONLY),
+    "orangefs (pfs bypass)": (WriteMode.PFS_BYPASS, ReadMode.PFS_BYPASS, WriteMode.PFS_BYPASS),
+    "two-level (tiered)": (WriteMode.WRITE_THROUGH, ReadMode.TIERED, WriteMode.WRITE_THROUGH),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--records", type=int, default=200_000)
+    args = ap.parse_args()
+
+    print(f"TeraSort, {args.records:,} records x 100 B = {args.records * 100 / MB:.0f} MiB\n")
+    print(f"{'storage':28s} {'gen(s)':>8s} {'map(s)':>8s} {'reduce(s)':>10s} {'hit rate':>9s}")
+    results = {}
+    for label, (wgen, rmap, wred) in MODES.items():
+        with tempfile.TemporaryDirectory() as d:
+            with TwoLevelStore(
+                os.path.join(d, "pfs"),
+                mem_capacity_bytes=256 * MB,
+                block_bytes=4 * MB,
+                stripe_bytes=1 * MB,
+            ) as st:
+                gen_s = teragen(st, args.records, n_shards=4, write_mode=wgen)
+                t = terasort(st, n_shards=4, n_reducers=4, read_mode=rmap, write_mode=wred, label=label)
+                results[label] = t
+                print(f"{label:28s} {gen_s:8.3f} {t.map_s:8.3f} {t.reduce_s:10.3f} {t.mem_hit_rate:9.2f}")
+
+    tls = results["two-level (tiered)"]
+    ofs = results["orangefs (pfs bypass)"]
+    print(f"\ntwo-level map phase vs orangefs: {ofs.map_s / tls.map_s:.2f}x "
+          f"(paper measured 4.2x at cluster scale; mapper reads hit the memory tier)")
+    print("output validated: globally ordered ✓")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""Data-analytics applications running on the two-level storage system."""
+
+from repro.apps.terasort import TeraSortTimings, teragen, terasort, teravalidate
+
+__all__ = ["TeraSortTimings", "teragen", "terasort", "teravalidate"]

@@ -1,0 +1,152 @@
+"""TeraSort on the two-level storage system (paper Section 5.3).
+
+A faithful miniature of the benchmark's I/O pattern:
+
+* **TeraGen** — map-only job writing random fixed-size records (10-byte
+  key + payload) as shard files through a chosen write mode.
+* **TeraSort** — mappers read shards (read-once), partition records by
+  sampled key splitters (the shuffle), reducers sort partitions and
+  write output shards (write-once).
+* **TeraValidate** — reads outputs and checks global key order.
+
+Phase wall-times + store tier stats are returned so the fig7 benchmark
+can compare HDFS-style (bypass-memory ~ local-disk-only), OrangeFS-style
+(PFS bypass) and two-level (tiered) storage on real moved bytes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.core.store import ReadMode, TwoLevelStore, WriteMode
+
+RECORD = 100  # bytes per record (TeraSort convention)
+KEY = 10  # leading key bytes
+
+
+@dataclasses.dataclass
+class TeraSortTimings:
+    label: str
+    gen_s: float
+    map_s: float
+    shuffle_s: float
+    reduce_s: float
+    validate_s: float
+    records: int
+    mem_hit_rate: float
+
+    @property
+    def sort_s(self) -> float:
+        return self.map_s + self.shuffle_s + self.reduce_s
+
+
+def _shard_name(i: int) -> str:
+    return f"terasort/in_{i:04d}"
+
+
+def _out_name(i: int) -> str:
+    return f"terasort/out_{i:04d}"
+
+
+def teragen(
+    store: TwoLevelStore,
+    n_records: int,
+    n_shards: int = 4,
+    write_mode: WriteMode | None = None,
+    seed: int = 0,
+) -> float:
+    """Generate and store the input; returns wall seconds."""
+    t0 = time.perf_counter()
+    per = n_records // n_shards
+    for i in range(n_shards):
+        rng = np.random.default_rng(seed + i)
+        data = rng.integers(0, 256, size=(per, RECORD), dtype=np.uint8)
+        store.put(_shard_name(i), data.tobytes(), mode=write_mode)
+    return time.perf_counter() - t0
+
+
+def terasort(
+    store: TwoLevelStore,
+    n_shards: int = 4,
+    n_reducers: int = 4,
+    read_mode: ReadMode | None = None,
+    write_mode: WriteMode | None = None,
+    label: str = "tls",
+) -> TeraSortTimings:
+    # --- map phase: read-once + partition by sampled splitters ------------
+    t0 = time.perf_counter()
+    shards = []
+    for i in range(n_shards):
+        raw = b"".join(store.get_buffered(_shard_name(i), mode=read_mode))
+        shards.append(np.frombuffer(raw, dtype=np.uint8).reshape(-1, RECORD))
+    # sample splitters from the first shard (Hadoop samples input splits)
+    sample = shards[0][:: max(1, len(shards[0]) // 1024), :KEY]
+    sample_keys = sample.astype(np.uint64) @ (256 ** np.arange(KEY - 1, -1, -1, dtype=np.uint64)) % (1 << 63)
+    splitters = np.quantile(sample_keys, np.linspace(0, 1, n_reducers + 1)[1:-1]).astype(np.uint64)
+    map_s = time.perf_counter() - t0
+
+    # --- shuffle: route records to reducers -------------------------------
+    t0 = time.perf_counter()
+    buckets: list[list[np.ndarray]] = [[] for _ in range(n_reducers)]
+    for shard in shards:
+        keys = shard[:, :KEY].astype(np.uint64) @ (
+            256 ** np.arange(KEY - 1, -1, -1, dtype=np.uint64)
+        ) % (1 << 63)
+        dest = np.searchsorted(splitters, keys, side="right")
+        for r in range(n_reducers):
+            buckets[r].append(shard[dest == r])
+    shuffle_s = time.perf_counter() - t0
+
+    # --- reduce: sort partitions + write-once ------------------------------
+    t0 = time.perf_counter()
+    n_total = 0
+    for r in range(n_reducers):
+        part = np.concatenate(buckets[r]) if buckets[r] else np.zeros((0, RECORD), np.uint8)
+        if len(part):
+            keys = part[:, :KEY].astype(np.uint64) @ (
+                256 ** np.arange(KEY - 1, -1, -1, dtype=np.uint64)
+            ) % (1 << 63)
+            part = part[np.argsort(keys, kind="stable")]
+        n_total += len(part)
+        store.put(_out_name(r), part.tobytes(), mode=write_mode)
+    reduce_s = time.perf_counter() - t0
+
+    # --- validate -----------------------------------------------------------
+    t0 = time.perf_counter()
+    ok = teravalidate(store, n_reducers)
+    validate_s = time.perf_counter() - t0
+    if not ok:
+        raise AssertionError("terasort output is not globally ordered")
+
+    return TeraSortTimings(
+        label=label,
+        gen_s=0.0,
+        map_s=map_s,
+        shuffle_s=shuffle_s,
+        reduce_s=reduce_s,
+        validate_s=validate_s,
+        records=n_total,
+        mem_hit_rate=store.stats.hit_rate(),
+    )
+
+
+def teravalidate(store: TwoLevelStore, n_reducers: int) -> bool:
+    """Global order: within-partition sorted AND partition maxima ordered."""
+    prev_max: np.uint64 | None = None
+    weights = 256 ** np.arange(KEY - 1, -1, -1, dtype=np.uint64)
+    for r in range(n_reducers):
+        raw = store.get(_out_name(r))
+        if not raw:
+            continue
+        part = np.frombuffer(raw, dtype=np.uint8).reshape(-1, RECORD)
+        keys = part[:, :KEY].astype(np.uint64) @ weights % (1 << 63)
+        if len(keys) > 1 and (np.diff(keys.astype(np.int64)) < 0).any():
+            return False
+        if prev_max is not None and len(keys) and keys[0] < prev_max:
+            return False
+        if len(keys):
+            prev_max = keys[-1]
+    return True

@@ -1,0 +1,61 @@
+"""Architecture registry: ``--arch <id>`` resolves here.
+
+Each module exports ``config()`` (exact published shape) and ``reduced()``
+(tiny same-family variant for CPU smoke tests).
+"""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import SHAPES, ArchConfig, ShapeCell, applicable_shapes
+
+ARCH_IDS = [
+    "deepseek_v3_671b",
+    "grok_1_314b",
+    "command_r_35b",
+    "starcoder2_3b",
+    "qwen3_8b",
+    "gemma3_1b",
+    "xlstm_125m",
+    "whisper_large_v3",
+    "internvl2_1b",
+    "recurrentgemma_9b",
+]
+
+_ALIASES = {i.replace("_", "-"): i for i in ARCH_IDS}
+
+
+def _module(arch: str):
+    arch = _ALIASES.get(arch, arch)
+    if arch not in ARCH_IDS:
+        raise KeyError(f"unknown arch {arch!r}; available: {sorted(ARCH_IDS + list(_ALIASES))}")
+    return importlib.import_module(f"repro.configs.{arch}")
+
+
+def get_config(arch: str) -> ArchConfig:
+    return _module(arch).config()
+
+
+def get_reduced(arch: str) -> ArchConfig:
+    return _module(arch).reduced()
+
+
+def make_model(cfg: ArchConfig):
+    """Instantiate the right model class for a config."""
+    from repro.models.encdec import EncDec
+    from repro.models.lm import LM
+
+    return EncDec(cfg) if cfg.encdec is not None else LM(cfg)
+
+
+__all__ = [
+    "ARCH_IDS",
+    "ArchConfig",
+    "SHAPES",
+    "ShapeCell",
+    "applicable_shapes",
+    "get_config",
+    "get_reduced",
+    "make_model",
+]

@@ -1,0 +1,36 @@
+"""Core of the paper reproduction: the two-level storage system.
+
+Public surface:
+
+* :mod:`repro.core.cluster`   — hardware calibrations (paper Table 2 / TPU).
+* :mod:`repro.core.iomodel`   — the analytic throughput models (Eqs. 1-7).
+* :mod:`repro.core.layout`    — block <-> stripe layout mapping (Fig. 3).
+* :mod:`repro.core.tiers`     — MemoryTier (Tachyon) / PFSTier (OrangeFS).
+* :mod:`repro.core.store`     — TwoLevelStore with the 3+3 I/O modes (Fig. 4).
+* :mod:`repro.core.simulator` — storage mountain + TeraSort phase models.
+"""
+
+from repro.core.cluster import ClusterSpec, paper_average_cluster, palmetto_cluster, tpu_v5e_pod
+from repro.core.layout import BlockLayout, StripeLayout, TwoLevelLayout, paper_layout
+from repro.core.store import EvictionPolicy, ReadMode, TwoLevelStore, WriteMode
+from repro.core.tiers import BlockNotFound, CapacityExceeded, IntegrityError, MemoryTier, PFSTier
+
+__all__ = [
+    "BlockLayout",
+    "BlockNotFound",
+    "CapacityExceeded",
+    "ClusterSpec",
+    "EvictionPolicy",
+    "IntegrityError",
+    "MemoryTier",
+    "PFSTier",
+    "ReadMode",
+    "StripeLayout",
+    "TwoLevelLayout",
+    "TwoLevelStore",
+    "WriteMode",
+    "paper_average_cluster",
+    "paper_layout",
+    "palmetto_cluster",
+    "tpu_v5e_pod",
+]

@@ -1,0 +1,397 @@
+"""TwoLevelStore — the paper's two-level storage system (Section 3).
+
+Faithful semantics:
+
+* Files are split into fixed-size logical blocks (fast-tier unit,
+  Section 3.1); each block persisted to the PFS tier is striped across
+  data-node servers (``PFSTier``/``StripeLayout``).
+* **Write modes** (Fig. 4 a-c): ``MEMORY_ONLY``, ``PFS_BYPASS``,
+  ``WRITE_THROUGH`` (synchronous dual write — the paper's prototype), plus
+  the beyond-paper ``ASYNC_WRITEBACK`` (bounded queue + background
+  flusher; the paper's prototype is synchronous-only, Section 3.2).
+* **Read modes** (Fig. 4 d-f): ``MEMORY_ONLY``, ``PFS_BYPASS``, ``TIERED``
+  — the priority 'nearest available copy first' policy: memory tier, then
+  PFS, promoting (caching) fetched blocks with LRU/LFU eviction.
+* Tuned I/O buffers: 1 MB app↔memory-tier requests, 4 MB memory↔PFS
+  transfers (Section 3.2 / 5.1) — ``PFSTier`` streams in 4 MB chunks and
+  ``get_buffered`` yields 1 MB app-side chunks.
+* Integrity: CRC32 per persisted stripe (PFSTier) + per-block CRC in the
+  store's block table, checked on every read.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+import queue
+import threading
+import zlib
+from collections import OrderedDict, defaultdict
+from typing import Iterator
+
+from repro.core.layout import BlockLayout
+from repro.core.tiers import BlockNotFound, CapacityExceeded, IntegrityError, MemoryTier, PFSTier
+
+
+class WriteMode(enum.Enum):
+    MEMORY_ONLY = "memory_only"  # Fig. 4 (a)
+    PFS_BYPASS = "pfs_bypass"  # Fig. 4 (b)
+    WRITE_THROUGH = "write_through"  # Fig. 4 (c) — paper's prototype default
+    ASYNC_WRITEBACK = "async_writeback"  # beyond-paper
+
+
+class ReadMode(enum.Enum):
+    MEMORY_ONLY = "memory_only"  # Fig. 4 (d)
+    PFS_BYPASS = "pfs_bypass"  # Fig. 4 (e)
+    TIERED = "tiered"  # Fig. 4 (f) — primary data-intensive pattern
+
+
+class EvictionPolicy(enum.Enum):
+    LRU = "lru"
+    LFU = "lfu"
+
+
+@dataclasses.dataclass
+class StoreStats:
+    mem_hits: int = 0
+    mem_misses: int = 0
+    promotions: int = 0
+    evictions: int = 0
+    async_flushes: int = 0
+    integrity_failures: int = 0
+
+    def hit_rate(self) -> float:
+        total = self.mem_hits + self.mem_misses
+        return self.mem_hits / total if total else 0.0
+
+
+@dataclasses.dataclass
+class _BlockMeta:
+    key: str  # "<file>:<index>"
+    length: int
+    crc: int
+    dirty: bool = False  # pending async write-back
+    freq: int = 0  # LFU counter
+
+
+@dataclasses.dataclass
+class _FileMeta:
+    size: int
+    n_blocks: int
+
+
+class FlushError(Exception):
+    """Raised from drain() if a background flush failed."""
+
+
+class TwoLevelStore:
+    """The integrated two-level storage system."""
+
+    def __init__(
+        self,
+        pfs_root: str,
+        mem_capacity_bytes: int = 1 << 30,
+        block_bytes: int = 4 * 2**20,
+        n_pfs_servers: int = 2,
+        stripe_bytes: int = 1 * 2**20,
+        write_mode: WriteMode = WriteMode.WRITE_THROUGH,
+        read_mode: ReadMode = ReadMode.TIERED,
+        eviction: EvictionPolicy = EvictionPolicy.LRU,
+        cache_on_read: bool = True,
+        app_buffer_bytes: int = 1 * 2**20,  # paper: 1 MB app<->Tachyon
+        pfs_buffer_bytes: int = 4 * 2**20,  # paper: 4 MB Tachyon<->OrangeFS
+        async_queue_depth: int = 64,
+        fsync: bool = False,
+    ) -> None:
+        self.layout = BlockLayout(block_bytes)
+        self.mem = MemoryTier(mem_capacity_bytes)
+        self.pfs = PFSTier(
+            pfs_root,
+            n_servers=n_pfs_servers,
+            stripe_bytes=stripe_bytes,
+            io_buffer_bytes=pfs_buffer_bytes,
+            fsync=fsync,
+        )
+        self.write_mode = write_mode
+        self.read_mode = read_mode
+        self.eviction = eviction
+        self.cache_on_read = cache_on_read
+        self.app_buffer_bytes = app_buffer_bytes
+        self.stats = StoreStats()
+
+        self._lock = threading.RLock()
+        self._files: dict[str, _FileMeta] = {}
+        self._blocks: OrderedDict[str, _BlockMeta] = OrderedDict()  # LRU order
+        self._dirty: set[str] = set()
+
+        self._flush_q: queue.Queue[str | None] = queue.Queue(maxsize=async_queue_depth)
+        self._flush_errors: list[Exception] = []
+        self._flusher = threading.Thread(target=self._flush_loop, daemon=True, name="tls-flusher")
+        self._flusher.start()
+        self._closed = False
+
+    # ------------------------------------------------------------------ util
+
+    @staticmethod
+    def _bkey(name: str, idx: int) -> str:
+        return f"{name}:{idx:06d}"
+
+    def _touch(self, meta: _BlockMeta) -> None:
+        meta.freq += 1
+        self._blocks.move_to_end(meta.key)
+
+    # --------------------------------------------------------------- eviction
+
+    def _evict_until(self, need_bytes: int) -> None:
+        """Evict clean cached blocks until ``need_bytes`` fit in the memory tier.
+
+        Dirty blocks (pending async write-back) are flushed synchronously
+        before eviction — durability is never sacrificed to make room.
+        """
+        while self.mem.free_bytes < need_bytes:
+            victim = self._pick_victim()
+            if victim is None:
+                raise CapacityExceeded(
+                    f"cannot make room for {need_bytes} bytes "
+                    f"(capacity {self.mem.capacity_bytes}, used {self.mem.used_bytes})"
+                )
+            meta = self._blocks[victim]
+            if meta.dirty:
+                self._flush_block(victim)
+            self.mem.delete(victim)
+            del self._blocks[victim]
+            self.stats.evictions += 1
+
+    def _pick_victim(self) -> str | None:
+        candidates = [k for k in self._blocks if self.mem.contains(k)]
+        if not candidates:
+            return None
+        if self.eviction is EvictionPolicy.LRU:
+            return candidates[0]  # OrderedDict front = least recently used
+        return min(candidates, key=lambda k: (self._blocks[k].freq, k))
+
+    # ------------------------------------------------------------ write path
+
+    def put(self, name: str, data: bytes, mode: WriteMode | None = None) -> None:
+        """Write a whole logical file through the configured write mode."""
+        mode = mode or self.write_mode
+        if self._closed:
+            raise RuntimeError("store is closed")
+        with self._lock:
+            if name in self._files:
+                self.delete(name)
+            self._files[name] = _FileMeta(size=len(data), n_blocks=self.layout.n_blocks(len(data)))
+            for block in self.layout.blocks(len(data)):
+                chunk = data[block.offset : block.end]
+                bkey = self._bkey(name, block.index)
+                meta = _BlockMeta(key=bkey, length=len(chunk), crc=zlib.crc32(chunk))
+                if mode is WriteMode.PFS_BYPASS:
+                    self.pfs.put(bkey, chunk)
+                elif mode is WriteMode.MEMORY_ONLY:
+                    self._cache_block(meta, chunk)
+                elif mode is WriteMode.WRITE_THROUGH:
+                    # Paper mode (c): synchronous dual write.
+                    self._cache_block(meta, chunk)
+                    self.pfs.put(bkey, chunk)
+                elif mode is WriteMode.ASYNC_WRITEBACK:
+                    meta.dirty = True
+                    self._cache_block(meta, chunk)
+                    self._dirty.add(bkey)
+                    self._flush_q.put(bkey)  # blocks when queue is full (bounded)
+                self._blocks.setdefault(bkey, meta)
+                self._blocks[bkey] = meta
+                self._blocks.move_to_end(bkey)
+
+    def _cache_block(self, meta: _BlockMeta, chunk: bytes) -> None:
+        self._evict_until(len(chunk))
+        self.mem.put(meta.key, chunk)
+
+    # -------------------------------------------------------- async flushing
+
+    def _flush_loop(self) -> None:
+        while True:
+            bkey = self._flush_q.get()
+            if bkey is None:
+                self._flush_q.task_done()
+                return
+            try:
+                with self._lock:
+                    if bkey in self._dirty:
+                        self._flush_block(bkey)
+            except Exception as exc:  # pragma: no cover - defensive
+                self._flush_errors.append(exc)
+            finally:
+                self._flush_q.task_done()
+
+    def _flush_block(self, bkey: str) -> None:
+        """Write one dirty block down to the PFS tier (caller holds lock)."""
+        meta = self._blocks.get(bkey)
+        if meta is None or not meta.dirty:
+            self._dirty.discard(bkey)
+            return
+        data = self.mem.get(bkey, 0, meta.length)
+        self.pfs.put(bkey, data)
+        meta.dirty = False
+        self._dirty.discard(bkey)
+        self.stats.async_flushes += 1
+
+    def drain(self) -> None:
+        """Durability barrier: block until every dirty block is on the PFS tier."""
+        self._flush_q.join()
+        with self._lock:
+            for bkey in list(self._dirty):
+                self._flush_block(bkey)
+        if self._flush_errors:
+            errs, self._flush_errors = self._flush_errors, []
+            raise FlushError(f"{len(errs)} background flushes failed: {errs[0]!r}") from errs[0]
+
+    # ------------------------------------------------------------- read path
+
+    def get(self, name: str, mode: ReadMode | None = None) -> bytes:
+        """Read a whole logical file through the configured read mode."""
+        mode = mode or self.read_mode
+        with self._lock:
+            fmeta = self._files.get(name)
+        if fmeta is None:
+            # File may exist only on the PFS tier (e.g. restart after losing RAM).
+            return self._get_cold(name, mode)
+        return b"".join(self._read_block(name, i, mode) for i in range(fmeta.n_blocks))
+
+    def get_buffered(self, name: str, mode: ReadMode | None = None) -> Iterator[bytes]:
+        """Stream a file in app-side buffer chunks (paper's 1 MB requests)."""
+        data = self.get(name, mode)
+        for off in range(0, len(data), self.app_buffer_bytes):
+            yield data[off : off + self.app_buffer_bytes]
+
+    def _read_block(self, name: str, idx: int, mode: ReadMode) -> bytes:
+        bkey = self._bkey(name, idx)
+        with self._lock:
+            meta = self._blocks.get(bkey)
+            if mode is not ReadMode.PFS_BYPASS and self.mem.contains(bkey):
+                # Priority read policy: nearest copy (local memory tier) first.
+                self.stats.mem_hits += 1
+                if meta:
+                    self._touch(meta)
+                data = self.mem.get(bkey)
+                if meta and zlib.crc32(data) != meta.crc:
+                    self.stats.integrity_failures += 1
+                    raise IntegrityError(f"memory-tier CRC mismatch for {bkey}")
+                return data
+            if mode is ReadMode.MEMORY_ONLY:
+                raise BlockNotFound(bkey)
+            self.stats.mem_misses += 1
+            data = self.pfs.get(bkey)
+            if meta and zlib.crc32(data) != meta.crc:
+                self.stats.integrity_failures += 1
+                raise IntegrityError(f"PFS CRC mismatch for {bkey}")
+            if mode is ReadMode.TIERED and self.cache_on_read:
+                try:
+                    new_meta = meta or _BlockMeta(key=bkey, length=len(data), crc=zlib.crc32(data))
+                    self._cache_block(new_meta, data)
+                    self._blocks[bkey] = new_meta
+                    self._blocks.move_to_end(bkey)
+                    self.stats.promotions += 1
+                except CapacityExceeded:
+                    pass  # larger-than-cache block: serve without promoting
+            return data
+
+    def _get_cold(self, name: str, mode: ReadMode) -> bytes:
+        """Reassemble a file known only to the PFS tier (post-restart path)."""
+        if mode is ReadMode.MEMORY_ONLY:
+            raise BlockNotFound(name)
+        parts = []
+        idx = 0
+        while True:
+            bkey = self._bkey(name, idx)
+            if not self.pfs.contains(bkey):
+                break
+            parts.append(self.pfs.get(bkey))
+            idx += 1
+        if not parts:
+            raise BlockNotFound(name)
+        data = b"".join(parts)
+        with self._lock:
+            self._files[name] = _FileMeta(size=len(data), n_blocks=idx)
+            for block in self.layout.blocks(len(data)):
+                bkey = self._bkey(name, block.index)
+                chunk = data[block.offset : block.end]
+                self._blocks.setdefault(
+                    bkey, _BlockMeta(key=bkey, length=len(chunk), crc=zlib.crc32(chunk))
+                )
+        return data
+
+    # ---------------------------------------------------------------- manage
+
+    def exists(self, name: str) -> bool:
+        with self._lock:
+            if name in self._files:
+                return True
+        return self.pfs.contains(self._bkey(name, 0))
+
+    def file_size(self, name: str) -> int:
+        with self._lock:
+            if name in self._files:
+                return self._files[name].size
+        return len(self._get_cold(name, ReadMode.PFS_BYPASS))
+
+    def delete(self, name: str) -> bool:
+        with self._lock:
+            fmeta = self._files.pop(name, None)
+            found = fmeta is not None
+            idx = 0
+            while True:
+                bkey = self._bkey(name, idx)
+                in_mem = self.mem.delete(bkey)
+                in_pfs = self.pfs.delete(bkey)
+                self._blocks.pop(bkey, None)
+                self._dirty.discard(bkey)
+                if not (in_mem or in_pfs):
+                    if fmeta is None or idx >= fmeta.n_blocks:
+                        break
+                else:
+                    found = True
+                idx += 1
+            return found
+
+    def resident_fraction(self, name: str | None = None) -> float:
+        """The paper's ``f``: fraction of bytes resident in the memory tier."""
+        with self._lock:
+            total = hot = 0
+            for bkey, meta in self._blocks.items():
+                if name is not None and not bkey.startswith(name + ":"):
+                    continue
+                total += meta.length
+                if self.mem.contains(bkey):
+                    hot += meta.length
+        return hot / total if total else 0.0
+
+    def list_files(self) -> list[str]:
+        with self._lock:
+            names = set(self._files)
+        for key in self.pfs.keys():
+            names.add(key.rsplit(":", 1)[0])
+        return sorted(names)
+
+    def server_load(self) -> dict[int, int]:
+        return self.pfs.server_bytes()
+
+    def tier_stats(self) -> dict[str, dict]:
+        return {
+            "mem": dataclasses.asdict(self.mem.stats),
+            "pfs": dataclasses.asdict(self.pfs.stats),
+            "store": dataclasses.asdict(self.stats),
+        }
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        self.drain()
+        self._closed = True
+        self._flush_q.put(None)
+        self._flusher.join(timeout=10)
+
+    def __enter__(self) -> "TwoLevelStore":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -1,0 +1,311 @@
+"""Storage tiers: a per-host in-memory block store and a striped PFS tier.
+
+``MemoryTier`` is the Tachyon analogue — a capacity-bounded, thread-safe,
+in-RAM block store local to a compute host.  ``PFSTier`` is the OrangeFS
+analogue — server-striped files on a shared directory tree (one
+subdirectory per data-node server), with per-stripe CRC checksums standing
+in for the data-node-internal erasure coding (DESIGN.md §6).
+
+Both tiers move *real bytes* and keep a ``TierStats`` ledger (bytes, ops,
+wall seconds) so benchmarks can report measured throughput alongside the
+analytic model's prediction.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import threading
+import time
+import zlib
+from typing import Iterator
+
+
+class TierError(Exception):
+    pass
+
+
+class BlockNotFound(TierError, KeyError):
+    pass
+
+
+class CapacityExceeded(TierError):
+    pass
+
+
+class IntegrityError(TierError):
+    pass
+
+
+@dataclasses.dataclass
+class TierStats:
+    bytes_read: int = 0
+    bytes_written: int = 0
+    read_ops: int = 0
+    write_ops: int = 0
+    read_seconds: float = 0.0
+    write_seconds: float = 0.0
+
+    def record_read(self, nbytes: int, seconds: float) -> None:
+        self.bytes_read += nbytes
+        self.read_ops += 1
+        self.read_seconds += seconds
+
+    def record_write(self, nbytes: int, seconds: float) -> None:
+        self.bytes_written += nbytes
+        self.write_ops += 1
+        self.write_seconds += seconds
+
+    def read_mbps(self) -> float:
+        return self.bytes_read / 2**20 / self.read_seconds if self.read_seconds else 0.0
+
+    def write_mbps(self) -> float:
+        return self.bytes_written / 2**20 / self.write_seconds if self.write_seconds else 0.0
+
+
+class MemoryTier:
+    """Capacity-bounded in-memory block store (the Tachyon tier).
+
+    Keys are opaque strings (``"<file>:<block_index>"`` at the store layer).
+    Eviction *policy* lives in the store; the tier only enforces capacity
+    and exposes usage.
+    """
+
+    def __init__(self, capacity_bytes: int) -> None:
+        if capacity_bytes <= 0:
+            raise ValueError("capacity must be positive")
+        self.capacity_bytes = capacity_bytes
+        self._data: dict[str, bytes] = {}
+        self._used = 0
+        self._lock = threading.RLock()
+        self.stats = TierStats()
+
+    # -- core ops -----------------------------------------------------------
+
+    def put(self, key: str, data: bytes) -> None:
+        t0 = time.perf_counter()
+        with self._lock:
+            old = len(self._data.get(key, b""))
+            new_used = self._used - old + len(data)
+            if new_used > self.capacity_bytes:
+                raise CapacityExceeded(
+                    f"memory tier full: {new_used}/{self.capacity_bytes} bytes for {key!r}"
+                )
+            self._data[key] = bytes(data)
+            self._used = new_used
+        self.stats.record_write(len(data), time.perf_counter() - t0)
+
+    def get(self, key: str, offset: int = 0, length: int | None = None) -> bytes:
+        t0 = time.perf_counter()
+        with self._lock:
+            try:
+                blob = self._data[key]
+            except KeyError:
+                raise BlockNotFound(key) from None
+            out = blob[offset:] if length is None else blob[offset : offset + length]
+        self.stats.record_read(len(out), time.perf_counter() - t0)
+        return out
+
+    def delete(self, key: str) -> bool:
+        with self._lock:
+            blob = self._data.pop(key, None)
+            if blob is None:
+                return False
+            self._used -= len(blob)
+            return True
+
+    def contains(self, key: str) -> bool:
+        with self._lock:
+            return key in self._data
+
+    def size_of(self, key: str) -> int:
+        with self._lock:
+            try:
+                return len(self._data[key])
+            except KeyError:
+                raise BlockNotFound(key) from None
+
+    def keys(self) -> list[str]:
+        with self._lock:
+            return list(self._data)
+
+    @property
+    def used_bytes(self) -> int:
+        with self._lock:
+            return self._used
+
+    @property
+    def free_bytes(self) -> int:
+        with self._lock:
+            return self.capacity_bytes - self._used
+
+    def clear(self) -> None:
+        with self._lock:
+            self._data.clear()
+            self._used = 0
+
+
+class PFSTier:
+    """Striped persistent tier (the OrangeFS analogue).
+
+    Each logical block key maps to stripe-unit files laid out round-robin
+    across ``n_servers`` server directories::
+
+        root/server_00/<key>.s0000   root/server_01/<key>.s0001  ...
+
+    Every stripe unit carries a CRC32 recorded in a sidecar manifest,
+    validated on read (stand-in for intra-data-node erasure coding).
+    Reads/writes stream through ``io_buffer_bytes`` chunks — the paper's
+    4 MB Tachyon↔OrangeFS buffer.
+    """
+
+    MANIFEST_SUFFIX = ".crc"
+
+    def __init__(
+        self,
+        root: str,
+        n_servers: int = 2,
+        stripe_bytes: int = 64 * 2**20,
+        io_buffer_bytes: int = 4 * 2**20,
+        fsync: bool = False,
+    ) -> None:
+        if n_servers <= 0 or stripe_bytes <= 0 or io_buffer_bytes <= 0:
+            raise ValueError("n_servers, stripe_bytes, io_buffer_bytes must be positive")
+        self.root = root
+        self.n_servers = n_servers
+        self.stripe_bytes = stripe_bytes
+        self.io_buffer_bytes = io_buffer_bytes
+        self.fsync = fsync
+        self._lock = threading.RLock()
+        self.stats = TierStats()
+        for s in range(n_servers):
+            os.makedirs(self._server_dir(s), exist_ok=True)
+
+    # -- path helpers ---------------------------------------------------------
+
+    def _server_dir(self, server: int) -> str:
+        return os.path.join(self.root, f"server_{server:02d}")
+
+    @staticmethod
+    def _safe(key: str) -> str:
+        # Keys must not organically contain "@" or "__" (store-generated keys
+        # use "<name>:<block>"); _unsafe inverts this for keys().
+        return key.replace(os.sep, "__").replace(":", "@")
+
+    @staticmethod
+    def _unsafe(name: str) -> str:
+        return name.replace("@", ":").replace("__", os.sep)
+
+    def _stripe_path(self, key: str, unit: int) -> str:
+        server = unit % self.n_servers
+        return os.path.join(self._server_dir(server), f"{self._safe(key)}.s{unit:04d}")
+
+    def _manifest_path(self, key: str) -> str:
+        return os.path.join(self._server_dir(0), self._safe(key) + self.MANIFEST_SUFFIX)
+
+    def _iter_units(self, total: int) -> Iterator[tuple[int, int, int]]:
+        """Yield (unit_index, offset, length) stripe units covering ``total``."""
+        unit = 0
+        off = 0
+        while off < total:
+            ln = min(self.stripe_bytes, total - off)
+            yield unit, off, ln
+            unit += 1
+            off += ln
+
+    # -- core ops -------------------------------------------------------------
+
+    def put(self, key: str, data: bytes) -> None:
+        t0 = time.perf_counter()
+        crcs: list[int] = []
+        with self._lock:
+            for unit, off, ln in self._iter_units(len(data)):
+                chunk = data[off : off + ln]
+                crcs.append(zlib.crc32(chunk))
+                path = self._stripe_path(key, unit)
+                with open(path, "wb") as fh:
+                    for b0 in range(0, ln, self.io_buffer_bytes):
+                        fh.write(chunk[b0 : b0 + self.io_buffer_bytes])
+                    if self.fsync:
+                        fh.flush()
+                        os.fsync(fh.fileno())
+            manifest = f"{len(data)}\n" + "\n".join(f"{c:08x}" for c in crcs) + "\n"
+            with open(self._manifest_path(key), "w") as fh:
+                fh.write(manifest)
+                if self.fsync:
+                    fh.flush()
+                    os.fsync(fh.fileno())
+        self.stats.record_write(len(data), time.perf_counter() - t0)
+
+    def _read_manifest(self, key: str) -> tuple[int, list[int]]:
+        try:
+            with open(self._manifest_path(key)) as fh:
+                lines = fh.read().splitlines()
+        except FileNotFoundError:
+            raise BlockNotFound(key) from None
+        return int(lines[0]), [int(x, 16) for x in lines[1:] if x]
+
+    def get(self, key: str, offset: int = 0, length: int | None = None) -> bytes:
+        t0 = time.perf_counter()
+        with self._lock:
+            total, crcs = self._read_manifest(key)
+            end = total if length is None else min(total, offset + length)
+            parts: list[bytes] = []
+            for unit, uoff, uln in self._iter_units(total):
+                if uoff + uln <= offset or uoff >= end:
+                    continue
+                path = self._stripe_path(key, unit)
+                try:
+                    with open(path, "rb") as fh:
+                        chunk = b"".join(iter(lambda f=fh: f.read(self.io_buffer_bytes), b""))
+                except FileNotFoundError:
+                    raise IntegrityError(f"missing stripe unit {unit} of {key!r}") from None
+                if zlib.crc32(chunk) != crcs[unit]:
+                    raise IntegrityError(f"CRC mismatch on stripe unit {unit} of {key!r}")
+                lo = max(offset - uoff, 0)
+                hi = min(end - uoff, uln)
+                parts.append(chunk[lo:hi])
+            out = b"".join(parts)
+        self.stats.record_read(len(out), time.perf_counter() - t0)
+        return out
+
+    def delete(self, key: str) -> bool:
+        with self._lock:
+            try:
+                total, _ = self._read_manifest(key)
+            except BlockNotFound:
+                return False
+            for unit, _, _ in self._iter_units(total):
+                try:
+                    os.remove(self._stripe_path(key, unit))
+                except FileNotFoundError:
+                    pass
+            os.remove(self._manifest_path(key))
+            return True
+
+    def contains(self, key: str) -> bool:
+        return os.path.exists(self._manifest_path(key))
+
+    def size_of(self, key: str) -> int:
+        total, _ = self._read_manifest(key)
+        return total
+
+    def keys(self) -> list[str]:
+        with self._lock:
+            out = []
+            for name in os.listdir(self._server_dir(0)):
+                if name.endswith(self.MANIFEST_SUFFIX):
+                    out.append(self._unsafe(name[: -len(self.MANIFEST_SUFFIX)]))
+            return out
+
+    def server_bytes(self) -> dict[int, int]:
+        """On-disk bytes per server directory (load-balance check)."""
+        out = {}
+        for s in range(self.n_servers):
+            d = self._server_dir(s)
+            out[s] = sum(
+                os.path.getsize(os.path.join(d, f))
+                for f in os.listdir(d)
+                if not f.endswith(self.MANIFEST_SUFFIX)
+            )
+        return out

@@ -1,0 +1,5 @@
+"""Training-data pipeline riding the two-level storage system."""
+
+from repro.data.pipeline import PipelineState, ShardedLoader, SyntheticCorpus
+
+__all__ = ["PipelineState", "ShardedLoader", "SyntheticCorpus"]

@@ -1,0 +1,264 @@
+"""Sharded, prefetching, resumable token pipeline over the TwoLevelStore.
+
+Design (mirrors the paper's Hadoop-on-TLS data path, DESIGN.md §2):
+
+* The corpus is materialized as shard files in the store.  Hot shards live
+  in the memory tier; every shard is persisted on the PFS tier
+  (write-through), so any host can lose its cache and re-read (read mode f).
+* Locality scheduling: shard ``s`` is owned by host ``s % n_hosts`` — the
+  analogue of Hadoop scheduling maps onto the node holding the block, so
+  most reads hit the local memory tier (the paper's high ridge).
+* The loader is **deterministic and resumable**: ``state()`` returns an
+  exact cursor that ``restore()`` resumes from — required by the
+  checkpoint/restart story (EXPERIMENTS.md failure-injection test).
+* A background prefetch thread keeps ``prefetch_depth`` batches staged,
+  overlapping PFS reads with compute (the paper's Tachyon↔OrangeFS 4 MB
+  buffered transfers happen inside the store).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+
+import numpy as np
+
+from repro.core.store import ReadMode, TwoLevelStore, WriteMode
+
+
+class SyntheticCorpus:
+    """Deterministic synthetic token corpus, materialized into a store.
+
+    Shard ``i`` is an ``int32`` token array generated from ``seed + i`` —
+    reproducible across runs/hosts without shipping a dataset.
+    """
+
+    def __init__(
+        self,
+        store: TwoLevelStore,
+        vocab_size: int,
+        n_shards: int = 8,
+        tokens_per_shard: int = 1 << 16,
+        seed: int = 0,
+        prefix: str = "corpus/shard",
+    ) -> None:
+        self.store = store
+        self.vocab_size = vocab_size
+        self.n_shards = n_shards
+        self.tokens_per_shard = tokens_per_shard
+        self.seed = seed
+        self.prefix = prefix
+
+    def shard_name(self, i: int) -> str:
+        return f"{self.prefix}_{i:05d}"
+
+    def generate(self, write_mode: WriteMode | None = None) -> None:
+        """Materialize every shard into the store (idempotent)."""
+        for i in range(self.n_shards):
+            name = self.shard_name(i)
+            if self.store.exists(name):
+                continue
+            rng = np.random.default_rng(self.seed + i)
+            toks = rng.integers(0, self.vocab_size, size=self.tokens_per_shard, dtype=np.int32)
+            self.store.put(name, toks.tobytes(), mode=write_mode)
+
+    def read_shard(self, i: int, mode: ReadMode | None = None) -> np.ndarray:
+        raw = self.store.get(self.shard_name(i), mode=mode)
+        return np.frombuffer(raw, dtype=np.int32)
+
+
+@dataclasses.dataclass
+class PipelineState:
+    """Exact cursor for deterministic resume."""
+
+    epoch: int = 0
+    step: int = 0  # batches already emitted
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "PipelineState":
+        return cls(**d)
+
+
+class ShardedLoader:
+    """Yields ``(inputs, labels)`` batches for one host of a data-parallel job.
+
+    The *global* batch is ``global_batch`` sequences; this host materializes
+    rows ``[host_id::n_hosts]`` of it (``global_batch % n_hosts == 0``).
+    Token stream order is a pure function of (seed, epoch, step), so any
+    host — or a restarted replacement host — reconstructs its slice exactly.
+    """
+
+    def __init__(
+        self,
+        corpus: SyntheticCorpus,
+        global_batch: int,
+        seq_len: int,
+        host_id: int = 0,
+        n_hosts: int = 1,
+        prefetch_depth: int = 2,
+        state: PipelineState | None = None,
+    ) -> None:
+        if global_batch % n_hosts:
+            raise ValueError(f"global_batch={global_batch} not divisible by n_hosts={n_hosts}")
+        self.corpus = corpus
+        self.global_batch = global_batch
+        self.local_batch = global_batch // n_hosts
+        self.seq_len = seq_len
+        self.host_id = host_id
+        self.n_hosts = n_hosts
+        self._state = state or PipelineState()
+        self.prefetch_depth = prefetch_depth
+        self._q: queue.Queue = queue.Queue(maxsize=max(1, prefetch_depth))
+        self._worker: threading.Thread | None = None
+        self._stop = threading.Event()
+
+        total_tokens = corpus.n_shards * corpus.tokens_per_shard
+        self.tokens_per_global_batch = global_batch * (seq_len + 1)
+        self.steps_per_epoch = total_tokens // self.tokens_per_global_batch
+        if self.steps_per_epoch == 0:
+            raise ValueError(
+                f"corpus too small: {total_tokens} tokens < one global batch "
+                f"({self.tokens_per_global_batch})"
+            )
+
+    # ------------------------------------------------------------- sampling
+
+    def _batch_at(self, epoch: int, step: int) -> tuple[np.ndarray, np.ndarray]:
+        """Deterministic batch materialization for this host's slice."""
+        span = self.seq_len + 1
+        total_tokens = self.corpus.n_shards * self.corpus.tokens_per_shard
+        # Epoch-level deterministic permutation of sequence windows.
+        n_windows = total_tokens // span
+        rng = np.random.default_rng((self.corpus.seed << 16) ^ epoch)
+        perm = rng.permutation(n_windows)
+        rows = []
+        for b in range(self.local_batch):
+            gidx = step * self.global_batch + self.host_id * self.local_batch + b
+            w = int(perm[gidx % n_windows])
+            start = w * span
+            rows.append(self._read_span(start, span))
+        arr = np.stack(rows)
+        return arr[:, :-1], arr[:, 1:]
+
+    def _read_span(self, start: int, length: int) -> np.ndarray:
+        """Read [start, start+length) tokens across shard boundaries."""
+        tps = self.corpus.tokens_per_shard
+        out = np.empty(length, dtype=np.int32)
+        filled = 0
+        while filled < length:
+            shard, off = divmod(start + filled, tps)
+            take = min(length - filled, tps - off)
+            toks = self.corpus.read_shard(shard % self.corpus.n_shards)
+            out[filled : filled + take] = toks[off : off + take]
+            filled += take
+        return out
+
+    # ------------------------------------------------------------- iterator
+
+    def __iter__(self):
+        return self
+
+    def __next__(self) -> tuple[np.ndarray, np.ndarray]:
+        if self._worker is None and self.prefetch_depth > 0:
+            self._start_worker()
+        if self.prefetch_depth > 0:
+            item = self._q.get()
+            if isinstance(item, Exception):
+                raise item
+            return item
+        return self._produce()
+
+    def _produce(self) -> tuple[np.ndarray, np.ndarray]:
+        st = self._state
+        batch = self._batch_at(st.epoch, st.step)
+        st.step += 1
+        if st.step >= self.steps_per_epoch:
+            st.epoch += 1
+            st.step = 0
+        return batch
+
+    def _start_worker(self) -> None:
+        def run() -> None:
+            while not self._stop.is_set():
+                try:
+                    item = self._produce()
+                except Exception as exc:  # propagate into consumer
+                    self._q.put(exc)
+                    return
+                self._q.put(item)
+
+        self._worker = threading.Thread(target=run, daemon=True, name="loader-prefetch")
+        self._worker.start()
+
+    def close(self) -> None:
+        self._stop.set()
+        if self._worker is not None:
+            while self._worker.is_alive():
+                try:
+                    self._q.get(timeout=0.05)
+                except queue.Empty:
+                    pass
+                self._worker.join(timeout=0.05)
+            self._worker = None
+
+    # ----------------------------------------------------------- resumption
+
+    def state(self) -> PipelineState:
+        """Cursor of the *next* batch to be produced.
+
+        Note: with prefetching, batches already queued are counted as
+        consumed only once handed to the caller — callers must snapshot
+        state at a step boundary (the train loop does so after draining
+        the queue via ``sync()``).
+        """
+        return PipelineState(**dataclasses.asdict(self._state))
+
+    def sync(self) -> PipelineState:
+        """Stop prefetch, drop staged batches, return the exact cursor.
+
+        Used right before checkpointing: the returned state resumes from
+        the first batch the training loop has *not* received. Staged but
+        unconsumed batches are rewound.
+        """
+        if self._worker is not None:
+            self._stop.set()
+            rewound = 0
+            # Drain until the worker is dead: it may be blocked on a full
+            # queue mid-put; every drained item is a produced-but-unconsumed
+            # batch that must be rewound.
+            while self._worker.is_alive():
+                try:
+                    item = self._q.get(timeout=0.05)
+                    if not isinstance(item, Exception):
+                        rewound += 1
+                except queue.Empty:
+                    pass
+                self._worker.join(timeout=0.05)
+            try:
+                while True:
+                    item = self._q.get_nowait()
+                    if not isinstance(item, Exception):
+                        rewound += 1
+            except queue.Empty:
+                pass
+            self._worker = None
+            self._stop = threading.Event()
+            for _ in range(rewound):
+                self._rewind_one()
+        return self.state()
+
+    def _rewind_one(self) -> None:
+        st = self._state
+        if st.step == 0:
+            st.epoch -= 1
+            st.step = self.steps_per_epoch - 1
+        else:
+            st.step -= 1
+
+    def restore(self, state: PipelineState) -> None:
+        self.sync()
+        self._state = PipelineState(**dataclasses.asdict(state))

@@ -1,0 +1,28 @@
+"""Pallas TPU kernels for the compute hot-spots, with pure-jnp oracles.
+
+Layout per kernel family:
+    <name>.py  — pl.pallas_call + explicit BlockSpec VMEM tiling
+    ops.py     — jit'd public wrappers (dispatch kernel vs. xla path)
+    ref.py     — pure-jnp oracles the tests assert against
+
+Kernels:
+    flash_attention         train/prefill attention (causal, GQA, window)
+    rglru                   blocked gated-linear-recurrence scan
+    mlstm                   chunkwise-parallel mLSTM (matrix memory)
+    tiered_decode_attention two-level (hot VMEM / cold HBM) decode attention
+                            — the paper's two-tier read path in kernel form
+"""
+
+from repro.kernels.ops import (
+    flash_attention,
+    mlstm_chunkwise,
+    rglru_scan_op,
+    tiered_decode_attention,
+)
+
+__all__ = [
+    "flash_attention",
+    "mlstm_chunkwise",
+    "rglru_scan_op",
+    "tiered_decode_attention",
+]

@@ -1,0 +1,92 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Each op auto-selects ``interpret=True`` off-TPU (this container is
+CPU-only; the kernels execute their bodies in the Pallas interpreter for
+correctness validation) and compiles natively on a TPU backend.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention_fwd
+from repro.kernels.mlstm import mlstm_chunkwise_fwd
+from repro.kernels.rglru import rglru_scan_fwd
+from repro.kernels.tiered_decode import tiered_decode_attention_fwd
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "logit_softcap", "block_q", "block_k", "interpret")
+)
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    causal: bool = True,
+    window: int = 0,
+    logit_softcap: float = 0.0,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Tiled attention. q: (B,H,S,D); k,v: (B,KV,T,D) -> (B,H,S,D)."""
+    interpret = _interpret_default() if interpret is None else interpret
+    return flash_attention_fwd(
+        q, k, v, causal=causal, window=window, logit_softcap=logit_softcap,
+        block_q=block_q, block_k=block_k, interpret=interpret,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "block_w", "interpret"))
+def rglru_scan_op(
+    a: jax.Array,
+    x: jax.Array,
+    block_s: int = 256,
+    block_w: int = 512,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """h_t = a_t h_{t-1} + x_t over axis 1. a, x: (B,S,W) -> (B,S,W)."""
+    interpret = _interpret_default() if interpret is None else interpret
+    return rglru_scan_fwd(a, x, block_s=block_s, block_w=block_w, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def mlstm_chunkwise(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    i_pre: jax.Array,
+    f_log: jax.Array,
+    chunk: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Chunkwise mLSTM. q,k,v: (B,H,S,D); gates: (B,H,S) -> (B,H,S,D)."""
+    interpret = _interpret_default() if interpret is None else interpret
+    return mlstm_chunkwise_fwd(q, k, v, i_pre, f_log, chunk=chunk, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("hot_len", "cold_len", "block_k", "interpret"))
+def tiered_decode_attention(
+    q: jax.Array,
+    hot_k: jax.Array,
+    hot_v: jax.Array,
+    cold_k: jax.Array,
+    cold_v: jax.Array,
+    hot_len: int,
+    cold_len: int,
+    block_k: int = 512,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Two-tier decode attention; key order [cold ; hot] (DESIGN.md L3)."""
+    interpret = _interpret_default() if interpret is None else interpret
+    return tiered_decode_attention_fwd(
+        q, hot_k, hot_v, cold_k, cold_v, hot_len=hot_len, cold_len=cold_len,
+        block_k=block_k, interpret=interpret,
+    )

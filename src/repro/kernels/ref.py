@@ -1,0 +1,118 @@
+"""Pure-jnp oracles for every kernel (the correctness ground truth).
+
+Shapes follow the kernel conventions:
+    attention   q: (B, H, S, D);  k, v: (B, KV, T, D)   (head-major)
+    rglru       a, x: (B, S, W) -> h: (B, S, W)
+    mlstm       q, k, v: (B, H, S, D); i, f pre-acts: (B, H, S)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    causal: bool = True,
+    window: int = 0,
+    logit_softcap: float = 0.0,
+) -> jax.Array:
+    """Reference attention. GQA via KV-head broadcast. fp32 softmax."""
+    b, h, s, d = q.shape
+    kv = k.shape[1]
+    g = h // kv
+    qg = q.reshape(b, kv, g, s, d)
+    scores = jnp.einsum("bkgsd,bktd->bkgst", qg, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    if logit_softcap > 0:
+        scores = logit_softcap * jnp.tanh(scores / logit_softcap)
+    t = k.shape[2]
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(t)[None, :]
+    mask = jnp.ones((s, t), bool)
+    if causal:
+        mask &= kpos <= qpos + (t - s)  # right-aligned when t > s
+    if window > 0:
+        mask &= kpos > qpos + (t - s) - window
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,bktd->bkgsd", probs, v)
+    return out.reshape(b, h, s, d)
+
+
+def decode_attention_ref(
+    q: jax.Array,  # (B, H, 1, D)
+    k: jax.Array,  # (B, KV, T, D)
+    v: jax.Array,
+    length: jax.Array | int,  # number of valid keys
+) -> jax.Array:
+    b, h, _, d = q.shape
+    kv = k.shape[1]
+    g = h // kv
+    t = k.shape[2]
+    qg = q.reshape(b, kv, g, 1, d)
+    scores = jnp.einsum("bkgsd,bktd->bkgst", qg, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    valid = (jnp.arange(t) < length)[None, None, None, None, :]
+    scores = jnp.where(valid, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,bktd->bkgsd", probs, v)
+    return out.reshape(b, h, 1, d)
+
+
+def rglru_ref(a: jax.Array, x: jax.Array, h0: jax.Array | None = None) -> jax.Array:
+    """h_t = a_t * h_{t-1} + x_t, scanned over axis 1. fp32 accumulation."""
+    b, s, w = a.shape
+    if h0 is None:
+        h0 = jnp.zeros((b, w), jnp.float32)
+
+    def step(h, inp):
+        at, xt = inp
+        h = at.astype(jnp.float32) * h + xt.astype(jnp.float32)
+        return h, h
+
+    _, hs = jax.lax.scan(step, h0, (a.transpose(1, 0, 2), x.transpose(1, 0, 2)))
+    return hs.transpose(1, 0, 2).astype(x.dtype)
+
+
+def mlstm_ref(
+    q: jax.Array,  # (B, H, S, D)
+    k: jax.Array,
+    v: jax.Array,
+    i_pre: jax.Array,  # (B, H, S) log input gate pre-activation
+    f_log: jax.Array,  # (B, H, S) log forget gate (log sigmoid already applied)
+) -> jax.Array:
+    """Sequential mLSTM with max-stabilizer (the recurrent ground truth)."""
+    b, h, s, d = q.shape
+    C0 = jnp.zeros((b, h, d, d), jnp.float32)
+    n0 = jnp.zeros((b, h, d), jnp.float32)
+    m0 = jnp.full((b, h), -jnp.inf, jnp.float32)
+
+    def step(carry, inp):
+        C, n, m = carry
+        qt, kt, vt, it, ft = inp
+        no_hist = jnp.isinf(m) & (m < 0)
+        m_safe = jnp.where(no_hist, 0.0, m)
+        m_new = jnp.maximum(jnp.where(no_hist, it, ft + m_safe), it)
+        i_g = jnp.exp(it - m_new)
+        f_g = jnp.where(no_hist, 0.0, jnp.exp(ft + m_safe - m_new))
+        C = f_g[..., None, None] * C + i_g[..., None, None] * (
+            vt.astype(jnp.float32)[..., :, None] * kt.astype(jnp.float32)[..., None, :]
+        )
+        n = f_g[..., None] * n + i_g[..., None] * kt.astype(jnp.float32)
+        denom = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n, qt.astype(jnp.float32))), 1.0)
+        ht = jnp.einsum("bhde,bhe->bhd", C, qt.astype(jnp.float32)) / denom[..., None]
+        return (C, n, m_new), ht
+
+    inputs = (
+        q.transpose(2, 0, 1, 3),
+        k.transpose(2, 0, 1, 3),
+        v.transpose(2, 0, 1, 3),
+        i_pre.transpose(2, 0, 1),
+        f_log.transpose(2, 0, 1),
+    )
+    _, hs = jax.lax.scan(step, (C0, n0, m0), inputs)
+    return hs.transpose(1, 2, 0, 3).astype(q.dtype)

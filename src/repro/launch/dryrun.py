@@ -1,0 +1,314 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST precede any jax import: jax locks the device
+count at first init, and the production meshes need 512 host-platform
+placeholder devices (16x16 single-pod and 2x16x16 dual-pod).
+
+Per cell this driver:
+  1. builds the abstract train state / caches (ShapeDtypeStruct only),
+  2. resolves shardings via the shard-if-divisible rules,
+  3. ``jit(step).lower(...)`` then ``.compile()`` under the mesh,
+  4. records ``memory_analysis()``, ``cost_analysis()`` and the summed
+     collective bytes parsed from the optimized HLO,
+  5. writes JSON to ``benchmarks/out/dryrun/`` for §Dry-run/§Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k --mesh both
+  python -m repro.launch.dryrun --all [--force]
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, applicable_shapes, get_config, make_model
+from repro.configs.base import SHAPES
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import (
+    batch_shardings,
+    batch_specs,
+    cache_shardings,
+    cache_specs,
+    init_state,
+    input_specs,
+    make_prefill_step,
+    make_serve_step,
+    make_train_step,
+    state_shardings,
+    token_specs,
+)
+from repro.launch.hlo_analysis import analyze as hlo_analyze
+from repro.nn.module import axis_rules
+from repro.optim.adamw import AdamW
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "benchmarks", "out", "dryrun")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*(?:\(?)([a-z0-9]+\[[\d,]*\])"  # first output shape
+    r".*?\s(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)(?:-start)?\("
+)
+
+
+def _shape_bytes(text: str) -> int:
+    m = _SHAPE_RE.match(text)
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dt, 4)
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum output-shape bytes of every collective op in optimized HLO.
+
+    Output-shape bytes is the documented proxy for payload (all-reduce:
+    full tensor; all-gather: gathered tensor; reduce-scatter: shard).
+    """
+    per_type: dict[str, int] = {c: 0 for c in _COLLECTIVES}
+    counts: dict[str, int] = {c: 0 for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        # Skip -done ops (the -start carries the shape) and parameter lines.
+        if "-done" in stripped:
+            continue
+        for coll in _COLLECTIVES:
+            token = f" {coll}(" if f" {coll}(" in stripped else f" {coll}-start("
+            if token in stripped and "=" in stripped:
+                lhs = stripped.split("=", 1)[1].strip()
+                # tuple outputs: take all shapes in the leading tuple
+                if lhs.startswith("("):
+                    shapes = _SHAPE_RE.findall(lhs[: lhs.index(")")])
+                    nbytes = 0
+                    for dt, dims in shapes:
+                        n = 1
+                        for d in dims.split(","):
+                            if d:
+                                n *= int(d)
+                        nbytes += n * _DTYPE_BYTES.get(dt, 4)
+                else:
+                    nbytes = _shape_bytes(lhs)
+                per_type[coll] += nbytes
+                counts[coll] += 1
+                break
+    return {
+        "bytes_by_type": per_type,
+        "counts": counts,
+        "total_bytes": sum(per_type.values()),
+    }
+
+
+def _mem_dict(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+        return {
+            k: int(getattr(ma, k))
+            for k in (
+                "argument_size_in_bytes",
+                "output_size_in_bytes",
+                "temp_size_in_bytes",
+                "generated_code_size_in_bytes",
+            )
+            if hasattr(ma, k)
+        }
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+
+
+def _cost_dict(compiled) -> dict:
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        return {k: float(v) for k, v in ca.items() if isinstance(v, (int, float))}
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+
+
+def run_cell(
+    arch: str,
+    shape_name: str,
+    multi_pod: bool,
+    seq_shard: bool = False,
+    seq_parallel: bool = False,
+    remat: str | None = None,
+    rules_name: str = "default",
+    dp: int | None = None,
+) -> dict:
+    import dataclasses
+
+    from repro.nn.module import RULE_SETS
+
+    cfg = get_config(arch)
+    if seq_parallel:
+        cfg = dataclasses.replace(cfg, seq_parallel=True)
+    if remat is not None:
+        cfg = dataclasses.replace(cfg, remat=remat)
+    rules = RULE_SETS[rules_name]
+    cell = SHAPES[shape_name]
+    model = make_model(cfg)
+    if dp is not None:
+        # perf-variant mesh: same 256 chips, different dp x tp split
+        from repro.launch.mesh import _mk
+
+        if 256 % dp:
+            raise ValueError(f"dp={dp} must divide 256")
+        mesh = _mk((dp, 256 // dp), ("data", "model"))
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    optimizer = AdamW()
+    t0 = time.time()
+
+    with mesh, axis_rules(mesh, rules):
+        state, axes = init_state(model, cfg, optimizer, jax.random.PRNGKey(0), abstract=True)
+        st_sh = state_shardings(state, axes, mesh, rules)
+
+        if cell.kind == "train":
+            bspec = batch_specs(cfg, cell)
+            b_sh = batch_shardings(bspec, mesh)
+            step = make_train_step(model, cfg, optimizer)
+            lowered = jax.jit(step, in_shardings=(st_sh, b_sh), out_shardings=(st_sh, None)).lower(
+                state, bspec
+            )
+        elif cell.kind == "prefill":
+            bspec = batch_specs(cfg, cell)
+            b_sh = batch_shardings(bspec, mesh)
+            cspec = jax.eval_shape(lambda: model.init_caches(cell.global_batch, cell.seq_len, jnp.dtype(cfg.dtype)))
+            c_sh = cache_shardings(cspec, cfg, mesh, seq_shard=seq_shard)
+            step = make_prefill_step(model, cfg)
+            lowered = jax.jit(
+                step, in_shardings=(st_sh["params"], b_sh, c_sh), out_shardings=None
+            ).lower(state["params"], bspec, cspec)
+        else:  # decode
+            tspec = token_specs(cfg, cell)
+            t_sh = batch_shardings(tspec, mesh)
+            cspec = cache_specs(model, cfg, cell)
+            c_sh = cache_shardings(cspec, cfg, mesh, seq_shard=seq_shard)
+            step = make_serve_step(model, cfg)
+            lowered = jax.jit(
+                step, in_shardings=(st_sh["params"], t_sh, c_sh), out_shardings=(t_sh, c_sh)
+            ).lower(state["params"], tspec, cspec)
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    # Trip-count-aware analysis: XLA cost_analysis counts while bodies once;
+    # scan-over-layers models need the corrected numbers for §Roofline.
+    corrected = hlo_analyze(hlo)
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": 512 if multi_pod else 256,
+        "kind": cell.kind,
+        "seq_shard": seq_shard,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": _mem_dict(compiled),
+        "cost": _cost_dict(compiled),
+        "collectives": coll,
+        "corrected": {
+            "dot_flops": corrected.corrected_dot_flops,
+            "raw_dot_flops": corrected.raw_dot_flops,
+            "coll_bytes_by_type": corrected.corrected_coll_bytes,
+            "coll_counts": corrected.corrected_coll_counts,
+            "coll_total_bytes": corrected.total_coll_bytes,
+        },
+        "param_count": cfg.param_count(),
+        "active_param_count": cfg.active_param_count(),
+    }
+    return result
+
+
+def cell_path(arch: str, shape_name: str, multi_pod: bool, tag: str = "") -> str:
+    mesh = "multi" if multi_pod else "single"
+    os.makedirs(OUT_DIR, exist_ok=True)
+    suffix = f"_{tag}" if tag else ""
+    return os.path.join(OUT_DIR, f"{arch}__{shape_name}__{mesh}{suffix}.json")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--seq-shard", action="store_true", help="shard cache seq dim (perf variant)")
+    ap.add_argument("--seq-parallel", action="store_true", help="sequence-parallel residual (perf variant)")
+    ap.add_argument("--remat", default=None, choices=["none", "full", "dots"], help="override remat policy")
+    ap.add_argument("--rules", default="default", choices=["default", "fsdp"], help="sharding rule set")
+    ap.add_argument("--dp", type=int, default=None, help="override dp size (single-pod perf variant)")
+    ap.add_argument("--tag", default="", help="suffix for output JSON (perf variants)")
+    args = ap.parse_args()
+
+    if args.all:
+        archs = ARCH_IDS
+    elif args.arch:
+        archs = [args.arch.replace("-", "_")]
+    else:
+        ap.error("--arch or --all required")
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    failures = []
+    for arch in archs:
+        cfg = get_config(arch)
+        shapes = [args.shape] if args.shape else [c.name for c in applicable_shapes(cfg)]
+        for shape_name in shapes:
+            for multi in meshes:
+                path = cell_path(arch, shape_name, multi, args.tag)
+                if os.path.exists(path) and not args.force:
+                    print(f"[skip] {path}")
+                    continue
+                label = f"{arch} x {shape_name} x {'2x16x16' if multi else '16x16'}"
+                print(f"[dryrun] {label} ...", flush=True)
+                try:
+                    res = run_cell(
+                        arch, shape_name, multi,
+                        seq_shard=args.seq_shard, seq_parallel=args.seq_parallel,
+                        remat=args.remat, rules_name=args.rules, dp=args.dp,
+                    )
+                    with open(path, "w") as fh:
+                        json.dump(res, fh, indent=2)
+                    c = res["cost"]
+                    print(
+                        f"[ok] {label}: compile={res['compile_s']}s "
+                        f"flops={c.get('flops', float('nan')):.3e} "
+                        f"coll={res['collectives']['total_bytes']:.3e}B",
+                        flush=True,
+                    )
+                except Exception as e:
+                    failures.append((label, repr(e)))
+                    traceback.print_exc()
+                    print(f"[FAIL] {label}: {e}", flush=True)
+
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for label, err in failures:
+            print(f"  {label}: {err[:200]}")
+        raise SystemExit(1)
+    print("\nall requested dry-run cells passed")
+
+
+if __name__ == "__main__":
+    main()

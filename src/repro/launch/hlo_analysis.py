@@ -1,0 +1,211 @@
+"""Trip-count-aware HLO analysis: corrected FLOPs and collective bytes.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body ONCE, so any
+scan-over-layers model under-reports FLOPs/bytes by ~n_layers x.  The
+optimized HLO text, however, contains (a) every computation as a named
+block, (b) ``while`` ops referencing their body computation and carrying
+``"known_trip_count":{"n":"N"}``, and (c) op output shapes for every
+line.  This module:
+
+  1. splits the module into computations and builds a call graph
+     (``body=``, ``condition=``, ``to_apply=``, ``calls=``, fusion refs),
+  2. assigns each computation an execution MULTIPLIER = sum over callers
+     of caller_multiplier x (trip_count if called as a while body else 1),
+  3. sums dot FLOPs (2 x prod(out) x contraction) and collective payload
+     bytes per computation, scaled by the multiplier.
+
+The result is the honest per-device FLOP / collective-byte count behind
+EXPERIMENTS.md §Roofline.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute")
+
+# `%name = f32[1,2,3]{...} op-name(%a, %b), attrs`
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+)$")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\((.*)\)\s*->")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALL_REFS = re.compile(r"(?:body|condition|to_apply|calls)=%?([\w\.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+
+
+def _shape_list(text: str) -> list[tuple[str, list[int]]]:
+    return [(dt, [int(x) for x in dims.split(",") if x]) for dt, dims in _SHAPE_RE.findall(text)]
+
+
+def _nbytes(dt: str, dims: list[int]) -> int:
+    n = 1
+    for d in dims:
+        n *= d
+    return n * _DTYPE_BYTES.get(dt, 4)
+
+
+@dataclasses.dataclass
+class CompStats:
+    dot_flops: float = 0.0
+    coll_bytes: dict = dataclasses.field(default_factory=lambda: defaultdict(float))
+    coll_counts: dict = dataclasses.field(default_factory=lambda: defaultdict(int))
+    while_calls: list = dataclasses.field(default_factory=list)  # (body_name, trip)
+    other_calls: list = dataclasses.field(default_factory=list)
+
+
+def _split_computations(hlo: str) -> dict[str, list[str]]:
+    comps: dict[str, list[str]] = {}
+    current = None
+    for line in hlo.splitlines():
+        m = _COMP_HDR_RE.match(line)
+        if m and ("{" in line or line.rstrip().endswith("->")) and "=" not in line.split("(")[0]:
+            current = m.group(1)
+            comps[current] = []
+            continue
+        if current is not None:
+            if line.strip() == "}":
+                current = None
+                continue
+            comps[current].append(line)
+    return comps
+
+
+def _dot_flops(line: str, shapes: dict[str, tuple[str, list[int]]]) -> float:
+    """FLOPs of a dot op: 2 * prod(output) * contraction size."""
+    lhs_m = re.search(r"dot\(\s*%?([\w\.\-]+)", line)
+    out_shapes = _shape_list(line.split("dot(")[0])
+    if not out_shapes or lhs_m is None:
+        return 0.0
+    _, out_dims = out_shapes[0]
+    lhs_name = lhs_m.group(1)
+    contr = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+    if lhs_name not in shapes or contr is None:
+        return 0.0
+    _, lhs_dims = shapes[lhs_name]
+    k = 1
+    for idx in (int(x) for x in contr.group(1).split(",") if x):
+        if idx < len(lhs_dims):
+            k *= lhs_dims[idx]
+    out = 1
+    for d in out_dims:
+        out *= d
+    return 2.0 * out * k
+
+
+def analyze_computations(hlo: str) -> dict[str, CompStats]:
+    comps = _split_computations(hlo)
+    stats: dict[str, CompStats] = {}
+    for name, lines in comps.items():
+        cs = CompStats()
+        shapes: dict[str, tuple[str, list[int]]] = {}
+        for line in lines:
+            d = _DEF_RE.match(line)
+            if d:
+                opname, rhs = d.groups()
+                sh = _shape_list(rhs.split("(")[0])
+                if sh:
+                    shapes[opname] = sh[0]
+            if " dot(" in line:
+                cs.dot_flops += _dot_flops(line, shapes)
+            if " while(" in line:
+                body = re.search(r"body=%?([\w\.\-]+)", line)
+                trip = _TRIP_RE.search(line)
+                if body:
+                    cs.while_calls.append((body.group(1), int(trip.group(1)) if trip else 1))
+            else:
+                for ref in _CALL_REFS.findall(line):
+                    cs.other_calls.append(ref)
+                bm = _BRANCHES.search(line)
+                if bm:
+                    for ref in re.findall(r"%?([\w\.\-]+)", bm.group(1)):
+                        cs.other_calls.append(ref)
+            if "-done" in line:
+                continue
+            for coll in _COLLECTIVES:
+                if f" {coll}(" in line or f" {coll}-start(" in line:
+                    lhs = line.split("=", 1)
+                    if len(lhs) != 2:
+                        continue
+                    rhs = lhs[1].strip()
+                    head = rhs[: rhs.index(")") + 1] if rhs.startswith("(") else rhs.split("(")[0]
+                    total = sum(_nbytes(dt, dims) for dt, dims in _shape_list(head))
+                    cs.coll_bytes[coll] += total
+                    cs.coll_counts[coll] += 1
+                    break
+        stats[name] = cs
+    return stats
+
+
+def _entry_name(hlo: str) -> str | None:
+    m = re.search(r"^ENTRY\s+%?([\w\.\-]+)", hlo, flags=re.M)
+    return m.group(1) if m else None
+
+
+def multipliers(stats: dict[str, CompStats], entry: str) -> dict[str, float]:
+    """Execution count of each computation via call-graph fixpoint.
+
+    The computation graph is a DAG (HLO forbids recursion), so recomputing
+    from the entry until stable converges in <= depth sweeps.
+    """
+    mult: dict[str, float] = {entry: 1.0}
+    for _ in range(len(stats) + 2):
+        nm: dict[str, float] = defaultdict(float)
+        nm[entry] = 1.0
+        for name, cs in stats.items():
+            m = mult.get(name, 0.0)
+            if m == 0.0:
+                continue
+            for body, trip in cs.while_calls:
+                if body in stats:
+                    nm[body] += m * trip
+            for ref in cs.other_calls:
+                if ref in stats and ref != name:
+                    nm[ref] += m
+        if dict(nm) == mult:
+            break
+        mult = dict(nm)
+    return mult
+
+
+@dataclasses.dataclass
+class HloAnalysis:
+    corrected_dot_flops: float
+    raw_dot_flops: float
+    corrected_coll_bytes: dict
+    corrected_coll_counts: dict
+    total_coll_bytes: float
+
+
+def analyze(hlo: str) -> HloAnalysis:
+    stats = analyze_computations(hlo)
+    entry = _entry_name(hlo)
+    if entry is None or entry not in stats:
+        entry = max(stats, key=lambda n: stats[n].dot_flops) if stats else ""
+    mult = multipliers(stats, entry)
+    corrected = 0.0
+    raw = 0.0
+    coll: dict[str, float] = defaultdict(float)
+    counts: dict[str, float] = defaultdict(float)
+    for name, cs in stats.items():
+        m = mult.get(name, 0.0)
+        raw += cs.dot_flops
+        corrected += cs.dot_flops * m
+        for k, v in cs.coll_bytes.items():
+            coll[k] += v * m
+        for k, v in cs.coll_counts.items():
+            counts[k] += v * m
+    return HloAnalysis(
+        corrected_dot_flops=corrected,
+        raw_dot_flops=raw,
+        corrected_coll_bytes=dict(coll),
+        corrected_coll_counts=dict(counts),
+        total_coll_bytes=sum(coll.values()),
+    )

@@ -1,0 +1,326 @@
+"""Step builders: loss, train_step, prefill/serve steps, input specs,
+and sharding resolution for states/batches/caches.
+
+Everything here is mesh-agnostic until ``*_shardings`` binds a Mesh via
+the shard-if-divisible rules (``repro.nn.module``) — this is what lets a
+single code path lower on 1 CPU device, a 256-chip pod, or the 512-chip
+dual-pod mesh.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeCell
+from repro.launch.mesh import dp_axis_names, dp_size
+from repro.nn.module import logical_to_pspec
+from repro.optim.adamw import AdamW, apply_updates
+
+PyTree = Any
+
+MOE_AUX_WEIGHT = 0.01
+MTP_WEIGHT = 0.3
+Z_LOSS_WEIGHT = 1e-4
+IGNORE_INDEX = -100
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Mean CE over non-ignored positions + z-loss. logits fp32 (B,S,V)."""
+    mask = (labels != IGNORE_INDEX).astype(jnp.float32)
+    safe = jnp.where(labels == IGNORE_INDEX, 0, labels)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    ce = (logz - gold) * mask
+    n = jnp.maximum(mask.sum(), 1.0)
+    loss = ce.sum() / n
+    zloss = Z_LOSS_WEIGHT * ((logz * mask) ** 2).sum() / n
+    return loss + zloss, loss
+
+
+# ---------------------------------------------------------------------------
+# Train step
+# ---------------------------------------------------------------------------
+
+
+def make_loss_fn(model, cfg: ArchConfig) -> Callable:
+    def loss_fn(params: PyTree, batch: dict) -> tuple[jax.Array, dict]:
+        if cfg.encdec is not None:
+            logits, aux = model.train_logits(params, batch["frames"], batch["inputs"])
+        elif cfg.vlm is not None:
+            logits, aux = model.train_logits(params, batch["inputs"], batch["patches"])
+        elif cfg.mtp:
+            hidden, aux = model.train_hidden(params, batch["inputs"])
+            from repro.nn import layers as L  # local to avoid cycle
+
+            x = L.norm_apply(params["final_norm"], hidden, cfg)
+            logits = L.logits_apply(params["embed"], params.get("head"), x, cfg)
+        else:
+            logits, aux = model.train_logits(params, batch["inputs"])
+
+        total, ce = cross_entropy(logits, batch["labels"])
+        metrics = {"ce": ce}
+        if cfg.moe is not None:
+            total = total + MOE_AUX_WEIGHT * aux
+            metrics["moe_aux"] = aux
+        if cfg.mtp and cfg.encdec is None and cfg.vlm is None:
+            # Predict t+2: inputs shifted by one feed the MTP head.
+            mtp_logits = model.mtp_logits(params, batch["inputs"][:, 1:], hidden[:, :-1])
+            mtp_total, mtp_ce = cross_entropy(mtp_logits, batch["labels"][:, 1:])
+            total = total + MTP_WEIGHT * mtp_total
+            metrics["mtp_ce"] = mtp_ce
+        return total, metrics
+
+    return loss_fn
+
+
+def make_train_step(model, cfg: ArchConfig, optimizer: AdamW, accum_steps: int = 1) -> Callable:
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    ``accum_steps > 1`` scans over microbatches, accumulating grads in
+    fp32 — the standard way to hold the global batch while bounding
+    activation memory (and a §Perf lever).
+    """
+    loss_fn = make_loss_fn(model, cfg)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(state: dict, batch: dict) -> tuple[dict, dict]:
+        params = state["params"]
+        if accum_steps == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            micro = jax.tree_util.tree_map(
+                lambda x: x.reshape(accum_steps, x.shape[0] // accum_steps, *x.shape[1:]), batch
+            )
+
+            def body(acc, mb):
+                (loss, metrics), grads = grad_fn(params, mb)
+                acc_g, acc_l = acc
+                acc_g = jax.tree_util.tree_map(
+                    lambda a, g: a + g.astype(jnp.float32) / accum_steps, acc_g, grads
+                )
+                return (acc_g, acc_l + loss / accum_steps), metrics
+
+            zero_g = jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), mstack = jax.lax.scan(body, (zero_g, 0.0), micro)
+            metrics = jax.tree_util.tree_map(lambda m: m[-1], mstack)
+
+        updates, opt_state, opt_metrics = optimizer.update(grads, state["opt"], params)
+        new_params = apply_updates(params, updates)
+        new_state = {"params": new_params, "opt": opt_state, "step": state["step"] + 1}
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return new_state, metrics
+
+    return train_step
+
+
+def init_state(model, cfg: ArchConfig, optimizer: AdamW, rng: jax.Array, abstract: bool = False):
+    """(state, axes) — axes only covers params; opt m/v share them."""
+    from repro.nn.module import init_with_axes
+
+    params, axes = init_with_axes(model.init, rng, abstract=abstract, dtype=jnp.dtype(cfg.param_dtype))
+    if abstract:
+        opt = jax.eval_shape(optimizer.init, params)
+        step = jax.ShapeDtypeStruct((), jnp.int32)
+    else:
+        opt = optimizer.init(params)
+        step = jnp.zeros((), jnp.int32)
+    return {"params": params, "opt": opt, "step": step}, axes
+
+
+# ---------------------------------------------------------------------------
+# Serving steps
+# ---------------------------------------------------------------------------
+
+
+def make_prefill_step(model, cfg: ArchConfig) -> Callable:
+    if cfg.encdec is not None:
+        def prefill_step(params, batch, caches):
+            logits, caches = model.prefill(params, batch["frames"], batch["inputs"], caches)
+            return jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32), caches
+    elif cfg.vlm is not None:
+        def prefill_step(params, batch, caches):
+            logits, caches = model.prefill(params, batch["inputs"], caches, patches=batch["patches"])
+            return jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32), caches
+    else:
+        def prefill_step(params, batch, caches):
+            logits, caches = model.prefill(params, batch["inputs"], caches)
+            return jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32), caches
+
+    return prefill_step
+
+
+def make_serve_step(model, cfg: ArchConfig) -> Callable:
+    def serve_step(params, token: jax.Array, caches) -> tuple[jax.Array, PyTree]:
+        logits, caches = model.decode_step(params, token, caches)
+        nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return nxt[:, None], caches
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins; no allocation)
+# ---------------------------------------------------------------------------
+
+
+def _sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def batch_specs(cfg: ArchConfig, cell: ShapeCell) -> dict:
+    """Train/prefill batch ShapeDtypeStructs for one shape cell."""
+    b, s = cell.global_batch, cell.seq_len
+    if cfg.encdec is not None:
+        spec = {
+            "frames": _sds((b, cfg.encdec.n_frames, cfg.encdec.frame_dim), cfg.dtype),
+            "inputs": _sds((b, s), jnp.int32),
+        }
+    elif cfg.vlm is not None:
+        text = s - cfg.vlm.n_patches
+        spec = {
+            "inputs": _sds((b, text), jnp.int32),
+            "patches": _sds((b, cfg.vlm.n_patches, cfg.vlm.patch_dim), cfg.dtype),
+        }
+    else:
+        spec = {"inputs": _sds((b, s), jnp.int32)}
+    if cell.kind == "train":
+        label_s = spec["inputs"].shape[1]
+        spec["labels"] = _sds((b, label_s), jnp.int32)
+    return spec
+
+
+def cache_specs(model, cfg: ArchConfig, cell: ShapeCell) -> PyTree:
+    """Abstract KV-cache/recurrent-state tree for a decode/prefill cell."""
+    b = cell.global_batch
+    max_seq = cell.seq_len
+    if cfg.vlm is not None:
+        max_seq = max_seq  # patches included in cell seq_len budget
+    dtype = jnp.dtype(cfg.dtype)
+
+    def build():
+        return model.init_caches(b, max_seq, dtype)
+
+    caches = jax.eval_shape(build)
+    if cfg.encdec is not None:
+        # decode-time cross KV comes from prefill; build its abstract shape
+        hd = cfg.resolved_head_dim
+        cross = {
+            "k": _sds((cfg.n_layers, b, cfg.encdec.n_frames, cfg.n_kv_heads, hd), dtype),
+            "v": _sds((cfg.n_layers, b, cfg.encdec.n_frames, cfg.n_kv_heads, hd), dtype),
+        }
+        caches = {"self": caches["self"], "cross": cross}
+    return caches
+
+
+def token_specs(cfg: ArchConfig, cell: ShapeCell) -> jax.ShapeDtypeStruct:
+    return _sds((cell.global_batch, 1), jnp.int32)
+
+
+def input_specs(model, cfg: ArchConfig, cell: ShapeCell) -> dict:
+    """All abstract inputs for the cell's step function (the dry-run entry).
+
+    train  -> {"batch": ...}
+    prefill-> {"batch": ..., "caches": ...}
+    decode -> {"token": ..., "caches": ...}
+    """
+    if cell.kind == "train":
+        return {"batch": batch_specs(cfg, cell)}
+    if cell.kind == "prefill":
+        return {"batch": batch_specs(cfg, cell), "caches": cache_specs(model, cfg, cell)}
+    return {"token": token_specs(cfg, cell), "caches": cache_specs(model, cfg, cell)}
+
+
+# ---------------------------------------------------------------------------
+# Sharding resolution
+# ---------------------------------------------------------------------------
+
+
+def _shard_if(dim: int, axes: tuple[str, ...], mesh: Mesh):
+    import numpy as np
+
+    size = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+    if size > 1 and dim % size == 0:
+        return axes if len(axes) > 1 else axes[0]
+    return None
+
+
+def state_shardings(state_shapes: PyTree, axes: PyTree, mesh: Mesh, rules=None) -> PyTree:
+    """NamedShardings for {params, opt, step} from the params axes tree."""
+    pspecs = logical_to_pspec(axes, state_shapes["params"], mesh, rules)
+    ns = lambda spec: NamedSharding(mesh, spec)
+    params_sh = jax.tree_util.tree_map(ns, pspecs, is_leaf=lambda x: isinstance(x, P))
+    return {
+        "params": params_sh,
+        "opt": {
+            "m": params_sh,
+            "v": params_sh,
+            "count": NamedSharding(mesh, P()),
+        },
+        "step": NamedSharding(mesh, P()),
+    }
+
+
+def batch_shardings(batch_shapes: PyTree, mesh: Mesh) -> PyTree:
+    """Shard the leading batch dim over (pod, data); replicate the rest."""
+    dp = dp_axis_names(mesh)
+
+    def one(leaf):
+        lead = _shard_if(leaf.shape[0], dp, mesh)
+        return NamedSharding(mesh, P(lead, *([None] * (len(leaf.shape) - 1))))
+
+    return jax.tree_util.tree_map(one, batch_shapes)
+
+
+def cache_shardings(cache_shapes: PyTree, cfg: ArchConfig, mesh: Mesh, seq_shard: bool = False) -> PyTree:
+    """Cache sharding: batch over DP, head-like dims over 'model' when
+    divisible. ``seq_shard=True`` shards the cache sequence dim over
+    'model' instead (long-context lever for kv=1 archs; §Perf)."""
+    dp = dp_axis_names(mesh)
+
+    def one(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        shape = leaf.shape
+        rank = len(shape)
+        # Stacked layer dim(s) first? detect: caches under "periods"/"self"
+        # have a leading layers dim added by vmap/scan stacking.
+        stacked = any(
+            getattr(p, "key", None) in ("periods", "self", "cross") for p in path
+        )
+        spec: list = [None] * rank
+        if name == "index":
+            return NamedSharding(mesh, P(*([None] * rank)))
+        off = 1 if stacked else 0
+        bdim = off  # batch position
+        if rank > bdim:
+            spec[bdim] = _shard_if(shape[bdim], dp, mesh)
+        if name in ("k", "v"):
+            # (layers?, B, S, KV, hd)
+            if seq_shard and rank >= bdim + 2:
+                spec[bdim + 1] = _shard_if(shape[bdim + 1], ("model",), mesh)
+            elif rank >= bdim + 3:
+                spec[bdim + 2] = _shard_if(shape[bdim + 2], ("model",), mesh)
+        elif name in ("c_kv", "k_pe"):
+            if seq_shard and rank >= bdim + 2:
+                spec[bdim + 1] = _shard_if(shape[bdim + 1], ("model",), mesh)
+        elif name in ("h", "conv"):  # rglru states: (..., W) width last
+            spec[rank - 1] = _shard_if(shape[rank - 1], ("model",), mesh)
+        elif name in ("C", "n"):  # mlstm: (..., H, dh[, dh])
+            if rank >= bdim + 2:
+                spec[bdim + 1] = _shard_if(shape[bdim + 1], ("model",), mesh)
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, cache_shapes)
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

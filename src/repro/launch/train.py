@@ -1,0 +1,161 @@
+"""Resilient training driver: the paper's storage system under a real loop.
+
+Wiring (DESIGN.md §2): the token pipeline reads through the TwoLevelStore
+(hot shards in the memory tier, all shards durable on the PFS tier); the
+checkpoint manager writes two-level checkpoints (sync or async); a
+heartbeat watches liveness; a failure injector simulates host loss; on
+failure the driver restores the last committed checkpoint AND the exact
+pipeline cursor, then continues — the recovery path is the paper's read
+mode (f): memory tier first, PFS fallback.
+
+CLI:  python -m repro.launch.train --arch starcoder2-3b --steps 20 --reduced
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, get_reduced, make_model
+from repro.core.store import TwoLevelStore
+from repro.data.pipeline import PipelineState, ShardedLoader, SyntheticCorpus
+from repro.launch.steps import init_state, make_train_step
+from repro.optim.adamw import AdamW, cosine_warmup
+from repro.runtime.checkpoint import CheckpointManager
+from repro.runtime.failure import FailureInjector, Heartbeat, SimulatedFailure
+from repro.runtime.straggler import StepTimeMonitor
+
+
+@dataclasses.dataclass
+class TrainResult:
+    state: dict
+    losses: list
+    restarts: int
+    steps_run: int
+
+
+def run_training(
+    cfg,
+    store: TwoLevelStore,
+    total_steps: int,
+    global_batch: int = 8,
+    seq_len: int = 64,
+    ckpt_every: int = 5,
+    ckpt_mode: str = "async",
+    peak_lr: float = 1e-3,
+    injector: FailureInjector | None = None,
+    max_restarts: int = 8,
+    heartbeat_timeout: float = 300.0,
+    on_step: Callable[[int, dict], None] | None = None,
+    accum_steps: int = 1,
+) -> TrainResult:
+    """Train with checkpoint/restart through the two-level store."""
+    model = make_model(cfg)
+    optimizer = AdamW(learning_rate=cosine_warmup(peak_lr, 10, max(total_steps, 20)))
+    train_step = jax.jit(make_train_step(model, cfg, optimizer, accum_steps=accum_steps))
+
+    corpus = SyntheticCorpus(
+        store, vocab_size=cfg.vocab, n_shards=8,
+        tokens_per_shard=max(global_batch * (seq_len + 1) * 4, 1 << 14),
+    )
+    corpus.generate()
+    ckpt = CheckpointManager(store, tag=cfg.name, mode=ckpt_mode, keep_last=2)
+    injector = injector or FailureInjector()
+    monitor = StepTimeMonitor(n_hosts=1)
+
+    def fresh_state():
+        state, _ = init_state(model, cfg, optimizer, jax.random.PRNGKey(0))
+        state["pipeline"] = {"epoch": np.int64(0), "step": np.int64(0)}
+        return state
+
+    state = fresh_state()
+    if ckpt.latest_step() is not None:
+        _, state = ckpt.restore(state)
+
+    losses: list = []
+    restarts = 0
+    steps_run = 0
+
+    with Heartbeat(timeout_s=heartbeat_timeout) as hb:
+        while True:
+            pstate = PipelineState(int(state["pipeline"]["epoch"]), int(state["pipeline"]["step"]))
+            loader = ShardedLoader(
+                corpus, global_batch, seq_len, prefetch_depth=2, state=pstate
+            )
+            try:
+                while int(state["step"]) < total_steps:
+                    step_no = int(state["step"])
+                    injector.maybe_fail(step_no)
+                    t0 = time.perf_counter()
+                    inputs, labels = next(loader)
+                    batch = {"inputs": jnp.asarray(inputs), "labels": jnp.asarray(labels)}
+                    state, metrics = train_step(state, batch)
+                    hb.beat()
+                    monitor.record({0: time.perf_counter() - t0})
+                    loss = float(metrics["loss"])
+                    losses.append(loss)
+                    steps_run += 1
+                    if on_step:
+                        on_step(step_no, metrics)
+                    if int(state["step"]) % ckpt_every == 0:
+                        cursor = loader.sync()
+                        state["pipeline"] = {
+                            "epoch": np.int64(cursor.epoch),
+                            "step": np.int64(cursor.step),
+                        }
+                        ckpt.save(int(state["step"]), state)
+                break  # completed
+            except SimulatedFailure:
+                restarts += 1
+                if restarts > max_restarts:
+                    raise
+                # Recovery: last committed two-level checkpoint (memory-tier
+                # hit when the tier survived; PFS read mode (f) otherwise).
+                state = fresh_state()
+                if ckpt.latest_step() is not None:
+                    _, state = ckpt.restore(state)
+            finally:
+                loader.close()
+
+    ckpt.wait_until_durable()
+    return TrainResult(state=state, losses=losses, restarts=restarts, steps_run=steps_run)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--store", default="/tmp/repro_store")
+    ap.add_argument("--ckpt-mode", default="async", choices=["sync", "async", "memory_only"])
+    ap.add_argument("--fail-at", type=int, nargs="*", default=[])
+    args = ap.parse_args()
+
+    cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    with TwoLevelStore(args.store, mem_capacity_bytes=256 * 2**20, block_bytes=4 * 2**20) as store:
+        res = run_training(
+            cfg,
+            store,
+            total_steps=args.steps,
+            global_batch=args.batch,
+            seq_len=args.seq,
+            ckpt_mode=args.ckpt_mode,
+            injector=FailureInjector(args.fail_at),
+            on_step=lambda s, m: print(f"step {s:4d} loss {float(m['loss']):.4f}"),
+        )
+    print(
+        f"done: {res.steps_run} steps run ({res.restarts} restarts), "
+        f"final loss {res.losses[-1]:.4f}"
+    )
+
+
+if __name__ == "__main__":
+    main()

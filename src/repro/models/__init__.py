@@ -1,0 +1,6 @@
+"""Model zoo: unified decoder-only LM + encoder-decoder, config-driven."""
+
+from repro.models.lm import LM, layer_specs, stack_plan
+from repro.models.encdec import EncDec
+
+__all__ = ["LM", "EncDec", "layer_specs", "stack_plan"]

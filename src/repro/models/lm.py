@@ -1,0 +1,382 @@
+"""Unified decoder-only LM covering dense / MoE / SSM / hybrid / VLM families.
+
+A config expands to a list of ``LayerSpec``s (mixer kind, window, FFN
+kind), which are packed into::
+
+    prefix layers   (unrolled; e.g. DeepSeek's first-3-dense)
+    periods         (the repeating unit, scanned over stacked params)
+    suffix layers   (unrolled remainder; e.g. gemma3's trailing 2 locals)
+
+so a 61-layer 671 B model compiles as a scan over 58 stacked periods.
+
+Three entry points (all pure functions of params):
+
+    train_logits(params, tokens, ...)   -> (logits, aux)        [train_4k]
+    prefill(params, tokens, caches)     -> (logits, new_caches) [prefill_32k]
+    decode_step(params, token, caches)  -> (logits, new_caches) [decode_*]
+
+Caches are explicit pytrees created by ``init_caches`` (KV pages for
+attention layers, O(1) recurrent states for rglru/xlstm layers).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.nn import layers as L
+from repro.nn import recurrent as R
+from repro.nn.module import Scope, constrain, stacked_init
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    mixer: str  # 'gqa' | 'mla' | 'rglru' | 'mlstm' | 'slstm'
+    window: int = 0  # sliding window for gqa (0 = full)
+    ffn: str = "mlp"  # 'mlp' | 'moe' | 'none'
+
+
+def layer_specs(cfg: ArchConfig) -> list[LayerSpec]:
+    """Expand a config into its per-layer specs."""
+    specs: list[LayerSpec] = []
+    for i in range(cfg.n_layers):
+        if cfg.recurrent is not None and cfg.recurrent.kind == "rglru":
+            every = cfg.recurrent.attn_every
+            if i % every == every - 1:
+                specs.append(LayerSpec("gqa", window=cfg.window or 2048))
+            else:
+                specs.append(LayerSpec("rglru"))
+        elif cfg.recurrent is not None and cfg.recurrent.kind == "xlstm":
+            every = cfg.recurrent.slstm_every
+            kind = "slstm" if i % every == every - 1 else "mlstm"
+            specs.append(LayerSpec(kind, ffn="none"))
+        elif cfg.attn_type == "mla":
+            ffn = "moe" if (cfg.moe and i >= cfg.moe.first_k_dense) else "mlp"
+            specs.append(LayerSpec("mla", ffn=ffn))
+        else:
+            window = cfg.window
+            if cfg.global_every > 0 and i % cfg.global_every == cfg.global_every - 1:
+                window = 0  # periodic global layer (gemma3 5:1)
+            ffn = "moe" if cfg.moe is not None else "mlp"
+            specs.append(LayerSpec("gqa", window=window, ffn=ffn))
+    return specs
+
+
+def _period_len(cfg: ArchConfig) -> int:
+    if cfg.recurrent is not None:
+        return cfg.recurrent.attn_every if cfg.recurrent.kind == "rglru" else cfg.recurrent.slstm_every
+    if cfg.global_every > 0:
+        return cfg.global_every
+    return 1
+
+
+def stack_plan(cfg: ArchConfig) -> tuple[list[LayerSpec], list[LayerSpec], int, list[LayerSpec]]:
+    """(prefix, period, n_periods, suffix) partition of the layer list."""
+    specs = layer_specs(cfg)
+    n_prefix = cfg.moe.first_k_dense if (cfg.moe and cfg.attn_type == "mla") else 0
+    plen = _period_len(cfg)
+    body = len(specs) - n_prefix
+    n_periods = body // plen
+    n_suffix = body - n_periods * plen
+    prefix = specs[:n_prefix]
+    period = specs[n_prefix : n_prefix + plen] if n_periods else []
+    suffix = specs[len(specs) - n_suffix :] if n_suffix else []
+    if not cfg.scan_layers:
+        return specs, [], 0, []
+    return prefix, period, n_periods, suffix
+
+
+# ---------------------------------------------------------------------------
+# Single layer init/apply
+# ---------------------------------------------------------------------------
+
+
+def init_layer(scope: Scope, spec: LayerSpec, cfg: ArchConfig) -> None:
+    L.norm_init(scope, "pre_norm", cfg.d_model, cfg)
+    if spec.mixer == "gqa":
+        L.attention_init(scope, "mixer", cfg)
+    elif spec.mixer == "mla":
+        L.mla_init(scope, "mixer", cfg)
+    elif spec.mixer == "rglru":
+        R.rglru_init(scope, "mixer", cfg)
+    elif spec.mixer == "mlstm":
+        R.mlstm_init(scope, "mixer", cfg)
+    elif spec.mixer == "slstm":
+        R.slstm_init(scope, "mixer", cfg)
+    else:
+        raise ValueError(spec.mixer)
+    if cfg.post_norms:
+        L.norm_init(scope, "post_mixer_norm", cfg.d_model, cfg)
+    if spec.ffn != "none":
+        L.norm_init(scope, "pre_ffn_norm", cfg.d_model, cfg)
+        if spec.ffn == "moe":
+            L.moe_init(scope, "ffn", cfg)
+        else:
+            L.mlp_init(scope, "ffn", cfg)
+        if cfg.post_norms:
+            L.norm_init(scope, "post_ffn_norm", cfg.d_model, cfg)
+
+
+def make_layer_cache(spec: LayerSpec, cfg: ArchConfig, batch: int, max_seq: int, dtype) -> Any:
+    if spec.mixer == "gqa":
+        # Sliding-window layers only ever need `window` keys; cap the page.
+        size = min(max_seq, spec.window) if spec.window > 0 else max_seq
+        return L.make_cache(cfg, batch, size, dtype)
+    if spec.mixer == "mla":
+        return L.mla_make_cache(cfg, batch, max_seq, dtype)
+    if spec.mixer == "rglru":
+        return R.rglru_make_state(cfg, batch, dtype)
+    if spec.mixer == "mlstm":
+        return R.mlstm_make_state(cfg, batch)
+    if spec.mixer == "slstm":
+        return R.slstm_make_state(cfg, batch)
+    raise ValueError(spec.mixer)
+
+
+def apply_layer(
+    p: Params,
+    x: jax.Array,
+    spec: LayerSpec,
+    cfg: ArchConfig,
+    cache: Any = None,
+    mode: str = "train",
+) -> tuple[jax.Array, Any, jax.Array]:
+    """Residual layer body. Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.seq_parallel and mode == "train":
+        # Megatron-SP: keep the residual stream sharded over 'model' on the
+        # sequence dim between blocks; XLA turns the per-block activation
+        # all-reduce into reduce-scatter + all-gather (half the wire bytes).
+        x = constrain(x, "batch", "residual_seq", None)
+    h = L.norm_apply(p["pre_norm"], x, cfg)
+
+    if spec.mixer == "gqa":
+        # A windowed cache page holds the last `window` keys; decode writes
+        # at index % window (ring buffer) — handled inside attention via
+        # effective position arithmetic when the page is smaller than seq.
+        mix, new_cache = L.attention_apply(
+            p["mixer"], h, cfg, window=spec.window, cache=cache, mode=mode
+        )
+    elif spec.mixer == "mla":
+        mix, new_cache = L.mla_apply(p["mixer"], h, cfg, cache=cache, mode=mode)
+    elif spec.mixer == "rglru":
+        mix, new_cache = R.rglru_block_apply(p["mixer"], h, cfg, state=cache)
+    elif spec.mixer == "mlstm":
+        mix, new_cache = R.mlstm_block_apply(p["mixer"], h, cfg, state=cache)
+    elif spec.mixer == "slstm":
+        mix, new_cache = R.slstm_block_apply(p["mixer"], h, cfg, state=cache)
+    else:
+        raise ValueError(spec.mixer)
+
+    if cfg.post_norms:
+        mix = L.norm_apply(p["post_mixer_norm"], mix, cfg)
+    x = x + mix
+
+    if spec.ffn != "none":
+        h2 = L.norm_apply(p["pre_ffn_norm"], x, cfg)
+        if spec.ffn == "moe":
+            f, aux = L.moe_apply(p["ffn"], h2, cfg)
+        else:
+            f = L.mlp_apply(p["ffn"], h2, cfg)
+        if cfg.post_norms:
+            f = L.norm_apply(p["post_ffn_norm"], f, cfg)
+        x = x + f
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# The model
+# ---------------------------------------------------------------------------
+
+
+class LM:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        self.prefix, self.period, self.n_periods, self.suffix = stack_plan(cfg)
+
+    # ------------------------------------------------------------------ init
+
+    def init(self, scope: Scope) -> None:
+        cfg = self.cfg
+        L.embedding_init(scope, "embed", cfg.vocab, cfg.d_model)
+        if not cfg.tie_embeddings:
+            scope.child("head").param(
+                "w", (cfg.d_model, cfg.vocab), ("embed", "vocab"), init="fan_in"
+            )
+        if cfg.vlm is not None:
+            L.linear_init(scope, "vlm_proj", cfg.vlm.patch_dim, cfg.d_model, ("embed", None))
+        for i, spec in enumerate(self.prefix):
+            init_layer(scope.child(f"prefix_{i}"), spec, cfg)
+        if self.n_periods:
+            def period_init(s: Scope) -> None:
+                for j, spec in enumerate(self.period):
+                    init_layer(s.child(f"slot_{j}"), spec, cfg)
+
+            stacked_init(scope, "periods", self.n_periods, period_init)
+        for i, spec in enumerate(self.suffix):
+            init_layer(scope.child(f"suffix_{i}"), spec, cfg)
+        L.norm_init(scope, "final_norm", cfg.d_model, cfg)
+        if cfg.mtp:
+            m = scope.child("mtp")
+            L.norm_init(m, "in_norm", cfg.d_model, cfg)
+            L.linear_init(m, "proj", 2 * cfg.d_model, cfg.d_model, (None, "embed"))
+            init_layer(m.child("layer"), LayerSpec(self.cfg.attn_type, ffn="mlp"), cfg)
+
+    # ---------------------------------------------------------------- caches
+
+    def init_caches(self, batch: int, max_seq: int, dtype=jnp.bfloat16) -> dict:
+        cfg = self.cfg
+        caches: dict[str, Any] = {}
+        for i, spec in enumerate(self.prefix):
+            caches[f"prefix_{i}"] = make_layer_cache(spec, cfg, batch, max_seq, dtype)
+        if self.n_periods:
+            def one_period(_):
+                return {
+                    f"slot_{j}": make_layer_cache(spec, cfg, batch, max_seq, dtype)
+                    for j, spec in enumerate(self.period)
+                }
+
+            caches["periods"] = jax.vmap(one_period)(jnp.arange(self.n_periods))
+        for i, spec in enumerate(self.suffix):
+            caches[f"suffix_{i}"] = make_layer_cache(spec, cfg, batch, max_seq, dtype)
+        return caches
+
+    # --------------------------------------------------------------- forward
+
+    def _embed(self, params: Params, tokens: jax.Array, patches: jax.Array | None) -> jax.Array:
+        cfg = self.cfg
+        x = L.embedding_apply(params["embed"], tokens, cfg)
+        if cfg.vlm is not None and patches is not None:
+            # Patches arrive at train/prefill; decode steps are text-only.
+            pe = L.linear_apply(params["vlm_proj"], patches.astype(x.dtype))
+            x = jnp.concatenate([pe, x], axis=1)
+        return constrain(x, "batch", "seq", "act_embed")
+
+    def _run_stack(
+        self,
+        params: Params,
+        x: jax.Array,
+        caches: dict | None,
+        mode: str,
+    ) -> tuple[jax.Array, dict | None, jax.Array]:
+        cfg = self.cfg
+        aux_total = jnp.zeros((), jnp.float32)
+        new_caches: dict[str, Any] = {}
+
+        def run_unrolled(tag: str, i: int, spec: LayerSpec, x):
+            nonlocal aux_total
+            cache = caches.get(f"{tag}_{i}") if caches else None
+            x, nc, aux = apply_layer(params[f"{tag}_{i}"], x, spec, cfg, cache, mode)
+            aux_total += aux
+            if caches is not None:
+                new_caches[f"{tag}_{i}"] = nc
+            return x
+
+        for i, spec in enumerate(self.prefix):
+            x = run_unrolled("prefix", i, spec, x)
+
+        if self.n_periods:
+            period = self.period
+
+            def body(carry, xs):
+                x, aux_acc = carry
+                pparams, pcaches = xs
+                ncs = {}
+                for j, spec in enumerate(period):
+                    c = pcaches.get(f"slot_{j}") if pcaches is not None else None
+                    x, nc, aux = apply_layer(pparams[f"slot_{j}"], x, spec, cfg, c, mode)
+                    aux_acc += aux
+                    ncs[f"slot_{j}"] = nc
+                return (x, aux_acc), (ncs if pcaches is not None else 0)
+
+            if cfg.remat != "none" and mode == "train":
+                policy = (
+                    jax.checkpoint_policies.nothing_saveable
+                    if cfg.remat == "full"
+                    else jax.checkpoint_policies.checkpoint_dots
+                )
+                body = jax.checkpoint(body, policy=policy)
+
+            pcaches = caches.get("periods") if caches else None
+            (x, aux_total), scanned = jax.lax.scan(
+                body, (x, aux_total), (params["periods"], pcaches)
+            )
+            if caches is not None:
+                new_caches["periods"] = scanned
+
+        for i, spec in enumerate(self.suffix):
+            x = run_unrolled("suffix", i, spec, x)
+
+        return x, (new_caches if caches is not None else None), aux_total
+
+    def train_logits(
+        self,
+        params: Params,
+        tokens: jax.Array,
+        patches: jax.Array | None = None,
+    ) -> tuple[jax.Array, jax.Array]:
+        """Full-sequence causal logits. Returns (logits fp32, aux_loss)."""
+        x = self._embed(params, tokens, patches)
+        x, _, aux = self._run_stack(params, x, None, "train")
+        x = L.norm_apply(params["final_norm"], x, self.cfg)
+        logits = L.logits_apply(params["embed"], params.get("head"), x, self.cfg)
+        if self.cfg.vlm is not None:
+            logits = logits[:, self.cfg.vlm.n_patches :, :]  # text positions only
+        return logits, aux
+
+    def mtp_logits(
+        self, params: Params, tokens: jax.Array, hidden: jax.Array
+    ) -> jax.Array:
+        """DeepSeek MTP head: predict t+2 from [h_t ; emb(t+1)] (depth 1)."""
+        cfg = self.cfg
+        m = params["mtp"]
+        emb_next = L.embedding_apply(params["embed"], tokens, cfg)  # caller shifts
+        h = L.norm_apply(m["in_norm"], hidden, cfg)
+        z = jnp.concatenate([h, emb_next], axis=-1)
+        z = L.linear_apply(m["proj"], z)
+        spec = LayerSpec(cfg.attn_type, ffn="mlp")
+        z, _, _ = apply_layer(m["layer"], z, spec, cfg, None, "train")
+        z = L.norm_apply(params["final_norm"], z, cfg)
+        return L.logits_apply(params["embed"], params.get("head"), z, cfg)
+
+    def train_hidden(
+        self, params: Params, tokens: jax.Array, patches: jax.Array | None = None
+    ) -> tuple[jax.Array, jax.Array]:
+        """Hidden states before final norm (for the MTP head) + aux."""
+        x = self._embed(params, tokens, patches)
+        x, _, aux = self._run_stack(params, x, None, "train")
+        return x, aux
+
+    def prefill(
+        self,
+        params: Params,
+        tokens: jax.Array,
+        caches: dict,
+        patches: jax.Array | None = None,
+    ) -> tuple[jax.Array, dict]:
+        """Process the prompt; fill caches; return last-position logits."""
+        x = self._embed(params, tokens, patches)
+        x, new_caches, _ = self._run_stack(params, x, caches, "prefill")
+        x = L.norm_apply(params["final_norm"], x, self.cfg)
+        last = x[:, -1:, :]
+        logits = L.logits_apply(params["embed"], params.get("head"), last, self.cfg)
+        return logits, new_caches
+
+    def decode_step(
+        self,
+        params: Params,
+        token: jax.Array,  # (B, 1) int32
+        caches: dict,
+    ) -> tuple[jax.Array, dict]:
+        """One autoregressive step against pre-allocated caches."""
+        x = self._embed(params, token, None)
+        x, new_caches, _ = self._run_stack(params, x, caches, "decode")
+        x = L.norm_apply(params["final_norm"], x, self.cfg)
+        logits = L.logits_apply(params["embed"], params.get("head"), x, self.cfg)
+        return logits, new_caches

@@ -1,0 +1,5 @@
+"""Minimal functional NN substrate: param scopes, logical sharding axes, layers."""
+
+from repro.nn.module import Scope, init_with_axes, logical_to_pspec
+
+__all__ = ["Scope", "init_with_axes", "logical_to_pspec"]

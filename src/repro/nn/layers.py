@@ -1,0 +1,619 @@
+"""Layer library: norms, projections, RoPE, attention (GQA/MQA/MLA,
+sliding-window, qk-norm), MLPs, and sort-based MoE dispatch.
+
+Conventions:
+* params are fp32 (master); compute runs in ``cfg.dtype`` (default bf16);
+  softmax/normalizers/logits accumulate in fp32.
+* init functions take a ``Scope``; apply functions take the params subtree.
+* attention supports three modes: ``train`` (full causal, no cache),
+  ``prefill`` (full causal + returns a filled KV cache), ``decode`` (one
+  new token against a pre-allocated cache, in-place dynamic update).
+* the KV cache layout is ``(batch, max_seq, n_kv, head_dim)`` — sequence
+  axis first so long-context caches can be sequence-sharded (long_500k).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, MLAConfig, MoEConfig
+from repro.nn.module import Scope, constrain
+
+Params = Any
+
+
+def cdtype(cfg: ArchConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_init(scope: Scope, name: str, dim: int) -> None:
+    scope.child(name).param("scale", (dim,), ("embed",), init="ones")
+
+
+def rmsnorm_apply(p: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+def layernorm_init(scope: Scope, name: str, dim: int) -> None:
+    c = scope.child(name)
+    c.param("scale", (dim,), ("embed",), init="ones")
+    c.param("bias", (dim,), ("embed",), init="zeros")
+
+
+def layernorm_apply(p: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)).astype(dt)
+
+
+def norm_init(scope: Scope, name: str, dim: int, cfg: ArchConfig) -> None:
+    (rmsnorm_init if cfg.norm_type == "rmsnorm" else layernorm_init)(scope, name, dim)
+
+
+def norm_apply(p: Params, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    fn = rmsnorm_apply if cfg.norm_type == "rmsnorm" else layernorm_apply
+    return fn(p, x, cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# Projections & embeddings
+# ---------------------------------------------------------------------------
+
+
+def linear_init(
+    scope: Scope,
+    name: str,
+    d_in: int,
+    d_out: int,
+    axes: tuple[str | None, str | None],
+    use_bias: bool = False,
+    out_axes: tuple[str | None, ...] | None = None,
+) -> None:
+    c = scope.child(name)
+    c.param("w", (d_in, d_out), axes, init="fan_in")
+    if use_bias:
+        c.param("b", (d_out,), (axes[1],), init="zeros")
+
+
+def linear_apply(p: Params, x: jax.Array) -> jax.Array:
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def embedding_init(scope: Scope, name: str, vocab: int, dim: int) -> None:
+    scope.child(name).param("table", (vocab, dim), ("vocab", "embed"), init="normal", scale=0.02)
+
+
+def embedding_apply(p: Params, tokens: jax.Array, cfg: ArchConfig) -> jax.Array:
+    x = jnp.take(p["table"], tokens, axis=0).astype(cdtype(cfg))
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model**0.5, x.dtype)
+    return x
+
+
+def logits_apply(embed_p: Params, head_p: Params | None, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    """Final LM head; fp32 logits. Tied -> embedding transpose."""
+    table = embed_p["table"] if head_p is None else head_p["w"]
+    w = table.astype(jnp.float32)
+    logits = x.astype(jnp.float32) @ (w.T if head_p is None else w)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_tables(positions: jax.Array, dim: int, theta: float) -> tuple[jax.Array, jax.Array]:
+    """cos/sin tables for ``positions`` (any leading shape), head-dim ``dim``."""
+    if dim % 2:
+        raise ValueError("rope dim must be even")
+    freqs = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # (..., dim/2)
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (B, S, H, D); cos/sin: (B, S, D/2) or (S, D/2)."""
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    x1, x2 = jnp.split(xf, 2, axis=-1)
+    if cos.ndim == 2:  # (S, D/2) -> broadcast batch
+        cos = cos[None, :, None, :]
+        sin = sin[None, :, None, :]
+    else:  # (B, S, D/2)
+        cos = cos[:, :, None, :]
+        sin = sin[:, :, None, :]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA / MQA; sliding window; qk-norm; KV cache)
+# ---------------------------------------------------------------------------
+
+
+def attention_init(scope: Scope, name: str, cfg: ArchConfig) -> None:
+    c = scope.child(name)
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    c.param("wq", (d, cfg.n_heads, hd), ("embed", "heads", "head_dim"), init="fan_in")
+    c.param("wk", (d, cfg.n_kv_heads, hd), ("embed", "kv_heads", "head_dim"), init="fan_in")
+    c.param("wv", (d, cfg.n_kv_heads, hd), ("embed", "kv_heads", "head_dim"), init="fan_in")
+    c.param("wo", (cfg.n_heads, hd, d), ("heads", "head_dim", "embed"), init="fan_in")
+    if cfg.use_bias:
+        c.param("bq", (cfg.n_heads, hd), ("heads", "head_dim"), init="zeros")
+        c.param("bk", (cfg.n_kv_heads, hd), ("kv_heads", "head_dim"), init="zeros")
+        c.param("bv", (cfg.n_kv_heads, hd), ("kv_heads", "head_dim"), init="zeros")
+    if cfg.qk_norm:
+        c.param("q_norm", (hd,), ("head_dim",), init="ones")
+        c.param("k_norm", (hd,), ("head_dim",), init="ones")
+
+
+def _head_rms(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (y * scale.astype(jnp.float32)).astype(dt)
+
+
+def make_cache(cfg: ArchConfig, batch: int, max_seq: int, dtype) -> dict:
+    hd = cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((batch, max_seq, cfg.n_kv_heads, hd), dtype),
+        "v": jnp.zeros((batch, max_seq, cfg.n_kv_heads, hd), dtype),
+        "index": jnp.zeros((), jnp.int32),
+    }
+
+
+def _attend(
+    q: jax.Array,  # (B, S, H, D)
+    k: jax.Array,  # (B, T, K, D)
+    v: jax.Array,  # (B, T, K, D)
+    mask: jax.Array,  # (B or 1, S, T) boolean, True = attend
+    cfg: ArchConfig,
+) -> jax.Array:
+    b, s, h, dh = q.shape
+    t, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, s, kv, g, dh)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+    if cfg.attn_logit_softcap > 0:
+        cap = cfg.attn_logit_softcap
+        scores = cap * jnp.tanh(scores / cap)
+    scores = jnp.where(mask[:, None, None, :, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    return out.reshape(b, s, h, dh)
+
+
+def _causal_window_mask(s: int, t: int, offset: jax.Array | int, window: int) -> jax.Array:
+    """(1, S, T) mask: query i (global pos offset+i) may see key j<=pos and,
+    with a window, j > pos - window."""
+    qpos = jnp.arange(s)[:, None] + offset
+    kpos = jnp.arange(t)[None, :]
+    m = kpos <= qpos
+    if window > 0:
+        m &= kpos > qpos - window
+    return m[None]
+
+
+def attention_apply(
+    p: Params,
+    x: jax.Array,
+    cfg: ArchConfig,
+    window: int = 0,
+    cache: dict | None = None,
+    mode: str = "train",
+    positions: jax.Array | None = None,
+    cross_kv: tuple[jax.Array, jax.Array] | None = None,
+    use_rope: bool = True,
+) -> tuple[jax.Array, dict | None]:
+    """Self- (or cross-) attention with optional KV cache.
+
+    ``cross_kv`` switches to cross-attention: (k, v) come precomputed from
+    the encoder; no cache/rope/mask beyond all-visible is applied.
+    """
+    b, s, d = x.shape
+    hd = cfg.resolved_head_dim
+    dt = x.dtype
+
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    if "bq" in p:
+        q = q + p["bq"].astype(dt)
+
+    if cross_kv is not None:
+        k, v = cross_kv
+        mask = jnp.ones((1, s, k.shape[1]), bool)
+        if cfg.qk_norm:
+            q = _head_rms(q, p["q_norm"], cfg.norm_eps)
+        out = _attend(q, k, v, mask, cfg)
+        y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dt))
+        return y, cache
+
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dt))
+    if "bk" in p:
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+
+    if cfg.qk_norm:
+        q = _head_rms(q, p["q_norm"], cfg.norm_eps)
+        k = _head_rms(k, p["k_norm"], cfg.norm_eps)
+
+    if mode == "decode":
+        if cache is None:
+            raise ValueError("decode mode requires a cache")
+        idx = cache["index"]
+        page = cache["k"].shape[1]
+        pos = idx[None] if positions is None else positions
+        if use_rope:
+            cos, sin = rope_tables(pos.reshape(1, -1), hd, cfg.rope_theta)
+            q = apply_rope(q, cos, sin)
+            k = apply_rope(k, cos, sin)
+        # Windowed layers use a ring page of size `window`: slot = pos % page.
+        # The ring holds exactly the last `window` keys, so no extra window
+        # mask term is needed; `slot <= idx` covers the cold-start fill.
+        write_at = idx % page  # == idx while idx < page; wraps only for ring pages
+        ck = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, write_at, 0, 0)
+        )
+        cv = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, write_at, 0, 0)
+        )
+        kslot = jnp.arange(page)[None, None, :]
+        mask = kslot <= idx
+        if window > 0 and page > window:
+            # Page larger than the window (short-seq case): real positions
+            # equal slots here, so apply the window term directly.
+            mask &= kslot > idx - window
+        out = _attend(q, ck.astype(dt), cv.astype(dt), mask, cfg)
+        new_cache = {"k": ck, "v": cv, "index": idx + s}
+    else:
+        if positions is None:
+            positions = jnp.arange(s)
+        if use_rope:
+            cos, sin = rope_tables(positions, hd, cfg.rope_theta)
+            q = apply_rope(q, cos, sin)
+            k = apply_rope(k, cos, sin)
+        if cfg.attn_impl == "flash":
+            # Pallas kernel path (TPU target; interpret off-TPU). Head-major
+            # layout in/out of the kernel.
+            from repro.kernels import flash_attention as _flash
+
+            out = _flash(
+                q.transpose(0, 2, 1, 3),
+                k.transpose(0, 2, 1, 3),
+                v.transpose(0, 2, 1, 3),
+                causal=True,
+                window=window,
+                logit_softcap=cfg.attn_logit_softcap,
+            ).transpose(0, 2, 1, 3)
+        else:
+            mask = _causal_window_mask(s, s, 0, window)
+            out = _attend(q, k, v, mask, cfg)
+        new_cache = cache
+        if mode == "prefill":
+            if cache is None:
+                raise ValueError("prefill mode requires a pre-allocated cache")
+            page = cache["k"].shape[1]
+            if s > page:
+                # Keep only the last `page` keys, rolled so that
+                # slot == position % page (ring invariant for decode).
+                k_tail = jnp.roll(k[:, -page:], s % page, axis=1)
+                v_tail = jnp.roll(v[:, -page:], s % page, axis=1)
+                ck = k_tail.astype(cache["k"].dtype)
+                cv = v_tail.astype(cache["v"].dtype)
+            else:
+                ck = jax.lax.dynamic_update_slice(
+                    cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0)
+                )
+                cv = jax.lax.dynamic_update_slice(
+                    cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0)
+                )
+            new_cache = {"k": ck, "v": cv, "index": jnp.asarray(s, jnp.int32)}
+
+    out = constrain(out, "batch", None, "act_heads", None)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dt))
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA — DeepSeek-V3 multi-head latent attention
+# ---------------------------------------------------------------------------
+
+
+def mla_init(scope: Scope, name: str, cfg: ArchConfig) -> None:
+    m = cfg.mla or MLAConfig()
+    c = scope.child(name)
+    d, h = cfg.d_model, cfg.n_heads
+    qk_head = m.qk_nope_head_dim + m.qk_rope_head_dim
+    c.param("wq_a", (d, m.q_lora_rank), ("embed", "q_lora"), init="fan_in")
+    c.param("q_a_norm", (m.q_lora_rank,), ("q_lora",), init="ones")
+    c.param("wq_b", (m.q_lora_rank, h, qk_head), ("q_lora", "heads", "head_dim"), init="fan_in")
+    c.param("wkv_a", (d, m.kv_lora_rank + m.qk_rope_head_dim), ("embed", "kv_lora"), init="fan_in")
+    c.param("kv_a_norm", (m.kv_lora_rank,), ("kv_lora",), init="ones")
+    c.param(
+        "wkv_b",
+        (m.kv_lora_rank, h, m.qk_nope_head_dim + m.v_head_dim),
+        ("kv_lora", "heads", "head_dim"),
+        init="fan_in",
+    )
+    c.param("wo", (h, m.v_head_dim, d), ("heads", "head_dim", "embed"), init="fan_in")
+
+
+def mla_make_cache(cfg: ArchConfig, batch: int, max_seq: int, dtype) -> dict:
+    m = cfg.mla or MLAConfig()
+    return {
+        "c_kv": jnp.zeros((batch, max_seq, m.kv_lora_rank), dtype),
+        "k_pe": jnp.zeros((batch, max_seq, m.qk_rope_head_dim), dtype),
+        "index": jnp.zeros((), jnp.int32),
+    }
+
+
+def _rms_vec(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (y * scale.astype(jnp.float32)).astype(dt)
+
+
+def mla_apply(
+    p: Params,
+    x: jax.Array,
+    cfg: ArchConfig,
+    cache: dict | None = None,
+    mode: str = "train",
+) -> tuple[jax.Array, dict | None]:
+    """MLA: queries/keys/values reconstructed from low-rank latents.
+
+    The decode cache stores only (c_kv, k_pe) — kv_lora_rank + rope_dim
+    floats per token (DeepSeek-V3's KV-cache compression), the paper-
+    analogue 'small fast tier' for serving.
+    """
+    m = cfg.mla or MLAConfig()
+    b, s, d = x.shape
+    h = cfg.n_heads
+    dt = x.dtype
+
+    cq = _rms_vec(x @ p["wq_a"].astype(dt), p["q_a_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsr,rhk->bshk", cq, p["wq_b"].astype(dt))
+    q_nope, q_pe = q[..., : m.qk_nope_head_dim], q[..., m.qk_nope_head_dim :]
+
+    kv_a = x @ p["wkv_a"].astype(dt)
+    c_kv, k_pe_in = kv_a[..., : m.kv_lora_rank], kv_a[..., m.kv_lora_rank :]
+    c_kv = _rms_vec(c_kv, p["kv_a_norm"], cfg.norm_eps)
+
+    if mode == "decode":
+        if cache is None:
+            raise ValueError("decode mode requires a cache")
+        idx = cache["index"]
+        pos = idx[None]
+        cos, sin = rope_tables(pos.reshape(1, -1), m.qk_rope_head_dim, cfg.rope_theta)
+        q_pe = apply_rope(q_pe, cos, sin)
+        k_pe_r = apply_rope(k_pe_in[:, :, None, :], cos, sin)[:, :, 0, :]
+        cc = jax.lax.dynamic_update_slice(
+            cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), (0, idx, 0)
+        )
+        cp = jax.lax.dynamic_update_slice(
+            cache["k_pe"], k_pe_r.astype(cache["k_pe"].dtype), (0, idx, 0)
+        )
+        t = cc.shape[1]
+        kv = jnp.einsum("btr,rhk->bthk", cc.astype(dt), p["wkv_b"].astype(dt))
+        k_nope, v = kv[..., : m.qk_nope_head_dim], kv[..., m.qk_nope_head_dim :]
+        kpos = jnp.arange(t)[None, None, :]
+        mask = kpos <= idx
+        scores = (
+            jnp.einsum("bshk,bthk->bhst", q_nope, k_nope)
+            + jnp.einsum("bshk,btk->bhst", q_pe, cp.astype(dt))
+        ).astype(jnp.float32)
+        scores = scores / jnp.sqrt(jnp.asarray(m.qk_nope_head_dim + m.qk_rope_head_dim, jnp.float32))
+        scores = jnp.where(mask[:, None, :, :], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1).astype(dt)
+        out = jnp.einsum("bhst,bthk->bshk", probs, v)
+        y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dt))
+        return y, {"c_kv": cc, "k_pe": cp, "index": idx + s}
+
+    positions = jnp.arange(s)
+    cos, sin = rope_tables(positions, m.qk_rope_head_dim, cfg.rope_theta)
+    q_pe = apply_rope(q_pe, cos, sin)
+    k_pe = apply_rope(k_pe_in[:, :, None, :], cos, sin)[:, :, 0, :]
+
+    kv = jnp.einsum("btr,rhk->bthk", c_kv, p["wkv_b"].astype(dt))
+    k_nope, v = kv[..., : m.qk_nope_head_dim], kv[..., m.qk_nope_head_dim :]
+    mask = _causal_window_mask(s, s, 0, 0)
+    scores = (
+        jnp.einsum("bshk,bthk->bhst", q_nope, k_nope)
+        + jnp.einsum("bshk,btk->bhst", q_pe, k_pe)
+    ).astype(jnp.float32)
+    scores = scores / jnp.sqrt(jnp.asarray(m.qk_nope_head_dim + m.qk_rope_head_dim, jnp.float32))
+    scores = jnp.where(mask[:, None, :, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(dt)
+    out = jnp.einsum("bhst,bthk->bshk", probs, v)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dt))
+
+    new_cache = cache
+    if mode == "prefill":
+        if cache is None:
+            raise ValueError("prefill mode requires a pre-allocated cache")
+        cc = jax.lax.dynamic_update_slice(cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), (0, 0, 0))
+        cp = jax.lax.dynamic_update_slice(cache["k_pe"], k_pe.astype(cache["k_pe"].dtype), (0, 0, 0))
+        new_cache = {"c_kv": cc, "k_pe": cp, "index": jnp.asarray(s, jnp.int32)}
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(scope: Scope, name: str, cfg: ArchConfig, d_ff: int | None = None) -> None:
+    c = scope.child(name)
+    d = cfg.d_model
+    ff = d_ff or cfg.d_ff
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        c.param("w_gate", (d, ff), ("embed", "ff"), init="fan_in")
+        c.param("w_up", (d, ff), ("embed", "ff"), init="fan_in")
+    else:
+        c.param("w_up", (d, ff), ("embed", "ff"), init="fan_in")
+        if cfg.use_bias:
+            c.param("b_up", (ff,), ("ff",), init="zeros")
+    c.param("w_down", (ff, d), ("ff", "embed"), init="fan_in")
+    if cfg.use_bias:
+        c.param("b_down", (d,), ("embed",), init="zeros")
+
+
+def mlp_apply(p: Params, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    dt = x.dtype
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        act = jax.nn.silu if cfg.mlp_type == "swiglu" else jax.nn.gelu
+        h = act(x @ p["w_gate"].astype(dt)) * (x @ p["w_up"].astype(dt))
+    else:
+        h = x @ p["w_up"].astype(dt)
+        if "b_up" in p:
+            h = h + p["b_up"].astype(dt)
+        h = jax.nn.gelu(h)
+    h = constrain(h, "batch", None, "act_ff")
+    y = h @ p["w_down"].astype(dt)
+    if "b_down" in p:
+        y = y + p["b_down"].astype(dt)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# MoE — sort-based dispatch (static shapes, capacity-bounded)
+# ---------------------------------------------------------------------------
+
+
+def moe_init(scope: Scope, name: str, cfg: ArchConfig) -> None:
+    mo = cfg.moe
+    assert mo is not None
+    c = scope.child(name)
+    d, e, f = cfg.d_model, mo.n_experts, mo.expert_ff
+    c.param("router", (d, e), ("embed", "experts"), init="fan_in")
+    c.param("w_gate", (e, d, f), ("experts", "embed", "expert_ff"), init="fan_in")
+    c.param("w_up", (e, d, f), ("experts", "embed", "expert_ff"), init="fan_in")
+    c.param("w_down", (e, f, d), ("experts", "expert_ff", "embed"), init="fan_in")
+    if mo.n_shared:
+        sh = c.child("shared")
+        sh.param("w_gate", (d, mo.n_shared * f), ("embed", "ff"), init="fan_in")
+        sh.param("w_up", (d, mo.n_shared * f), ("embed", "ff"), init="fan_in")
+        sh.param("w_down", (mo.n_shared * f, d), ("ff", "embed"), init="fan_in")
+
+
+def moe_apply(p: Params, x: jax.Array, cfg: ArchConfig) -> tuple[jax.Array, jax.Array]:
+    """Top-k routed experts + optional shared experts, group-local dispatch.
+
+    Tokens are split into ``g`` dispatch groups — one per data-parallel
+    shard when a mesh is active (``current_dp_groups``), else one group.
+    Routing, sorting, capacity and the scatter/gather all happen INSIDE a
+    group, so no index op ever crosses the data axis: the global-sort
+    formulation made XLA materialize (T*k, d)-sized masked all-reduces per
+    layer (240 GB fp32 on deepseek train_4k — §Perf iteration 4).
+
+    Within a group: assignments sorted by expert id, each token takes a
+    slot within its expert's capacity ``C = ceil(Tg*k/E * cf)``; overflow
+    drops (standard local-capacity semantics).  Expert FFN compute is a
+    (g, E, C) batch — g shards over (pod, data), E over model (deepseek)
+    or the expert ff dim over model when E cannot shard (grok).
+
+    Returns (output, aux_load_balance_loss).
+    """
+    from repro.nn.module import current_dp_groups
+
+    mo = cfg.moe
+    assert mo is not None
+    b, s, d = x.shape
+    dt = x.dtype
+    t = b * s
+    k = mo.top_k
+    e = mo.n_experts
+    xf = x.reshape(t, d)
+
+    g = current_dp_groups()
+    if g <= 1 or t % g:
+        g = 1
+    tg = t // g
+    tk = tg * k
+    xg = constrain(xf.reshape(g, tg, d), "dispatch", None, None)
+
+    logits = (xg @ p["router"].astype(dt)).astype(jnp.float32)  # (g, tg, e)
+    if mo.router_type == "sigmoid":
+        scores = jax.nn.sigmoid(logits)
+    else:
+        scores = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(scores, k)  # (g, tg, k)
+    if mo.normalize_gates:
+        gate_vals = gate_vals / (jnp.sum(gate_vals, axis=-1, keepdims=True) + 1e-9)
+
+    # Load-balance aux loss (Switch-style): E * sum_e f_e * p_e, per group.
+    probs = jax.nn.softmax(logits, axis=-1)
+    me = jnp.mean(probs, axis=1)  # (g, e)
+    one_hot_top1 = jax.nn.one_hot(expert_idx[..., 0], e, dtype=jnp.float32)
+    ce = jnp.mean(one_hot_top1, axis=1)
+    aux = e * jnp.mean(jnp.sum(me * ce, axis=-1))
+
+    cap = int(max(1, round(tg * k / e * mo.capacity_factor)))
+
+    flat_e = expert_idx.reshape(g, tk)
+    flat_tok = jnp.broadcast_to(jnp.repeat(jnp.arange(tg), k)[None], (g, tk))
+    flat_gate = gate_vals.reshape(g, tk).astype(dt)
+
+    order = jnp.argsort(flat_e, axis=1, stable=True)  # (g, tk)
+    se = jnp.take_along_axis(flat_e, order, axis=1)
+    stok = jnp.take_along_axis(flat_tok, order, axis=1)
+    sgate = jnp.take_along_axis(flat_gate, order, axis=1)
+    # slot within the expert run = rank - first index of the run
+    group_start = jax.vmap(lambda a: jnp.searchsorted(a, a, side="left"))(se)
+    slot = jnp.arange(tk)[None, :] - group_start
+    keep = slot < cap
+
+    gidx = jnp.arange(g)[:, None]
+    dest = jnp.where(keep, se * cap + slot, e * cap)  # dropped -> scratch row
+    rows = xg[gidx, stok] * keep[..., None].astype(dt)  # (g, tk, d) group-local gather
+    buf = jnp.zeros((g, e * cap + 1, d), dt).at[gidx, dest].set(rows)
+    buf = buf[:, :-1].reshape(g, e, cap, d)
+    buf = constrain(buf, "dispatch", "experts", None, None)
+
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", buf, p["w_gate"].astype(dt))) * jnp.einsum(
+        "gecd,edf->gecf", buf, p["w_up"].astype(dt)
+    )
+    # Constrain BOTH candidate shardings: when experts shard (deepseek) the
+    # ff axis resolves to None; when experts cannot shard (grok) the ff
+    # axis takes the model axis — P(...,None) here would force an
+    # all-gather of the f-sharded intermediate (§Perf iteration 3).
+    h = constrain(h, "dispatch", "experts", None, "expert_ff")
+    y_buf = jnp.einsum("gecf,efd->gecd", h, p["w_down"].astype(dt))
+    y_buf = constrain(y_buf, "dispatch", "experts", None, None).reshape(g, e * cap, d)
+
+    src = jnp.where(keep, se * cap + slot, 0)
+    gathered = y_buf[gidx, src] * (keep.astype(dt) * sgate)[..., None]
+    y = jnp.zeros((g, tg, d), dt).at[gidx, stok].add(gathered)
+    # Combine output is token-major again: pin it back to the DP sharding
+    # so the expert->token gather resolves locally per group instead of
+    # all-gathering the (g, E*C, d) expert outputs (§Perf iteration 8).
+    y = constrain(y, "dispatch", None, None)
+    y = y.reshape(t, d)
+
+    if mo.n_shared:
+        sp = p["shared"]
+        hs = jax.nn.silu(xf @ sp["w_gate"].astype(dt)) * (xf @ sp["w_up"].astype(dt))
+        y = y + hs @ sp["w_down"].astype(dt)
+
+    return y.reshape(b, s, d), aux.astype(jnp.float32)

@@ -1,0 +1,332 @@
+"""Recurrent blocks: RG-LRU (Griffin/RecurrentGemma) and xLSTM cells.
+
+Both provide a full-sequence ``train`` path and a single-step ``decode``
+path operating on an explicit state pytree (the recurrent analogue of the
+KV cache — O(1) in sequence length, which is why the ssm/hybrid archs run
+the long_500k shape).
+
+* RG-LRU uses an **associative scan** over the linear recurrence
+  ``h_t = a_t h_{t-1} + b_t`` — O(log S) depth, parallel on TPU.
+* mLSTM/sLSTM use ``jax.lax.scan`` over time (exponential gating with the
+  max-stabilizer is not associative in that form); the chunkwise-parallel
+  Pallas kernel in ``repro.kernels.mlstm`` is the performance path.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.nn.module import Scope
+
+Params = Any
+
+RGLRU_C = 8.0  # Griffin's fixed recurrence sharpness
+
+
+# ---------------------------------------------------------------------------
+# Temporal conv (both Griffin and xLSTM use a short depthwise conv)
+# ---------------------------------------------------------------------------
+
+
+def conv1d_init(scope: Scope, name: str, width: int, dim: int) -> None:
+    c = scope.child(name)
+    c.param("w", (width, dim), ("conv", "rnn"), init="fan_in")
+    c.param("b", (dim,), ("rnn",), init="zeros")
+
+
+def conv1d_apply(p: Params, x: jax.Array, state: jax.Array | None = None) -> tuple[jax.Array, jax.Array]:
+    """Causal depthwise conv. x: (B,S,D). state: (B,width-1,D) history.
+
+    Returns (y, new_state). new_state carries the last width-1 inputs.
+    """
+    w = p["w"].astype(x.dtype)
+    width = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = sum(xp[:, i : i + x.shape[1], :] * w[i] for i in range(width))
+    y = y + p["b"].astype(x.dtype)
+    new_state = xp[:, -(width - 1) :, :] if width > 1 else state
+    return y, new_state
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU
+# ---------------------------------------------------------------------------
+
+
+def rglru_init(scope: Scope, name: str, cfg: ArchConfig) -> None:
+    r = cfg.recurrent
+    assert r is not None
+    w = r.lru_width or cfg.d_model
+    d = cfg.d_model
+    c = scope.child(name)
+    c.param("w_in", (d, w), ("embed", "rnn"), init="fan_in")  # recurrence branch
+    c.param("w_gate_branch", (d, w), ("embed", "rnn"), init="fan_in")  # gelu gate branch
+    conv1d_init(c, "conv", r.conv_width, w)
+    c.param("w_a", (w, w), ("rnn", None), init="fan_in")  # recurrence gate
+    c.param("b_a", (w,), ("rnn",), init="zeros")
+    c.param("w_x", (w, w), ("rnn", None), init="fan_in")  # input gate
+    c.param("b_x", (w,), ("rnn",), init="zeros")
+    c.param("lam", (w,), ("rnn",), init="uniform", scale=1.0)  # Λ -> a in (0,1)
+    c.param("w_out", (w, d), ("rnn", "embed"), init="fan_in")
+
+
+def rglru_scan(
+    p: Params, u: jax.Array, h0: jax.Array | None
+) -> tuple[jax.Array, jax.Array]:
+    """The gated linear recurrence via associative scan.
+
+    u: (B,S,W) post-conv inputs. h0: (B,W) carry-in (decode) or None.
+    Returns (h_all (B,S,W), h_last (B,W)). fp32 recurrence state.
+    """
+    dt = u.dtype
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf @ p["w_a"].astype(jnp.float32) + p["b_a"].astype(jnp.float32))
+    i = jax.nn.sigmoid(uf @ p["w_x"].astype(jnp.float32) + p["b_x"].astype(jnp.float32))
+    log_a = -RGLRU_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r  # (B,S,W)
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * uf)
+
+    if h0 is not None:
+        # Fold the carry into the first step: h_1 = a_1 h_0 + b_1.
+        gated = gated.at[:, 0, :].add(a[:, 0, :] * h0.astype(jnp.float32))
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, a2 * b1 + b2
+
+    a_sc, h = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    return h.astype(dt), h[:, -1, :]
+
+
+def rglru_block_apply(
+    p: Params,
+    x: jax.Array,
+    cfg: ArchConfig,
+    state: dict | None = None,
+) -> tuple[jax.Array, dict]:
+    """Full Griffin recurrent block: gate branch ⊙ RG-LRU branch → out proj.
+
+    state = {"h": (B,W) fp32, "conv": (B,width-1,W)}; pass None to start
+    from zeros (train/prefill).
+    """
+    dt = x.dtype
+    gate = jax.nn.gelu(x @ p["w_gate_branch"].astype(dt))
+    u = x @ p["w_in"].astype(dt)
+    # Read the conv state in compute dtype; write it back in cache dtype so
+    # scan carries/ys keep stable types regardless of cache precision.
+    conv_state = None if state is None else state["conv"].astype(dt)
+    h0 = None if state is None else state["h"]
+    u, new_conv = conv1d_apply(p["conv"], u, conv_state)
+    if state is not None:
+        new_conv = new_conv.astype(state["conv"].dtype)
+    h, h_last = rglru_scan(p, u, h0)
+    y = (gate * h) @ p["w_out"].astype(dt)
+    return y, {"h": h_last.astype(jnp.float32), "conv": new_conv}
+
+
+def rglru_make_state(cfg: ArchConfig, batch: int, dtype) -> dict:
+    r = cfg.recurrent
+    assert r is not None
+    w = r.lru_width or cfg.d_model
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, r.conv_width - 1, w), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# mLSTM — matrix memory with exponential gating (xLSTM)
+# ---------------------------------------------------------------------------
+
+
+def mlstm_init(scope: Scope, name: str, cfg: ArchConfig) -> None:
+    r = cfg.recurrent
+    assert r is not None
+    d = cfg.d_model
+    dp = int(d * r.mlstm_proj_factor)
+    h = cfg.n_heads
+    c = scope.child(name)
+    c.param("w_up", (d, 2 * dp), ("embed", "ff"), init="fan_in")  # (x_inner, z gate)
+    conv1d_init(c, "conv", 4, dp)
+    c.param("wq", (dp, dp), ("rnn", None), init="fan_in")
+    c.param("wk", (dp, dp), ("rnn", None), init="fan_in")
+    c.param("wv", (dp, dp), ("rnn", None), init="fan_in")
+    c.param("w_if", (dp, 2 * h), ("rnn", None), init="fan_in")  # i,f gate pre-acts
+    c.param("b_if", (2 * h,), (None,), init="zeros")
+    c.param("skip", (dp,), ("rnn",), init="ones")  # learnable conv skip
+    c.param("w_down", (dp, d), ("ff", "embed"), init="fan_in")
+
+
+def mlstm_make_state(cfg: ArchConfig, batch: int) -> dict:
+    r = cfg.recurrent
+    assert r is not None
+    dp = int(cfg.d_model * r.mlstm_proj_factor)
+    h = cfg.n_heads
+    dh = dp // h
+    return {
+        "C": jnp.zeros((batch, h, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, h, dh), jnp.float32),
+        "m": jnp.full((batch, h), -jnp.inf, jnp.float32),
+        "conv": jnp.zeros((batch, 3, dp), jnp.float32),
+    }
+
+
+def _mlstm_cell(carry, inp):
+    """One time step. carry: (C,n,m); inp: (q,k,v,i_pre,f_pre) per head."""
+    C, n, m = carry
+    q, k, v, ip, fp = inp  # q,k,v: (B,H,dh); ip,fp: (B,H)
+    no_hist = jnp.isinf(m) & (m < 0)  # first step: empty history
+    m_safe = jnp.where(no_hist, 0.0, m)  # NaN-free in both where-branches
+    m_new = jnp.maximum(jnp.where(no_hist, ip, fp + m_safe), ip)
+    i_g = jnp.exp(ip - m_new)
+    f_g = jnp.where(no_hist, 0.0, jnp.exp(fp + m_safe - m_new))
+    C_new = f_g[..., None, None] * C + i_g[..., None, None] * (v[..., :, None] * k[..., None, :])
+    n_new = f_g[..., None] * n + i_g[..., None] * k
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n_new, q)), 1.0)
+    h = jnp.einsum("bhde,bhe->bhd", C_new, q) / denom[..., None]
+    return (C_new, n_new, m_new), h
+
+
+def mlstm_block_apply(
+    p: Params,
+    x: jax.Array,
+    cfg: ArchConfig,
+    state: dict | None = None,
+) -> tuple[jax.Array, dict]:
+    """xLSTM mLSTM block (pre-LN residual body handled by the caller)."""
+    r = cfg.recurrent
+    assert r is not None
+    b, s, d = x.shape
+    dt = x.dtype
+    dp = int(d * r.mlstm_proj_factor)
+    nh = cfg.n_heads
+    dh = dp // nh
+
+    up = x @ p["w_up"].astype(dt)
+    x_in, z = up[..., :dp], up[..., dp:]
+    conv_state = None if state is None else state["conv"].astype(dt)
+    x_conv, new_conv = conv1d_apply(p["conv"], x_in, conv_state)
+    x_conv = jax.nn.silu(x_conv)
+
+    q = (x_conv @ p["wq"].astype(dt)).reshape(b, s, nh, dh).astype(jnp.float32)
+    k = (x_conv @ p["wk"].astype(dt)).reshape(b, s, nh, dh).astype(jnp.float32) / jnp.sqrt(
+        jnp.asarray(dh, jnp.float32)
+    )
+    v = (x_in @ p["wv"].astype(dt)).reshape(b, s, nh, dh).astype(jnp.float32)
+    if_pre = (x_conv @ p["w_if"].astype(dt) + p["b_if"].astype(dt)).astype(jnp.float32)
+    ip, fp = if_pre[..., :nh], if_pre[..., nh:]
+    fp = -jax.nn.softplus(-fp)  # log sigmoid forget gate (stable)
+
+    if state is None:
+        C0 = jnp.zeros((b, nh, dh, dh), jnp.float32)
+        n0 = jnp.zeros((b, nh, dh), jnp.float32)
+        m0 = jnp.full((b, nh), -jnp.inf, jnp.float32)
+    else:
+        C0, n0, m0 = state["C"], state["n"], state["m"]
+
+    def step(carry, t_inp):
+        return _mlstm_cell(carry, t_inp)
+
+    inputs = (
+        q.transpose(1, 0, 2, 3),
+        k.transpose(1, 0, 2, 3),
+        v.transpose(1, 0, 2, 3),
+        ip.transpose(1, 0, 2),
+        fp.transpose(1, 0, 2),
+    )
+    (C_f, n_f, m_f), hs = jax.lax.scan(step, (C0, n0, m0), inputs)
+    h = hs.transpose(1, 0, 2, 3).reshape(b, s, dp).astype(dt)
+
+    h = h + p["skip"].astype(dt) * x_conv
+    y = (h * jax.nn.silu(z)) @ p["w_down"].astype(dt)
+    new_state = {"C": C_f, "n": n_f, "m": m_f, "conv": new_conv.astype(jnp.float32)}
+    return y, new_state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM — scalar memory, block-diagonal recurrence (xLSTM)
+# ---------------------------------------------------------------------------
+
+
+def slstm_init(scope: Scope, name: str, cfg: ArchConfig) -> None:
+    r = cfg.recurrent
+    assert r is not None
+    d = cfg.d_model
+    h = cfg.n_heads
+    dh = d // h
+    c = scope.child(name)
+    for g in ("i", "f", "z", "o"):
+        c.param(f"w_{g}", (d, d), ("embed", "rnn"), init="fan_in")
+        c.param(f"r_{g}", (h, dh, dh), ("heads", None, None), init="fan_in")  # block-diag
+        c.param(f"b_{g}", (d,), ("rnn",), init="zeros")
+    ff = int(d * r.slstm_proj_factor)
+    c.param("w_ff_up", (d, 2 * ff), ("embed", "ff"), init="fan_in")
+    c.param("w_ff_down", (ff, d), ("ff", "embed"), init="fan_in")
+
+
+def slstm_make_state(cfg: ArchConfig, batch: int) -> dict:
+    d = cfg.d_model
+    return {
+        "c": jnp.zeros((batch, d), jnp.float32),
+        "n": jnp.zeros((batch, d), jnp.float32),
+        "m": jnp.full((batch, d), -jnp.inf, jnp.float32),
+        "h": jnp.zeros((batch, d), jnp.float32),
+    }
+
+
+def slstm_block_apply(
+    p: Params,
+    x: jax.Array,
+    cfg: ArchConfig,
+    state: dict | None = None,
+) -> tuple[jax.Array, dict]:
+    b, s, d = x.shape
+    dt = x.dtype
+    nh = cfg.n_heads
+    dh = d // nh
+
+    pre = {g: (x @ p[f"w_{g}"].astype(dt) + p[f"b_{g}"].astype(dt)).astype(jnp.float32) for g in "ifzo"}
+    if state is None:
+        state = slstm_make_state(cfg, b)
+    c0, n0, m0, h0 = state["c"], state["n"], state["m"], state["h"]
+
+    r_mats = {g: p[f"r_{g}"].astype(jnp.float32) for g in "ifzo"}
+
+    def step(carry, t_pre):
+        c, n, m, h = carry
+        hh = h.reshape(b, nh, dh)
+
+        def rec(g):
+            return jnp.einsum("bhd,hde->bhe", hh, r_mats[g]).reshape(b, d)
+
+        ip = t_pre["i"] + rec("i")
+        fp = t_pre["f"] + rec("f")
+        zp = jnp.tanh(t_pre["z"] + rec("z"))
+        op = jax.nn.sigmoid(t_pre["o"] + rec("o"))
+        fp = -jax.nn.softplus(-fp)  # log sigmoid
+        no_hist = jnp.isinf(m) & (m < 0)
+        m_safe = jnp.where(no_hist, 0.0, m)
+        m_new = jnp.maximum(jnp.where(no_hist, ip, fp + m_safe), ip)
+        i_g = jnp.exp(ip - m_new)
+        f_g = jnp.where(no_hist, 0.0, jnp.exp(fp + m_safe - m_new))
+        c_new = f_g * c + i_g * zp
+        n_new = f_g * n + i_g
+        h_new = op * c_new / jnp.maximum(n_new, 1.0)
+        return (c_new, n_new, m_new, h_new), h_new
+
+    seq_pre = {g: pre[g].transpose(1, 0, 2) for g in pre}
+    (c_f, n_f, m_f, h_f), hs = jax.lax.scan(step, (c0, n0, m0, h0), seq_pre)
+    h_seq = hs.transpose(1, 0, 2).astype(dt)
+
+    ff = p["w_ff_up"].shape[1] // 2
+    up = h_seq @ p["w_ff_up"].astype(dt)
+    y = (jax.nn.silu(up[..., :ff]) * up[..., ff:]) @ p["w_ff_down"].astype(dt)
+    new_state = {"c": c_f, "n": n_f, "m": m_f, "h": h_f}
+    return y, new_state

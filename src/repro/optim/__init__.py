@@ -1,0 +1,6 @@
+"""Optimizers and distributed-optimization transforms."""
+
+from repro.optim.adamw import AdamW, apply_updates, clip_by_global_norm, cosine_warmup
+from repro.optim.compression import topk_compress_with_ef
+
+__all__ = ["AdamW", "apply_updates", "clip_by_global_norm", "cosine_warmup", "topk_compress_with_ef"]

@@ -1,0 +1,13 @@
+"""Distributed-runtime substrate: checkpointing, failure handling, stragglers."""
+
+from repro.runtime.checkpoint import CheckpointManager
+from repro.runtime.failure import FailureInjector, Heartbeat, SimulatedFailure
+from repro.runtime.straggler import StepTimeMonitor
+
+__all__ = [
+    "CheckpointManager",
+    "FailureInjector",
+    "Heartbeat",
+    "SimulatedFailure",
+    "StepTimeMonitor",
+]

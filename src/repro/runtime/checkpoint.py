@@ -1,0 +1,198 @@
+"""Two-level checkpointing over the TwoLevelStore.
+
+This is the paper's architecture applied to training state (DESIGN.md §2,
+row L1): the fast path writes the checkpoint into the compute-host memory
+tier (Tachyon analogue — memory-speed, survives process restart only if
+the tier outlives the process); durability comes from the PFS tier.
+
+* ``mode="sync"``  — paper write mode (c): synchronous write-through.
+  ``save()`` returns only after PFS stripes + CRCs are on disk.
+* ``mode="async"`` — beyond-paper: ``save()`` returns after the memory-tier
+  copy (fast, training resumes immediately); a background flusher drains
+  to the PFS tier.  ``wait_until_durable()`` is the barrier.
+
+Checkpoint layout inside the store (atomic-commit protocol)::
+
+    ckpt/<tag>/step_00000042/leaves      one blob, concatenated leaf bytes
+    ckpt/<tag>/step_00000042/manifest    JSON: keypath -> {shape,dtype,offset,size}
+    ckpt/<tag>/step_00000042/COMMIT      written last; restore only sees
+                                         committed steps
+
+Restore takes a **template pytree** (the abstract train state from
+``init``) and fills leaves by keypath — this makes restore *elastic*: the
+stored arrays are full logical arrays, so restoring onto a different
+device count / mesh is a restore-time re-shard (``restore_sharded``).
+"""
+
+from __future__ import annotations
+
+import json
+from typing import Any
+
+import jax
+import numpy as np
+
+from repro.core.store import ReadMode, TwoLevelStore, WriteMode
+
+PyTree = Any
+
+
+def _keystr(path) -> str:
+    return jax.tree_util.keystr(path)
+
+
+def _flatten_with_names(tree: PyTree) -> list[tuple[str, Any]]:
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return [(_keystr(p), v) for p, v in leaves]
+
+
+class CheckpointManager:
+    """Save/restore train-state pytrees through the two-level store."""
+
+    def __init__(
+        self,
+        store: TwoLevelStore,
+        tag: str = "default",
+        mode: str = "sync",
+        keep_last: int = 3,
+    ) -> None:
+        if mode not in ("sync", "async", "memory_only"):
+            raise ValueError(f"mode must be sync/async/memory_only, got {mode!r}")
+        self.store = store
+        self.tag = tag
+        self.mode = mode
+        self.keep_last = keep_last
+
+    # -------------------------------------------------------------- naming
+
+    def _prefix(self, step: int) -> str:
+        return f"ckpt/{self.tag}/step_{step:08d}"
+
+    def _write_mode(self) -> WriteMode:
+        return {
+            "sync": WriteMode.WRITE_THROUGH,
+            "async": WriteMode.ASYNC_WRITEBACK,
+            "memory_only": WriteMode.MEMORY_ONLY,
+        }[self.mode]
+
+    # ---------------------------------------------------------------- save
+
+    def save(self, step: int, state: PyTree) -> None:
+        """Serialize and store one checkpoint; commit marker written last."""
+        named = _flatten_with_names(state)
+        manifest: dict[str, dict] = {}
+        parts: list[bytes] = []
+        offset = 0
+        for name, leaf in named:
+            arr = np.asarray(jax.device_get(leaf))
+            raw = np.ascontiguousarray(arr).tobytes()
+            manifest[name] = {
+                "shape": list(arr.shape),
+                "dtype": str(arr.dtype),
+                "offset": offset,
+                "size": len(raw),
+            }
+            parts.append(raw)
+            offset += len(raw)
+        blob = b"".join(parts)
+        mode = self._write_mode()
+        prefix = self._prefix(step)
+        self.store.put(f"{prefix}/leaves", blob, mode=mode)
+        self.store.put(f"{prefix}/manifest", json.dumps(manifest).encode(), mode=mode)
+        # Commit marker LAST: a crash mid-save leaves an uncommitted step
+        # that restore ignores and gc() reaps.
+        self.store.put(f"{prefix}/COMMIT", str(len(blob)).encode(), mode=mode)
+        self.gc()
+
+    def wait_until_durable(self) -> None:
+        """Barrier: all async-written checkpoints are on the PFS tier."""
+        self.store.drain()
+
+    # ------------------------------------------------------------- restore
+
+    def steps(self, committed_only: bool = True) -> list[int]:
+        base = f"ckpt/{self.tag}/"
+        steps = set()
+        committed = set()
+        for name in self.store.list_files():
+            if not name.startswith(base):
+                continue
+            rest = name[len(base) :]
+            if "/" not in rest:
+                continue
+            stepdir, leafname = rest.split("/", 1)
+            if not stepdir.startswith("step_"):
+                continue
+            s = int(stepdir[len("step_") :])
+            steps.add(s)
+            if leafname == "COMMIT":
+                committed.add(s)
+        return sorted(committed if committed_only else steps)
+
+    def latest_step(self) -> int | None:
+        steps = self.steps()
+        return steps[-1] if steps else None
+
+    def restore(self, template: PyTree, step: int | None = None) -> tuple[int, PyTree]:
+        """Fill ``template``'s leaves from the checkpoint at ``step`` (or latest)."""
+        if step is None:
+            step = self.latest_step()
+            if step is None:
+                raise FileNotFoundError(f"no committed checkpoint under tag {self.tag!r}")
+        prefix = self._prefix(step)
+        manifest = json.loads(self.store.get(f"{prefix}/manifest").decode())
+        blob = self.store.get(f"{prefix}/leaves")
+
+        def fill(path, leaf):
+            name = _keystr(path)
+            try:
+                meta = manifest[name]
+            except KeyError:
+                raise KeyError(
+                    f"checkpoint step {step} has no leaf {name!r}; "
+                    f"template/checkpoint structure mismatch"
+                ) from None
+            raw = blob[meta["offset"] : meta["offset"] + meta["size"]]
+            arr = np.frombuffer(raw, dtype=np.dtype(meta["dtype"])).reshape(meta["shape"])
+            want = getattr(leaf, "shape", None)
+            if want is not None and tuple(want) != tuple(arr.shape):
+                raise ValueError(
+                    f"shape mismatch for {name!r}: checkpoint {arr.shape} vs template {want}"
+                )
+            return arr.copy()
+
+        restored = jax.tree_util.tree_map_with_path(fill, template)
+        return step, restored
+
+    def restore_sharded(
+        self,
+        template: PyTree,
+        shardings: PyTree,
+        step: int | None = None,
+    ) -> tuple[int, PyTree]:
+        """Elastic restore: place each leaf with its (possibly new) sharding.
+
+        Because checkpoints hold full logical arrays, the target mesh may
+        have a different device count than the mesh that saved them —
+        resharding is just ``jax.device_put`` against the new sharding.
+        """
+        step, host_tree = self.restore(template, step)
+        placed = jax.tree_util.tree_map(jax.device_put, host_tree, shardings)
+        return step, placed
+
+    # ----------------------------------------------------------------- gc
+
+    def gc(self) -> None:
+        """Delete all but the newest ``keep_last`` committed checkpoints,
+        plus any uncommitted debris older than the newest commit."""
+        committed = self.steps(committed_only=True)
+        doomed = set(committed[: -self.keep_last]) if self.keep_last > 0 else set()
+        if committed:
+            newest = committed[-1]
+            for s in self.steps(committed_only=False):
+                if s < newest and s not in committed:
+                    doomed.add(s)  # crashed, uncommitted save
+        for s in doomed:
+            prefix = self._prefix(s)
+            for leaf in ("COMMIT", "manifest", "leaves"):
+                self.store.delete(f"{prefix}/{leaf}")

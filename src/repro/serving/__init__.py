@@ -1,0 +1,5 @@
+"""Serving substrate: the two-level KV cache (HBM <-> host offload)."""
+
+from repro.serving.kv_offload import TieredKVCache
+
+__all__ = ["TieredKVCache"]

@@ -1,0 +1,154 @@
+"""Two-level KV cache: a hot device window + cold host-offloaded history.
+
+DESIGN.md §2 row L2 — the paper's architecture one level down the
+hierarchy: the *device HBM* plays Tachyon (small, memory-speed, holds the
+hot working set), *host DRAM* plays OrangeFS (large, slower, holds
+everything).  The paper's Eq. 7 describes the blended read rate with
+``f = hot_len / total_len``; its read mode (f) — nearest copy first, fall
+through to the big tier — is exactly the decode path here, and the
+``tiered_decode_attention`` Pallas kernel consumes the two tiers
+directly (hot VMEM-resident, cold streamed).
+
+Semantics:
+* ``append(k, v)`` writes the newest token into the hot ring (device).
+* When the ring wraps, the evicted token has ALREADY been written through
+  to the host tier (write mode (c): every append is dual-written, so
+  eviction is free — the paper's low-cost fault-tolerance argument).
+* ``device_views()`` returns (hot_k, hot_v, hot_len) device arrays;
+  ``host_views()`` returns the cold prefix (everything older than the
+  ring) as numpy, staged to device on demand in ``cold_device_slices``.
+* ``attend(q)`` runs the tiered decode kernel over both tiers.
+
+The capacity story mirrors the paper: device budget = O(window), host
+budget = O(total) — long contexts cost host memory, not HBM.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class TieredKVStats:
+    appended: int = 0
+    hot_hits_tokens: int = 0
+    cold_reads_tokens: int = 0
+
+    def hot_fraction(self) -> float:
+        total = self.hot_hits_tokens + self.cold_reads_tokens
+        return self.hot_hits_tokens / total if total else 1.0
+
+
+class TieredKVCache:
+    """Per-layer two-level KV cache for one decoding batch.
+
+    Shapes: k, v tokens are (B, KV, D). Hot ring: (B, KV, W, D) on device.
+    Cold store: host numpy (B, KV, T_max, D), written through on append.
+    """
+
+    def __init__(self, batch: int, kv_heads: int, head_dim: int, window: int, max_len: int, dtype=jnp.bfloat16):
+        if window <= 0 or max_len < window:
+            raise ValueError("need 0 < window <= max_len")
+        self.batch, self.kv, self.dim = batch, kv_heads, head_dim
+        self.window, self.max_len = window, max_len
+        self.dtype = dtype
+        self.hot_k = jnp.zeros((batch, kv_heads, window, head_dim), dtype)
+        self.hot_v = jnp.zeros((batch, kv_heads, window, head_dim), dtype)
+        # host tier (the 'OrangeFS' of the pair): full history, numpy
+        self.cold_k = np.zeros((batch, kv_heads, max_len, head_dim), np.float32)
+        self.cold_v = np.zeros((batch, kv_heads, max_len, head_dim), np.float32)
+        self.length = 0
+        self.stats = TieredKVStats()
+
+    # ------------------------------------------------------------- append
+
+    def append(self, k: jax.Array, v: jax.Array) -> None:
+        """Write one token (B, KV, D): hot ring slot + host write-through."""
+        if self.length >= self.max_len:
+            raise ValueError("cache full")
+        slot = self.length % self.window
+        self.hot_k = self.hot_k.at[:, :, slot, :].set(k.astype(self.dtype))
+        self.hot_v = self.hot_v.at[:, :, slot, :].set(v.astype(self.dtype))
+        # write mode (c): synchronous write-through to the big tier
+        self.cold_k[:, :, self.length, :] = np.asarray(k, np.float32)
+        self.cold_v[:, :, self.length, :] = np.asarray(v, np.float32)
+        self.length += 1
+        self.stats.appended += 1
+
+    # -------------------------------------------------------------- views
+
+    @property
+    def hot_len(self) -> int:
+        return min(self.length, self.window)
+
+    @property
+    def cold_len(self) -> int:
+        return max(0, self.length - self.window)
+
+    def device_views(self) -> tuple[jax.Array, jax.Array, int]:
+        return self.hot_k, self.hot_v, self.hot_len
+
+    def cold_device_slices(self) -> tuple[jax.Array, jax.Array]:
+        """Stage the cold prefix to device (the 4 MB-buffer path of the
+        paper corresponds to the H2D DMA here)."""
+        n = self.cold_len
+        ck = jnp.asarray(self.cold_k[:, :, :n, :], self.dtype)
+        cv = jnp.asarray(self.cold_v[:, :, :n, :], self.dtype)
+        return ck, cv
+
+    # ------------------------------------------------------------- attend
+
+    def attend(self, q: jax.Array, block_k: int = 512) -> jax.Array:
+        """Tiered decode attention for q (B, H, 1, D) over both tiers.
+
+        Ring slots map slot -> absolute position ``p ≡ slot (mod W)``; the
+        kernel expects hot keys ordered newest-window with valid length, so
+        we unroll the ring into chronological order first (cheap: W slots).
+        """
+        from repro.kernels import tiered_decode_attention
+
+        hot_n = self.hot_len
+        cold_n = self.cold_len
+        self.stats.hot_hits_tokens += hot_n
+        self.stats.cold_reads_tokens += cold_n
+
+        # chronological hot window: positions [length-hot_n, length)
+        start = self.length - hot_n
+        order = jnp.arange(start, self.length) % self.window
+        hk = jnp.take(self.hot_k, order, axis=2)
+        hv = jnp.take(self.hot_v, order, axis=2)
+
+        if cold_n == 0:
+            ck = jnp.zeros((self.batch, self.kv, block_k, self.dim), self.dtype)
+            cv = jnp.zeros_like(ck)
+        else:
+            ck, cv = self.cold_device_slices()
+        return tiered_decode_attention(
+            q.astype(self.dtype), hk, hv, ck, cv,
+            hot_len=hot_n, cold_len=cold_n, block_k=block_k,
+        )
+
+    # ----------------------------------------------------------- recovery
+
+    def rebuild_hot_from_cold(self) -> None:
+        """Device loss: reconstruct the hot ring from the host tier —
+        the paper's fault-tolerance path (re-read checkpointed blocks)."""
+        n = self.hot_len
+        start = self.length - n
+        ring_k = np.zeros((self.batch, self.kv, self.window, self.dim), np.float32)
+        ring_v = np.zeros_like(ring_k)
+        for p in range(start, self.length):
+            ring_k[:, :, p % self.window, :] = self.cold_k[:, :, p, :]
+            ring_v[:, :, p % self.window, :] = self.cold_v[:, :, p, :]
+        self.hot_k = jnp.asarray(ring_k, self.dtype)
+        self.hot_v = jnp.asarray(ring_v, self.dtype)
+
+    def device_bytes(self) -> int:
+        return 2 * self.batch * self.kv * self.window * self.dim * jnp.dtype(self.dtype).itemsize
+
+    def host_bytes(self) -> int:
+        return 2 * self.batch * self.kv * self.max_len * self.dim * 4

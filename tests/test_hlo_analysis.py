@@ -1,0 +1,63 @@
+"""Unit tests for the trip-count-aware HLO analyzer (§Roofline substrate)."""
+
+import textwrap
+
+from repro.launch.hlo_analysis import analyze, analyze_computations, multipliers
+
+SYNTHETIC = textwrap.dedent(
+    """
+    HloModule jit_f
+
+    %inner_body.1 (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+      %p = parameter(0)
+      %lhs = f32[8,16]{1,0} constant(0)
+      %rhs = f32[16,8]{1,0} constant(0)
+      %d = f32[8,8]{1,0} dot(%lhs, %rhs), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+      %ar = f32[8,8]{1,0} all-reduce(%d), channel_id=1, to_apply=%add.0
+      ROOT %t = (s32[], f32[8,8]) tuple(%c, %ar)
+    }
+
+    %outer_body.2 (q: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+      %q = parameter(0)
+      %w = (s32[], f32[8,8]) while(%q), condition=%cond.9, body=%inner_body.1, backend_config={"known_trip_count":{"n":"3"}}
+      ROOT %t2 = (s32[], f32[8,8]) tuple(%c2, %w)
+    }
+
+    ENTRY %main.3 (a: f32[8,8]) -> f32[8,8] {
+      %a = parameter(0)
+      %w2 = (s32[], f32[8,8]) while(%init), condition=%cond.8, body=%outer_body.2, backend_config={"known_trip_count":{"n":"5"}}
+      %g = f32[32,8]{1,0} all-gather(%a), channel_id=2, dimensions={0}
+      ROOT %r = f32[8,8]{1,0} bitcast(%w2)
+    }
+    """
+)
+
+
+class TestTripCountCorrection:
+    def test_nested_while_multiplier(self):
+        stats = analyze_computations(SYNTHETIC)
+        mult = multipliers(stats, "main.3")
+        assert mult.get("outer_body.2") == 5
+        assert mult.get("inner_body.1") == 15  # 5 x 3
+
+    def test_corrected_dot_flops(self):
+        res = analyze(SYNTHETIC)
+        one_dot = 2 * 8 * 8 * 16  # 2 * prod(out) * K
+        assert res.raw_dot_flops == one_dot
+        assert res.corrected_dot_flops == 15 * one_dot
+
+    def test_collectives_scaled_and_split(self):
+        res = analyze(SYNTHETIC)
+        ar_bytes = 8 * 8 * 4
+        ag_bytes = 32 * 8 * 4
+        assert res.corrected_coll_bytes["all-reduce"] == 15 * ar_bytes
+        assert res.corrected_coll_bytes["all-gather"] == ag_bytes
+        assert res.corrected_coll_counts["all-reduce"] == 15
+
+    def test_done_ops_ignored(self):
+        hlo = SYNTHETIC.replace(
+            "%g = f32[32,8]{1,0} all-gather(%a), channel_id=2, dimensions={0}",
+            "%g = f32[32,8]{1,0} all-gather-done(%a), channel_id=2",
+        )
+        res = analyze(hlo)
+        assert "all-gather" not in res.corrected_coll_bytes or res.corrected_coll_bytes.get("all-gather", 0) == 0

@@ -1,0 +1,101 @@
+"""The paper's Section 4.5 numbers, reproduced exactly from Eqs. 1-7."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cluster import paper_average_cluster, palmetto_cluster
+from repro.core import iomodel as m
+
+
+@pytest.fixture(scope="module")
+def spec10():
+    return paper_average_cluster(pfs_aggregate_mbps=10_000.0)
+
+
+@pytest.fixture(scope="module")
+def spec50():
+    return paper_average_cluster(pfs_aggregate_mbps=50_000.0)
+
+
+class TestPaperNumbers:
+    """Every headline crossover from Fig. 5 / Section 4.5, exact."""
+
+    def test_crossovers_at_10gbs(self, spec10):
+        r = m.section45_report(spec10)
+        assert r.read_vs_ofs == 43
+        assert r.read_vs_tls_f02 == 53
+        assert r.read_vs_tls_f05 == 83
+        assert r.write_vs_ofs_and_tls == 259
+
+    def test_crossovers_at_50gbs(self, spec50):
+        r = m.section45_report(spec50)
+        assert r.read_vs_ofs == 211
+        assert r.read_vs_tls_f02 == 262
+        assert r.read_vs_tls_f05 == 414
+        assert r.write_vs_ofs_and_tls == 1294
+
+    def test_aggregate_read_gains(self, spec10):
+        # Paper: 'about 25% at f=0.2 ... about 95% at f=0.5'
+        r = m.section45_report(spec10)
+        assert 0.20 < r.tls_read_gain_f02 < 0.30
+        assert 0.90 < r.tls_read_gain_f05 < 1.00
+
+    def test_tls_asymptote(self, spec10):
+        # Paper: 10 -> 12.5 GB/s (f=0.2) and -> ~19.6 GB/s (f=0.5)
+        agg_f02 = m.tls_aggregate_read(spec10, 10_000, 0.2)
+        agg_f05 = m.tls_aggregate_read(spec10, 414, 0.5)
+        assert agg_f02 == pytest.approx(12_500, rel=0.01)
+        assert agg_f05 == pytest.approx(19_600, rel=0.03)
+
+
+class TestModelStructure:
+    def test_hdfs_write_three_copies(self, spec10):
+        # mu_w/3 binds: 116/3
+        assert m.hdfs_write(spec10) == pytest.approx(116.0 / 3.0)
+
+    def test_tls_write_equals_ofs_write(self, spec10):
+        for n in (1, 16, 64, 256):
+            assert m.tls_write(spec10, n) == m.ofs_write(spec10, n)
+
+    def test_tls_read_boundaries(self, spec10):
+        assert m.tls_read(spec10, 1.0) == spec10.ram_mbps
+        assert m.tls_read(spec10, 0.0) == m.ofs_read(spec10)
+
+    def test_tls_read_rejects_bad_f(self, spec10):
+        with pytest.raises(ValueError):
+            m.tls_read(spec10, 1.5)
+
+    @given(f=st.floats(0.0, 1.0), n=st.integers(1, 2048))
+    @settings(max_examples=60, deadline=None)
+    def test_tls_read_between_tiers(self, f, n):
+        spec = paper_average_cluster(pfs_aggregate_mbps=10_000.0)
+        q = m.tls_read(spec, f, n)
+        lo = min(m.ofs_read(spec, n), spec.ram_mbps)
+        hi = max(m.ofs_read(spec, n), spec.ram_mbps)
+        assert lo - 1e-6 <= q <= hi + 1e-6
+
+    @given(f1=st.floats(0.0, 1.0), f2=st.floats(0.0, 1.0))
+    @settings(max_examples=60, deadline=None)
+    def test_tls_read_monotone_in_f(self, f1, f2):
+        spec = paper_average_cluster(pfs_aggregate_mbps=10_000.0)
+        lo, hi = sorted((f1, f2))
+        assert m.tls_read(spec, lo) <= m.tls_read(spec, hi) + 1e-9
+
+    @given(n=st.integers(1, 4096))
+    @settings(max_examples=60, deadline=None)
+    def test_ofs_aggregate_bounded(self, n):
+        spec = paper_average_cluster(pfs_aggregate_mbps=10_000.0)
+        assert m.ofs_aggregate_read(spec, n) <= spec.pfs_aggregate_read_mbps + 1e-6
+
+
+class TestStorageProfiles:
+    def test_capacity_and_ft_cost(self, spec10):
+        profs = {p.name: p for p in m.storage_profiles(spec10, 310_000, 109_000, 12_000_000)}
+        # HDFS: 3x write amplification, 2 network copies (Section 4.1)
+        assert profs["hdfs"].write_amplification == 3.0
+        assert profs["hdfs"].network_copies == 2.0
+        # TLS: capacity bounded by the PFS tier, 1 network copy (Section 3)
+        assert profs["two-level"].usable_capacity_mb == profs["orangefs"].usable_capacity_mb
+        assert profs["two-level"].network_copies == 1.0
+        # Tachyon: highest speed, zero network copies, lineage recovery
+        assert profs["tachyon"].network_copies == 0.0

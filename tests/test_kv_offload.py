@@ -1,0 +1,84 @@
+"""Two-level KV cache (HBM hot ring <-> host cold tier) — DESIGN.md L2."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.serving import TieredKVCache
+
+B, KV, H, D, W = 2, 2, 4, 32, 8
+
+
+def rand_token(rng):
+    return (
+        jnp.asarray(rng.normal(size=(B, KV, D)), jnp.float32),
+        jnp.asarray(rng.normal(size=(B, KV, D)), jnp.float32),
+    )
+
+
+class TestTieredKVCache:
+    def test_attend_matches_full_reference(self):
+        """Tiered attend == plain attention over the full history."""
+        rng = np.random.default_rng(0)
+        cache = TieredKVCache(B, KV, D, window=W, max_len=64, dtype=jnp.float32)
+        all_k, all_v = [], []
+        for _ in range(3 * W + 2):  # well past the ring
+            k, v = rand_token(rng)
+            cache.append(k, v)
+            all_k.append(k)
+            all_v.append(v)
+        q = jnp.asarray(rng.normal(size=(B, H, 1, D)), jnp.float32)
+        got = cache.attend(q, block_k=16)
+        kcat = jnp.stack(all_k, axis=2)
+        vcat = jnp.stack(all_v, axis=2)
+        want = ref.decode_attention_ref(q, kcat, vcat, cache.length)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+    def test_all_hot_phase(self):
+        """Before the ring wraps everything is served from the hot tier."""
+        rng = np.random.default_rng(1)
+        cache = TieredKVCache(B, KV, D, window=W, max_len=32, dtype=jnp.float32)
+        for _ in range(W - 2):
+            cache.append(*rand_token(rng))
+        q = jnp.asarray(rng.normal(size=(B, H, 1, D)), jnp.float32)
+        cache.attend(q, block_k=16)
+        assert cache.cold_len == 0
+        assert cache.stats.hot_fraction() == 1.0
+
+    def test_blend_fraction_tracks_paper_f(self):
+        """stats.hot_fraction == the paper's f = hot/(hot+cold)."""
+        rng = np.random.default_rng(2)
+        cache = TieredKVCache(B, KV, D, window=W, max_len=64, dtype=jnp.float32)
+        n = 3 * W
+        for _ in range(n):
+            cache.append(*rand_token(rng))
+        q = jnp.asarray(rng.normal(size=(B, H, 1, D)), jnp.float32)
+        cache.attend(q, block_k=16)
+        assert cache.stats.hot_fraction() == pytest.approx(W / n)
+
+    def test_rebuild_hot_from_cold_is_exact(self):
+        """Device loss: hot ring rebuilt from the host tier bit-for-bit."""
+        rng = np.random.default_rng(3)
+        cache = TieredKVCache(B, KV, D, window=W, max_len=64, dtype=jnp.float32)
+        for _ in range(2 * W + 3):
+            cache.append(*rand_token(rng))
+        before_k = np.asarray(cache.hot_k).copy()
+        cache.hot_k = jnp.zeros_like(cache.hot_k)  # simulate HBM loss
+        cache.rebuild_hot_from_cold()
+        np.testing.assert_allclose(np.asarray(cache.hot_k), before_k, rtol=1e-6, atol=1e-6)
+
+    def test_capacity_accounting(self):
+        cache = TieredKVCache(B, KV, D, window=W, max_len=128, dtype=jnp.bfloat16)
+        assert cache.device_bytes() == 2 * B * KV * W * D * 2
+        assert cache.host_bytes() == 2 * B * KV * 128 * D * 4
+        assert cache.device_bytes() < cache.host_bytes()  # small fast tier
+
+    def test_overflow_raises(self):
+        rng = np.random.default_rng(4)
+        cache = TieredKVCache(B, KV, D, window=4, max_len=6, dtype=jnp.float32)
+        for _ in range(6):
+            cache.append(*rand_token(rng))
+        with pytest.raises(ValueError, match="cache full"):
+            cache.append(*rand_token(rng))

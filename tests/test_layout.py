@@ -1,0 +1,82 @@
+"""Block <-> stripe layout mapping properties (paper Section 3.1, Fig. 3)."""
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core.layout import BlockLayout, StripeLayout, TwoLevelLayout, paper_layout
+
+MB = 2**20
+
+
+class TestBlockLayout:
+    def test_exact_partition(self):
+        bl = BlockLayout(4 * MB)
+        blocks = bl.blocks(10 * MB + 123)
+        assert [b.index for b in blocks] == [0, 1, 2]
+        assert blocks[-1].length == 2 * MB + 123
+        assert sum(b.length for b in blocks) == 10 * MB + 123
+
+    @given(file_size=st.integers(0, 10_000_000), block=st.integers(1, 1_000_000))
+    @settings(max_examples=60, deadline=None)
+    def test_blocks_cover_file(self, file_size, block):
+        bl = BlockLayout(block)
+        blocks = bl.blocks(file_size)
+        assert sum(b.length for b in blocks) == file_size
+        pos = 0
+        for b in blocks:
+            assert b.offset == pos
+            pos += b.length
+
+
+class TestStripeLayout:
+    @given(
+        offset=st.integers(0, 1_000_000),
+        length=st.integers(0, 1_000_000),
+        stripe=st.integers(1, 100_000),
+        servers=st.integers(1, 7),
+    )
+    @settings(max_examples=80, deadline=None)
+    def test_map_range_partition(self, offset, length, stripe, servers):
+        sl = StripeLayout(stripe, servers)
+        segs = sl.map_range(offset, length)
+        assert sum(s.length for s in segs) == length
+        pos = offset
+        for s in segs:
+            assert s.file_offset == pos
+            # round-robin invariant: server = stripe-unit index mod servers
+            assert s.server == (s.file_offset // stripe) % servers
+            pos += s.length
+
+    @given(size=st.integers(0, 2_000_000), stripe=st.integers(1, 65_536), servers=st.integers(1, 5))
+    @settings(max_examples=60, deadline=None)
+    def test_server_file_sizes_sum(self, size, stripe, servers):
+        sl = StripeLayout(stripe, servers)
+        assert sum(sl.server_file_size(size, s) for s in range(servers)) == size
+
+
+class TestTwoLevelLayout:
+    def test_paper_layout_block_striping(self):
+        # Section 5.1: 512 MB block -> 8 chunks of 64 MB over 2 data nodes.
+        tl = paper_layout(n_servers=2)
+        blocks = tl.blocks.blocks(512 * MB)
+        assert len(blocks) == 1
+        segs = tl.block_to_segments(blocks[0])
+        assert len(segs) == 8
+        assert all(s.length == 64 * MB for s in segs)
+        load = tl.server_load([0], 512 * MB)
+        assert load == {0: 256 * MB, 1: 256 * MB}  # evenly distributed
+        assert tl.imbalance([0], 512 * MB) == 1.0
+
+    @given(
+        n_blocks=st.integers(1, 20),
+        block=st.sampled_from([MB, 2 * MB, 4 * MB]),
+        stripe=st.sampled_from([256 * 1024, MB]),
+        servers=st.integers(1, 4),
+    )
+    @settings(max_examples=40, deadline=None)
+    def test_full_read_is_balanced(self, n_blocks, block, stripe, servers):
+        """Reading ALL blocks loads servers within one stripe unit of even."""
+        tl = TwoLevelLayout(BlockLayout(block), StripeLayout(stripe, servers))
+        size = n_blocks * block
+        load = tl.server_load(list(range(n_blocks)), size)
+        assert sum(load.values()) == size
+        assert max(load.values()) - min(load.values()) <= stripe

@@ -1,0 +1,150 @@
+"""Per-arch smoke tests (reduced configs): one forward + one train step on
+CPU, asserting output shapes and finiteness — deliverable (f)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, applicable_shapes, get_config, get_reduced, make_model
+from repro.launch.steps import init_state, make_train_step
+from repro.models.lm import stack_plan
+from repro.nn.module import init_with_axes
+from repro.optim.adamw import AdamW
+
+B, S = 2, 32
+
+
+def batch_for(cfg, rng):
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (B, S + 1)), jnp.int32)
+    batch = {"inputs": toks[:, :-1], "labels": toks[:, 1:]}
+    if cfg.encdec is not None:
+        batch["frames"] = jnp.asarray(
+            rng.normal(size=(B, cfg.encdec.n_frames, cfg.d_model)), jnp.float32
+        )
+    if cfg.vlm is not None:
+        batch["patches"] = jnp.asarray(
+            rng.normal(size=(B, cfg.vlm.n_patches, cfg.vlm.patch_dim)), jnp.float32
+        )
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+class TestArchSmoke:
+    def test_forward_shapes_and_finite(self, arch):
+        cfg = get_reduced(arch)
+        model = make_model(cfg)
+        params, _ = init_with_axes(model.init, jax.random.PRNGKey(0), dtype=jnp.float32)
+        rng = np.random.default_rng(0)
+        batch = batch_for(cfg, rng)
+        if cfg.encdec is not None:
+            logits, _ = model.train_logits(params, batch["frames"], batch["inputs"])
+        elif cfg.vlm is not None:
+            logits, _ = model.train_logits(params, batch["inputs"], batch["patches"])
+        else:
+            logits, _ = model.train_logits(params, batch["inputs"])
+        assert logits.shape == (B, S, cfg.vocab)
+        assert bool(jnp.isfinite(logits).all())
+
+    def test_one_train_step(self, arch):
+        cfg = get_reduced(arch)
+        model = make_model(cfg)
+        opt = AdamW(learning_rate=1e-3)
+        state, _ = init_state(model, cfg, opt, jax.random.PRNGKey(0))
+        step = jax.jit(make_train_step(model, cfg, opt))
+        batch = batch_for(cfg, np.random.default_rng(1))
+        new_state, metrics = step(state, batch)
+        assert bool(jnp.isfinite(metrics["loss"]))
+        assert int(new_state["step"]) == 1
+        # params actually moved
+        moved = jax.tree_util.tree_map(
+            lambda a, b: float(jnp.abs(a - b).max()), state["params"], new_state["params"]
+        )
+        assert max(jax.tree_util.tree_leaves(moved)) > 0
+
+    def test_loss_decreases_on_repeated_batch(self, arch):
+        cfg = get_reduced(arch)
+        model = make_model(cfg)
+        opt = AdamW(learning_rate=3e-3)
+        state, _ = init_state(model, cfg, opt, jax.random.PRNGKey(0))
+        step = jax.jit(make_train_step(model, cfg, opt))
+        batch = batch_for(cfg, np.random.default_rng(2))
+        first = None
+        for _ in range(5):
+            state, metrics = step(state, batch)
+            if first is None:
+                first = float(metrics["ce"])
+        assert float(metrics["ce"]) < first  # memorizing one batch
+
+
+class TestStackPlan:
+    @pytest.mark.parametrize("arch", ARCH_IDS)
+    def test_layer_budget_conserved(self, arch):
+        for cfg in (get_reduced(arch), get_config(arch)):
+            prefix, period, n_periods, suffix = stack_plan(cfg)
+            assert len(prefix) + n_periods * len(period) + len(suffix) == cfg.n_layers
+
+    def test_gemma3_pattern(self):
+        cfg = get_config("gemma3_1b")
+        prefix, period, n_periods, suffix = stack_plan(cfg)
+        assert [s.window for s in period] == [512] * 5 + [0]  # 5 local : 1 global
+        assert n_periods == 4 and len(suffix) == 2
+
+    def test_recurrentgemma_pattern(self):
+        cfg = get_config("recurrentgemma_9b")
+        _, period, n_periods, suffix = stack_plan(cfg)
+        assert [s.mixer for s in period] == ["rglru", "rglru", "gqa"]
+        assert n_periods == 12 and [s.mixer for s in suffix] == ["rglru", "rglru"]
+
+    def test_deepseek_dense_prefix(self):
+        cfg = get_config("deepseek_v3_671b")
+        prefix, period, n_periods, _ = stack_plan(cfg)
+        assert len(prefix) == 3 and all(s.ffn == "mlp" for s in prefix)
+        assert n_periods == 58 and period[0].ffn == "moe"
+
+
+class TestParamCounts:
+    """Analytic param counts vs published sizes (sanity for roofline)."""
+
+    @pytest.mark.parametrize(
+        "arch,expected_b,tol",
+        [
+            ("deepseek_v3_671b", 671e9, 0.10),
+            ("grok_1_314b", 314e9, 0.10),
+            # [unverified] row: the assignment dims give ~30B analytically;
+            # the published 35B marketing count differs ~15%.
+            ("command_r_35b", 35e9, 0.20),
+            ("starcoder2_3b", 3e9, 0.20),
+            ("qwen3_8b", 8.2e9, 0.12),
+            ("gemma3_1b", 1.0e9, 0.30),
+            ("recurrentgemma_9b", 9e9, 0.25),
+        ],
+    )
+    def test_published_sizes(self, arch, expected_b, tol):
+        n = get_config(arch).param_count()
+        assert abs(n - expected_b) / expected_b < tol, f"{arch}: {n/1e9:.1f}B vs {expected_b/1e9:.0f}B"
+
+    def test_moe_active_far_below_total(self):
+        cfg = get_config("deepseek_v3_671b")
+        assert cfg.active_param_count() < 0.1 * cfg.param_count()
+
+
+class TestGradAccumulation:
+    def test_accum_matches_full_batch(self):
+        cfg = dataclasses.replace(get_reduced("starcoder2_3b"), dtype="float32")
+        model = make_model(cfg)
+        opt = AdamW(learning_rate=1e-3)
+        state, _ = init_state(model, cfg, opt, jax.random.PRNGKey(0))
+        rng = np.random.default_rng(3)
+        toks = jnp.asarray(rng.integers(0, cfg.vocab, (4, S + 1)), jnp.int32)
+        batch = {"inputs": toks[:, :-1], "labels": toks[:, 1:]}
+        s1, m1 = jax.jit(make_train_step(model, cfg, opt, accum_steps=1))(state, batch)
+        s2, m2 = jax.jit(make_train_step(model, cfg, opt, accum_steps=2))(state, batch)
+        # means of microbatch losses == full-batch loss (equal-sized rows)
+        np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]), rtol=2e-4)
+        diff = jax.tree_util.tree_map(
+            lambda a, b: float(jnp.abs(a - b).max()), s1["params"], s2["params"]
+        )
+        assert max(jax.tree_util.tree_leaves(diff)) < 5e-5

@@ -1,0 +1,76 @@
+"""Decode-path consistency: prefill + incremental decode must reproduce the
+full teacher-forced forward for every architecture (fp32 to avoid the
+length-dependent bf16 reassociation noise documented in DESIGN.md §8)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_reduced, make_model
+from repro.nn.module import init_with_axes
+
+B, S, EXTRA = 2, 24, 3
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_matches_full_forward(arch):
+    cfg = dataclasses.replace(get_reduced(arch), dtype="float32")
+    model = make_model(cfg)
+    params, _ = init_with_axes(model.init, jax.random.PRNGKey(0), dtype=jnp.float32)
+    rng = np.random.default_rng(0)
+    tok = jnp.asarray(rng.integers(0, cfg.vocab, (B, S + EXTRA)), jnp.int32)
+
+    if cfg.encdec is not None:
+        frames = jnp.asarray(rng.normal(size=(B, cfg.encdec.n_frames, cfg.d_model)), jnp.float32)
+        full, _ = model.train_logits(params, frames, tok)
+        caches = model.init_caches(B, S + EXTRA + 1, jnp.float32)
+        lg, caches = model.prefill(params, frames, tok[:, :S], caches)
+    elif cfg.vlm is not None:
+        patches = jnp.asarray(rng.normal(size=(B, cfg.vlm.n_patches, cfg.vlm.patch_dim)), jnp.float32)
+        full, _ = model.train_logits(params, tok, patches)
+        caches = model.init_caches(B, cfg.vlm.n_patches + S + EXTRA + 1, jnp.float32)
+        lg, caches = model.prefill(params, tok[:, :S], caches, patches=patches)
+    else:
+        full, _ = model.train_logits(params, tok)
+        caches = model.init_caches(B, S + EXTRA + 1, jnp.float32)
+        lg, caches = model.prefill(params, tok[:, :S], caches)
+
+    scale = float(jnp.abs(full).max())
+    errs = [float(jnp.abs(lg[:, 0] - full[:, S - 1]).max()) / scale]
+    for i in range(EXTRA):
+        lg, caches = model.decode_step(params, tok[:, S + i : S + i + 1], caches)
+        errs.append(float(jnp.abs(lg[:, 0] - full[:, S + i]).max()) / scale)
+    assert max(errs) < 5e-3, f"{arch}: rel errs {errs}"
+
+
+def test_windowed_ring_cache_long_decode():
+    """Decode far past the window: ring page must stay exact (gemma3 local)."""
+    cfg = dataclasses.replace(get_reduced("gemma3_1b"), dtype="float32")
+    model = make_model(cfg)
+    params, _ = init_with_axes(model.init, jax.random.PRNGKey(0), dtype=jnp.float32)
+    rng = np.random.default_rng(1)
+    total = 3 * cfg.window + 5  # well past the window
+    tok = jnp.asarray(rng.integers(0, cfg.vocab, (1, total)), jnp.int32)
+    full, _ = model.train_logits(params, tok)
+    caches = model.init_caches(1, total + 1, jnp.float32)
+    lg, caches = model.prefill(params, tok[:, :8], caches)
+    scale = float(jnp.abs(full).max())
+    worst = float(jnp.abs(lg[:, 0] - full[:, 7]).max()) / scale
+    for i in range(8, total):
+        lg, caches = model.decode_step(params, tok[:, i : i + 1], caches)
+        worst = max(worst, float(jnp.abs(lg[:, 0] - full[:, i]).max()) / scale)
+    assert worst < 5e-3, worst
+
+
+def test_recurrent_state_is_o1():
+    """xlstm/recurrentgemma decode state must not grow with max_seq."""
+    for arch in ("xlstm_125m",):
+        cfg = get_reduced(arch)
+        model = make_model(cfg)
+        small = model.init_caches(1, 64, jnp.float32)
+        big = model.init_caches(1, 4096, jnp.float32)
+        sz = lambda t: sum(np.prod(x.shape) for x in jax.tree_util.tree_leaves(t))
+        assert sz(small) == sz(big)  # O(1) in sequence length

@@ -1,0 +1,80 @@
+"""Storage mountain + TeraSort phase model vs the paper's measurements."""
+
+import pytest
+
+from repro.core.cluster import palmetto_cluster
+from repro.core.simulator import (
+    mountain_summary,
+    reduce_scaling,
+    storage_mountain,
+    terasort_report,
+)
+
+
+@pytest.fixture(scope="module")
+def spec():
+    return palmetto_cluster()
+
+
+class TestTeraSort:
+    def test_mapper_speedups_match_paper(self, spec):
+        # Section 5.3: TLS mapper 5.4x vs HDFS, 4.2x vs OrangeFS.
+        rep = terasort_report(spec)
+        vs_hdfs = rep["hdfs"].map_s / rep["tls"].map_s
+        vs_ofs = rep["ofs"].map_s / rep["tls"].map_s
+        assert vs_hdfs == pytest.approx(5.4, abs=0.3)
+        assert vs_ofs == pytest.approx(4.2, abs=0.3)
+
+    def test_tls_mapper_is_cpu_bound(self, spec):
+        # 'The high read throughput even pushed the Mapper reaching full CPU usage'
+        tls = terasort_report(spec)["tls"]
+        assert tls.map_s == tls.map_cpu_s
+        assert tls.map_read_s < tls.map_cpu_s
+
+    def test_reducer_ordering_matches_paper(self, spec):
+        # With 2 data nodes the OFS/TLS reducers are slightly slower than HDFS
+        rep = terasort_report(spec)
+        assert rep["tls"].reduce_s > rep["hdfs"].reduce_s
+        assert rep["ofs"].reduce_s > rep["tls"].reduce_s  # unidirectional gain
+
+    def test_reduce_scales_with_data_nodes(self, spec):
+        # Paper: 1.9x at 4 nodes (model matches); 4.5x at 12 (model predicts
+        # ~6x — the min-form model has no shuffle overhead; EXPERIMENTS.md
+        # reports the delta).
+        times = reduce_scaling(spec, [2, 4, 12])
+        assert times[2] / times[4] == pytest.approx(1.9, abs=0.3)
+        assert times[2] / times[12] > 4.0
+
+    def test_write_not_the_hdfs_bottleneck_at_scale(self, spec):
+        rep = terasort_report(spec)
+        assert rep["tls"].map_s < rep["hdfs"].map_s  # reads are the win
+
+
+class TestStorageMountain:
+    def test_two_ridges(self, spec):
+        surface = storage_mountain(spec)
+        s = mountain_summary(surface)
+        # Tachyon ridge far above the OrangeFS ridge (Fig. 6)
+        assert s["ridge_ratio"] > 3.0
+        assert s["tachyon_ridge_mbps"] > 2000
+
+    def test_capacity_cliff_at_16gb(self, spec):
+        surface = storage_mountain(spec)
+        seq = {d: v for (d, sk), v in surface.items() if sk == 0.0}
+        # exclude the <=2 GB points: fixed job overhead droops them (the
+        # paper's 'read throughputs are decreased when the data size is
+        # small'); the cliff claim is hot-ridge vs over-capacity sizes.
+        small = [v for d, v in seq.items() if 4 * 1024 <= d <= 16 * 1024]
+        large = [v for d, v in seq.items() if d > 16 * 1024]
+        assert min(small) > max(large)  # slope between the ridges
+
+    def test_skip_size_degrades_throughput(self, spec):
+        surface = storage_mountain(spec)
+        at = lambda d, s: surface[(d, s)]
+        d = 8 * 1024.0
+        assert at(d, 0.0) > at(d, 4.0) > at(d, 64.0)
+
+    def test_small_data_overhead_droop(self, spec):
+        surface = storage_mountain(spec)
+        seq = {d: v for (d, sk), v in surface.items() if sk == 0.0}
+        assert seq[1024.0] < seq[8 * 1024.0]  # 1 GB slower than 8 GB

@@ -1,0 +1,198 @@
+"""TwoLevelStore behaviour: the 3+3 I/O modes, eviction, integrity,
+durability, concurrency (paper Section 3 / Fig. 4)."""
+
+import os
+import threading
+
+import pytest
+
+from repro.core import (
+    BlockNotFound,
+    EvictionPolicy,
+    IntegrityError,
+    ReadMode,
+    TwoLevelStore,
+    WriteMode,
+)
+
+MB = 2**20
+
+
+def make(tmp_path, **kw):
+    kw.setdefault("mem_capacity_bytes", 8 * MB)
+    kw.setdefault("block_bytes", 1 * MB)
+    kw.setdefault("stripe_bytes", 256 * 1024)
+    kw.setdefault("n_pfs_servers", 2)
+    return TwoLevelStore(str(tmp_path / "pfs"), **kw)
+
+
+class TestWriteModes:
+    def test_write_through_lands_in_both_tiers(self, tmp_path):
+        with make(tmp_path) as st:
+            data = os.urandom(3 * MB)
+            st.put("f", data, mode=WriteMode.WRITE_THROUGH)
+            assert st.resident_fraction("f") == 1.0
+            assert st.pfs.contains("f:000000")
+            assert st.get("f", mode=ReadMode.MEMORY_ONLY) == data
+            assert st.get("f", mode=ReadMode.PFS_BYPASS) == data
+
+    def test_memory_only_never_touches_pfs(self, tmp_path):
+        with make(tmp_path) as st:
+            st.put("f", os.urandom(2 * MB), mode=WriteMode.MEMORY_ONLY)
+            assert not st.pfs.contains("f:000000")
+            with pytest.raises(BlockNotFound):
+                st.get("f", mode=ReadMode.PFS_BYPASS)
+
+    def test_pfs_bypass_skips_memory(self, tmp_path):
+        with make(tmp_path) as st:
+            data = os.urandom(2 * MB)
+            st.put("f", data, mode=WriteMode.PFS_BYPASS)
+            assert st.resident_fraction("f") == 0.0
+            assert st.get("f") == data  # tiered read falls through
+
+    def test_async_writeback_durable_after_drain(self, tmp_path):
+        with make(tmp_path) as st:
+            data = os.urandom(4 * MB)
+            st.put("f", data, mode=WriteMode.ASYNC_WRITEBACK)
+            st.drain()
+            assert st.get("f", mode=ReadMode.PFS_BYPASS) == data
+            assert st.stats.async_flushes >= 1
+
+    def test_overwrite_replaces_all_blocks(self, tmp_path):
+        with make(tmp_path) as st:
+            st.put("f", os.urandom(3 * MB))
+            new = os.urandom(MB)
+            st.put("f", new)
+            assert st.get("f") == new
+            assert st.file_size("f") == MB
+
+
+class TestReadModes:
+    def test_tiered_read_promotes_and_hits(self, tmp_path):
+        with make(tmp_path) as st:
+            data = os.urandom(2 * MB)
+            st.put("f", data, mode=WriteMode.PFS_BYPASS)
+            assert st.get("f") == data  # promote
+            misses = st.stats.mem_misses
+            assert st.get("f") == data  # now hot
+            assert st.stats.mem_misses == misses
+            assert st.stats.promotions >= 2
+            assert st.resident_fraction("f") == 1.0
+
+    def test_memory_only_read_raises_on_cold(self, tmp_path):
+        with make(tmp_path) as st:
+            st.put("f", os.urandom(MB), mode=WriteMode.PFS_BYPASS)
+            with pytest.raises(BlockNotFound):
+                st.get("f", mode=ReadMode.MEMORY_ONLY)
+
+    def test_bypass_read_does_not_promote(self, tmp_path):
+        with make(tmp_path) as st:
+            st.put("f", os.urandom(2 * MB), mode=WriteMode.PFS_BYPASS)
+            st.get("f", mode=ReadMode.PFS_BYPASS)
+            assert st.resident_fraction("f") == 0.0
+
+    def test_buffered_stream_chunks(self, tmp_path):
+        with make(tmp_path, app_buffer_bytes=MB) as st:
+            data = os.urandom(3 * MB + 17)
+            st.put("f", data)
+            chunks = list(st.get_buffered("f"))
+            assert b"".join(chunks) == data
+            assert all(len(c) <= MB for c in chunks)
+
+
+class TestEviction:
+    def test_lru_evicts_coldest(self, tmp_path):
+        with make(tmp_path, mem_capacity_bytes=4 * MB) as st:
+            st.put("a", os.urandom(2 * MB))
+            st.put("b", os.urandom(2 * MB))
+            st.get("a")  # touch a -> b is LRU
+            st.put("c", os.urandom(2 * MB))  # evicts b's blocks
+            assert st.resident_fraction("a") + st.resident_fraction("c") > st.resident_fraction("b")
+            assert st.get("b") is not None  # still safe via PFS
+
+    def test_lfu_keeps_frequent(self, tmp_path):
+        with make(tmp_path, mem_capacity_bytes=4 * MB, eviction=EvictionPolicy.LFU) as st:
+            st.put("hot", os.urandom(2 * MB))
+            st.put("cold", os.urandom(2 * MB))
+            for _ in range(5):
+                st.get("hot")
+            st.put("new", os.urandom(2 * MB))
+            assert st.resident_fraction("hot") == 1.0
+            assert st.resident_fraction("cold") == 0.0
+
+    def test_dirty_blocks_flushed_before_eviction(self, tmp_path):
+        with make(tmp_path, mem_capacity_bytes=4 * MB) as st:
+            data = os.urandom(3 * MB)
+            st.put("dirty", data, mode=WriteMode.ASYNC_WRITEBACK)
+            st.put("more", os.urandom(3 * MB), mode=WriteMode.MEMORY_ONLY)  # forces eviction
+            assert st.get("dirty") == data  # nothing lost
+
+    def test_oversized_block_served_without_promotion(self, tmp_path):
+        with make(tmp_path, mem_capacity_bytes=2 * MB, block_bytes=4 * MB) as st:
+            data = os.urandom(3 * MB)
+            st.put("big", data, mode=WriteMode.PFS_BYPASS)
+            assert st.get("big") == data
+            assert st.resident_fraction("big") == 0.0
+
+
+class TestIntegrity:
+    def test_stripe_corruption_detected(self, tmp_path):
+        with make(tmp_path) as st:
+            st.put("f", os.urandom(2 * MB), mode=WriteMode.PFS_BYPASS)
+            # flip bytes in one stripe file
+            sdir = tmp_path / "pfs" / "server_00"
+            victim = next(p for p in sdir.iterdir() if p.suffix.startswith(".s"))
+            raw = bytearray(victim.read_bytes())
+            raw[0] ^= 0xFF
+            victim.write_bytes(bytes(raw))
+            with pytest.raises(IntegrityError):
+                st.get("f")
+
+    def test_server_load_balanced(self, tmp_path):
+        with make(tmp_path) as st:
+            st.put("f", os.urandom(6 * MB))
+            load = st.server_load()
+            assert abs(load[0] - load[1]) <= 256 * 1024  # within one stripe
+
+
+class TestRestartAndConcurrency:
+    def test_cold_restart_reads_from_pfs(self, tmp_path):
+        data = os.urandom(5 * MB)
+        with make(tmp_path) as st:
+            st.put("f", data)
+        with make(tmp_path) as st2:  # fresh memory tier
+            assert st2.get("f") == data
+            assert "f" in st2.list_files()
+
+    def test_memory_only_files_lost_on_restart(self, tmp_path):
+        with make(tmp_path) as st:
+            st.put("volatile", os.urandom(MB), mode=WriteMode.MEMORY_ONLY)
+            st.put("durable", os.urandom(MB))
+        with make(tmp_path) as st2:
+            assert st2.list_files() == ["durable"]
+
+    def test_concurrent_readers_consistent(self, tmp_path):
+        with make(tmp_path, mem_capacity_bytes=3 * MB) as st:
+            blobs = {f"f{i}": os.urandom(MB + i) for i in range(6)}
+            for k, v in blobs.items():
+                st.put(k, v)
+            errors = []
+
+            def reader(k, want):
+                for _ in range(5):
+                    if st.get(k) != want:
+                        errors.append(k)
+
+            threads = [threading.Thread(target=reader, args=kv) for kv in blobs.items()]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+            assert not errors
+
+    def test_delete_removes_everywhere(self, tmp_path):
+        with make(tmp_path) as st:
+            st.put("f", os.urandom(2 * MB))
+            assert st.delete("f")
+            assert not st.exists("f")
+            assert not st.delete("f")
