@@ -28,7 +28,7 @@ MODES = {
 }
 
 
-def real_terasort(records: int = 80_000) -> dict[str, dict]:
+def real_terasort(records: int = 80_000, workers: int = 1) -> dict[str, dict]:
     out: dict[str, dict] = {}
     for label, (wgen, rmap, wred) in MODES.items():
         with tempfile.TemporaryDirectory() as d:
@@ -37,9 +37,19 @@ def real_terasort(records: int = 80_000) -> dict[str, dict]:
                 mem_capacity_bytes=64 * MB,
                 block_bytes=2 * MB,
                 stripe_bytes=512 * 1024,
+                n_pfs_servers=4,
+                io_workers=workers,
             ) as st:
-                gen_s = teragen(st, records, n_shards=4, write_mode=wgen)
-                t = terasort(st, n_shards=4, n_reducers=4, read_mode=rmap, write_mode=wred, label=label)
+                gen_s = teragen(st, records, n_shards=4, write_mode=wgen, workers=workers)
+                t = terasort(
+                    st,
+                    n_shards=4,
+                    n_reducers=4,
+                    read_mode=rmap,
+                    write_mode=wred,
+                    label=label,
+                    workers=workers,
+                )
                 out[label] = {
                     "gen_s": gen_s,
                     "map_s": t.map_s,
@@ -50,7 +60,7 @@ def real_terasort(records: int = 80_000) -> dict[str, dict]:
     return out
 
 
-def run() -> list[tuple[str, float, str]]:
+def run(quick: bool = False) -> list[tuple[str, float, str]]:
     rows: list[tuple[str, float, str]] = []
     spec = palmetto_cluster()
     rep = terasort_report(spec)
@@ -61,7 +71,8 @@ def run() -> list[tuple[str, float, str]]:
     rows.append(("fig7.model.reduce_gain_4nodes", round(scal[2] / scal[4], 2), "paper=1.9x"))
     rows.append(("fig7.model.reduce_gain_12nodes", round(scal[2] / scal[12], 2), "paper=4.5x (model over-predicts; see EXPERIMENTS.md)"))
 
-    real = real_terasort()
+    records = 20_000 if quick else 80_000
+    real = real_terasort(records)
     for label, r in real.items():
         rows.append((f"fig7.real.{label}.map_s", round(r["map_s"], 4), f"hit_rate={r['hit_rate']:.2f}"))
         rows.append((f"fig7.real.{label}.reduce_s", round(r["reduce_s"], 4), ""))
@@ -69,4 +80,21 @@ def run() -> list[tuple[str, float, str]]:
     rows.append(
         ("fig7.real.tls_vs_ofs_map", round(real["ofs"]["map_s"] / real["tls"]["map_s"], 2), ">=1 expected")
     )
+    # --workers axis: same job with the store's parallel data path fanned out
+    par = real_terasort(records, workers=4)
+    for label in ("tls", "ofs"):
+        rows.append(
+            (
+                f"fig7.real.{label}.w4_gen_s",
+                round(par[label]["gen_s"], 4),
+                f"x{real[label]['gen_s'] / max(par[label]['gen_s'], 1e-9):.2f} vs w1",
+            )
+        )
+        rows.append(
+            (
+                f"fig7.real.{label}.w4_map_s",
+                round(par[label]["map_s"], 4),
+                f"x{real[label]['map_s'] / max(par[label]['map_s'], 1e-9):.2f} vs w1",
+            )
+        )
     return rows

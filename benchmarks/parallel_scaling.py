@@ -1,0 +1,225 @@
+"""Parallel striped-I/O scaling — the acceptance gate for the parallel data path.
+
+Measures aggregate PFS-tier write+read throughput of a single large file
+through the ``TwoLevelStore`` with all CRC integrity checks enabled
+(per-stripe CRC folded during transfer, combined per-block CRC verified
+end to end).  Throughput is taken from ``TierStats`` aggregate spans
+(first-op-start .. last-op-end wall time) — the quantity the paper's
+Section 4 aggregate-throughput model predicts; per-op seconds would
+overcount wall time under concurrency.
+
+Two comparisons:
+
+* ``pscale.seed`` — a byte-movement replica of the seed's single-threaded
+  data path (global-lock-serialized, slice-copy per block/unit/chunk,
+  join-assembled reads, separate block CRC pass), run at the *same*
+  stripe/block geometry.  This is the baseline the >= 2x acceptance
+  criterion is measured against.
+* ``pscale.w1`` vs ``pscale.w4`` — the new engine serialized vs fanned out
+  (``n_pfs_servers=4, io_workers=4``), isolating the concurrency win from
+  the zero-copy win.
+
+Run standalone for the full-size measurement::
+
+    PYTHONPATH=src python -m benchmarks.parallel_scaling --size-mb 256
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import tempfile
+import time
+import zlib
+
+from repro.core.store import ReadMode, TwoLevelStore, WriteMode
+from repro.core.tiers import IntegrityError, TierStats
+
+MB = 2**20
+
+
+class SeedSerialPath:
+    """Byte-movement replica of the seed's serial two-level data path.
+
+    Reproduces, at matched geometry, exactly what the pre-parallel store
+    did per 'put file / get file': block slice copy + full-block CRC pass,
+    per-unit slice copy, per-4MB-chunk slice copy on write; chunked
+    ``read()`` + per-unit join + per-block join + separate block CRC
+    verify pass on read — all under one global lock (i.e. serial).
+    """
+
+    def __init__(self, root: str, n_servers: int, stripe_bytes: int, block_bytes: int,
+                 io_buffer_bytes: int = 4 * MB) -> None:
+        self.root = root
+        self.n_servers = n_servers
+        self.stripe_bytes = stripe_bytes
+        self.block_bytes = block_bytes
+        self.io_buffer_bytes = io_buffer_bytes
+        self.stats = TierStats()
+        self._crcs: dict[tuple[int, int], int] = {}
+        self._block_crcs: dict[int, int] = {}
+        self._sizes: dict[int, int] = {}
+        for s in range(n_servers):
+            os.makedirs(os.path.join(root, f"server_{s:02d}"), exist_ok=True)
+
+    def _path(self, block: int, unit: int) -> str:
+        return os.path.join(
+            self.root, f"server_{unit % self.n_servers:02d}", f"b{block:06d}.s{unit:04d}"
+        )
+
+    def put_file(self, data: bytes) -> None:
+        for bidx, off in enumerate(range(0, len(data), self.block_bytes)):
+            t0 = time.perf_counter()
+            chunk = data[off : off + self.block_bytes]  # seed: block slice copy
+            self._block_crcs[bidx] = zlib.crc32(chunk)  # seed: separate CRC pass
+            self._sizes[bidx] = len(chunk)
+            for unit, uoff in enumerate(range(0, len(chunk), self.stripe_bytes)):
+                uchunk = chunk[uoff : uoff + self.stripe_bytes]  # unit slice copy
+                self._crcs[(bidx, unit)] = zlib.crc32(uchunk)
+                with open(self._path(bidx, unit), "wb") as fh:
+                    for b0 in range(0, len(uchunk), self.io_buffer_bytes):
+                        fh.write(uchunk[b0 : b0 + self.io_buffer_bytes])  # chunk copy
+            t1 = time.perf_counter()
+            self.stats.record_write(len(chunk), t1 - t0, end=t1)
+
+    def get_file(self) -> bytes:
+        blocks = []
+        for bidx in sorted(self._sizes):
+            t0 = time.perf_counter()
+            uparts = []
+            for unit, _ in enumerate(range(0, self._sizes[bidx], self.stripe_bytes)):
+                with open(self._path(bidx, unit), "rb") as fh:
+                    part = b"".join(iter(lambda f=fh: f.read(self.io_buffer_bytes), b""))
+                if zlib.crc32(part) != self._crcs[(bidx, unit)]:
+                    raise IntegrityError(f"unit CRC mismatch b{bidx}.s{unit}")
+                uparts.append(part)
+            bdata = b"".join(uparts)  # seed: per-block join
+            if zlib.crc32(bdata) != self._block_crcs[bidx]:  # separate verify pass
+                raise IntegrityError(f"block CRC mismatch b{bidx}")
+            t1 = time.perf_counter()
+            self.stats.record_read(len(bdata), t1 - t0, end=t1)
+            blocks.append(bdata)
+        return b"".join(blocks)  # seed: whole-file join
+
+
+def _agg(stats: TierStats) -> dict[str, float]:
+    return {
+        "write_mbps": stats.aggregate_write_mbps(),
+        "read_mbps": stats.aggregate_read_mbps(),
+        "agg_mbps": stats.aggregate_write_mbps() + stats.aggregate_read_mbps(),
+    }
+
+
+def _best_of(repeats: int, fn) -> dict[str, float]:
+    # The container filesystem (9p) has large run-to-run variance; best-of-N
+    # is the standard way to measure engine capability rather than host noise.
+    return max((fn() for _ in range(max(1, repeats))), key=lambda r: r["agg_mbps"])
+
+
+def measure_seed(
+    size_mb: int, n_servers: int, block_mb: int, stripe_mb: int, repeats: int = 2
+) -> dict[str, float]:
+    def once() -> dict[str, float]:
+        data = os.urandom(size_mb * MB)
+        with tempfile.TemporaryDirectory() as d:
+            seed = SeedSerialPath(
+                os.path.join(d, "pfs"), n_servers, stripe_mb * MB, block_mb * MB
+            )
+            seed.put_file(data)
+            assert seed.get_file() == data
+            return _agg(seed.stats)
+
+    return _best_of(repeats, once)
+
+
+def measure(
+    size_mb: int,
+    n_servers: int,
+    workers: int,
+    block_mb: int,
+    stripe_mb: int,
+    repeats: int = 2,
+) -> dict[str, float]:
+    """Write + read one ``size_mb`` file through the new PFS path; MB/s."""
+
+    def once() -> dict[str, float]:
+        data = os.urandom(size_mb * MB)
+        with tempfile.TemporaryDirectory() as d:
+            with TwoLevelStore(
+                os.path.join(d, "pfs"),
+                mem_capacity_bytes=2 * size_mb * MB,
+                block_bytes=block_mb * MB,
+                n_pfs_servers=n_servers,
+                stripe_bytes=stripe_mb * MB,
+                io_workers=workers,
+            ) as st:
+                st.put("blob", data, mode=WriteMode.PFS_BYPASS)
+                got = st.get("blob", mode=ReadMode.PFS_BYPASS)
+                assert got == data, "readback mismatch"
+                assert st.stats.integrity_failures == 0
+                return _agg(st.pfs.stats)
+
+    return _best_of(repeats, once)
+
+
+def run(quick: bool = False) -> list[tuple[str, float, str]]:
+    size_mb = 64 if quick else 256
+    block_mb, stripe_mb = (32, 8) if quick else (64, 16)
+    n_servers = 4
+    geom = f"{size_mb}MB file, {n_servers} servers, {block_mb}MB blocks, {stripe_mb}MB stripes"
+    rows: list[tuple[str, float, str]] = []
+
+    seed = measure_seed(size_mb, n_servers, block_mb, stripe_mb)
+    rows.append(("pscale.seed.write_mbps", round(seed["write_mbps"], 1), f"seed path, {geom}"))
+    rows.append(("pscale.seed.read_mbps", round(seed["read_mbps"], 1), "seed path, CRC verified"))
+
+    results: dict[int, dict[str, float]] = {}
+    for workers in (1, 4):
+        results[workers] = measure(size_mb, n_servers, workers, block_mb, stripe_mb)
+        r = results[workers]
+        rows.append((f"pscale.w{workers}.write_mbps", round(r["write_mbps"], 1), geom))
+        rows.append((f"pscale.w{workers}.read_mbps", round(r["read_mbps"], 1), "CRC verified"))
+
+    gate = (
+        ">=2.0 required (acceptance: workers=4 vs single-threaded seed path)"
+        if not quick
+        else "indicative only — acceptance gate runs at 256MB (--size-mb 256)"
+    )
+    rows.append(
+        (
+            "pscale.agg_speedup_vs_seed",
+            round(results[4]["agg_mbps"] / seed["agg_mbps"], 2),
+            gate,
+        )
+    )
+    rows.append(
+        (
+            "pscale.agg_speedup_4w_vs_1w",
+            round(results[4]["agg_mbps"] / results[1]["agg_mbps"], 2),
+            "concurrency win alone (same zero-copy engine)",
+        )
+    )
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--size-mb", type=int, default=256)
+    ap.add_argument("--servers", type=int, default=4)
+    ap.add_argument("--block-mb", type=int, default=64)
+    ap.add_argument("--stripe-mb", type=int, default=16)
+    ap.add_argument("--workers", type=int, nargs="+", default=[1, 2, 4])
+    args = ap.parse_args()
+    seed = measure_seed(args.size_mb, args.servers, args.block_mb, args.stripe_mb)
+    print("path,write_mbps,read_mbps,agg_mbps,speedup_vs_seed")
+    print(f"seed,{seed['write_mbps']:.1f},{seed['read_mbps']:.1f},{seed['agg_mbps']:.1f},1.00")
+    for w in args.workers:
+        r = measure(args.size_mb, args.servers, w, args.block_mb, args.stripe_mb)
+        print(
+            f"w{w},{r['write_mbps']:.1f},{r['read_mbps']:.1f},{r['agg_mbps']:.1f},"
+            f"{r['agg_mbps'] / seed['agg_mbps']:.2f}"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,32 +1,56 @@
-"""Benchmark entry point: ``python -m benchmarks.run``.
+"""Benchmark entry point: ``python -m benchmarks.run [--quick]``.
 
 One module per paper table/figure; prints ``name,value,derived`` CSV
 (value is the figure's native unit: MB/s, node counts, seconds, ratios —
 noted in the derived column).
+
+``--quick`` runs every module at smoke-test sizes (small files / few
+records) — used by CI to catch throughput-path regressions on every PR
+without paying full-measurement wall time.
 """
 
 from __future__ import annotations
 
+import argparse
+import inspect
 import sys
 import time
 
 
 def main() -> None:
-    from benchmarks import fig1_tiers, fig5_crossover, fig6_mountain, fig7_terasort, roofline
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true", help="smoke-test sizes (CI mode)")
+    ap.add_argument("--only", nargs="*", help="run only these module labels")
+    args = ap.parse_args()
+
+    from benchmarks import (
+        fig1_tiers,
+        fig5_crossover,
+        fig6_mountain,
+        fig7_terasort,
+        parallel_scaling,
+        roofline,
+    )
 
     modules = [
         ("fig1", fig1_tiers),
         ("fig5", fig5_crossover),
         ("fig6", fig6_mountain),
         ("fig7", fig7_terasort),
+        ("pscale", parallel_scaling),
         ("roofline", roofline),
     ]
+    if args.only:
+        modules = [(label, mod) for label, mod in modules if label in args.only]
     print("name,value,derived")
     failures = 0
     for label, mod in modules:
         t0 = time.perf_counter()
         try:
-            rows = mod.run()
+            if "quick" in inspect.signature(mod.run).parameters:
+                rows = mod.run(quick=args.quick)
+            else:
+                rows = mod.run()
         except Exception as e:  # keep the harness running
             failures += 1
             print(f"{label}.ERROR,0,{type(e).__name__}: {e}")

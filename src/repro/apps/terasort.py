@@ -9,6 +9,15 @@ A faithful miniature of the benchmark's I/O pattern:
   write output shards (write-once).
 * **TeraValidate** — reads outputs and checks global key order.
 
+The I/O rides the store's parallel data path: mappers stream shards
+concurrently through ``get_buffered`` (per-block readahead overlapping PFS
+stripes with the partitioning compute), and reducers sort + write their
+output shards concurrently, so the PFS servers see one in-flight request
+each, exactly the aggregate-throughput pattern of the paper's Section 4
+model.  The shuffle itself is a single argsort-split — records are routed
+to all reducers in one stable sort over destination ids instead of one
+full scan per reducer.
+
 Phase wall-times + store tier stats are returned so the fig7 benchmark
 can compare HDFS-style (bypass-memory ~ local-disk-only), OrangeFS-style
 (PFS bypass) and two-level (tiered) storage on real moved bytes.
@@ -18,6 +27,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+from concurrent.futures import ThreadPoolExecutor
 
 import numpy as np
 
@@ -25,6 +35,14 @@ from repro.core.store import ReadMode, TwoLevelStore, WriteMode
 
 RECORD = 100  # bytes per record (TeraSort convention)
 KEY = 10  # leading key bytes
+
+# Big-endian byte weights folding a 10-byte key into one uint64 (mod 2^63).
+_KEY_WEIGHTS = 256 ** np.arange(KEY - 1, -1, -1, dtype=np.uint64)
+
+
+def _record_keys(records: np.ndarray) -> np.ndarray:
+    """Fold each record's leading KEY bytes into a sortable uint64."""
+    return records[:, :KEY].astype(np.uint64) @ _KEY_WEIGHTS % (1 << 63)
 
 
 @dataclasses.dataclass
@@ -57,15 +75,35 @@ def teragen(
     n_shards: int = 4,
     write_mode: WriteMode | None = None,
     seed: int = 0,
+    workers: int = 1,
 ) -> float:
     """Generate and store the input; returns wall seconds."""
     t0 = time.perf_counter()
     per = n_records // n_shards
-    for i in range(n_shards):
+
+    def gen_shard(i: int) -> None:
         rng = np.random.default_rng(seed + i)
         data = rng.integers(0, 256, size=(per, RECORD), dtype=np.uint8)
         store.put(_shard_name(i), data.tobytes(), mode=write_mode)
+
+    if workers > 1:
+        with ThreadPoolExecutor(max_workers=workers) as ex:
+            list(ex.map(gen_shard, range(n_shards)))
+    else:
+        for i in range(n_shards):
+            gen_shard(i)
     return time.perf_counter() - t0
+
+
+def _read_shard(store: TwoLevelStore, i: int, read_mode: ReadMode | None) -> np.ndarray:
+    """Stream one shard through the buffered reader into a records array."""
+    nbytes = store.file_size(_shard_name(i))
+    out = np.empty(nbytes, dtype=np.uint8)
+    pos = 0
+    for chunk in store.get_buffered(_shard_name(i), mode=read_mode):
+        out[pos : pos + len(chunk)] = np.frombuffer(chunk, dtype=np.uint8)
+        pos += len(chunk)
+    return out.reshape(-1, RECORD)
 
 
 def terasort(
@@ -75,43 +113,47 @@ def terasort(
     read_mode: ReadMode | None = None,
     write_mode: WriteMode | None = None,
     label: str = "tls",
+    workers: int = 1,
 ) -> TeraSortTimings:
     # --- map phase: read-once + partition by sampled splitters ------------
     t0 = time.perf_counter()
-    shards = []
-    for i in range(n_shards):
-        raw = b"".join(store.get_buffered(_shard_name(i), mode=read_mode))
-        shards.append(np.frombuffer(raw, dtype=np.uint8).reshape(-1, RECORD))
+    if workers > 1:
+        with ThreadPoolExecutor(max_workers=workers) as ex:
+            shards = list(ex.map(lambda i: _read_shard(store, i, read_mode), range(n_shards)))
+    else:
+        shards = [_read_shard(store, i, read_mode) for i in range(n_shards)]
     # sample splitters from the first shard (Hadoop samples input splits)
-    sample = shards[0][:: max(1, len(shards[0]) // 1024), :KEY]
-    sample_keys = sample.astype(np.uint64) @ (256 ** np.arange(KEY - 1, -1, -1, dtype=np.uint64)) % (1 << 63)
+    sample = shards[0][:: max(1, len(shards[0]) // 1024)]
+    sample_keys = _record_keys(sample)
     splitters = np.quantile(sample_keys, np.linspace(0, 1, n_reducers + 1)[1:-1]).astype(np.uint64)
     map_s = time.perf_counter() - t0
 
-    # --- shuffle: route records to reducers -------------------------------
+    # --- shuffle: route records to reducers in one argsort-split ----------
     t0 = time.perf_counter()
-    buckets: list[list[np.ndarray]] = [[] for _ in range(n_reducers)]
-    for shard in shards:
-        keys = shard[:, :KEY].astype(np.uint64) @ (
-            256 ** np.arange(KEY - 1, -1, -1, dtype=np.uint64)
-        ) % (1 << 63)
-        dest = np.searchsorted(splitters, keys, side="right")
-        for r in range(n_reducers):
-            buckets[r].append(shard[dest == r])
+    records = np.concatenate(shards) if len(shards) > 1 else shards[0]
+    dest = np.searchsorted(splitters, _record_keys(records), side="right")
+    order = np.argsort(dest, kind="stable")
+    routed = records[order]
+    counts = np.bincount(dest, minlength=n_reducers)
+    bounds = np.cumsum(counts)[:-1]
+    partitions = np.split(routed, bounds)
     shuffle_s = time.perf_counter() - t0
 
-    # --- reduce: sort partitions + write-once ------------------------------
+    # --- reduce: sort partitions + write-once, reducers in parallel --------
     t0 = time.perf_counter()
-    n_total = 0
-    for r in range(n_reducers):
-        part = np.concatenate(buckets[r]) if buckets[r] else np.zeros((0, RECORD), np.uint8)
+
+    def reduce_one(r: int) -> int:
+        part = partitions[r]
         if len(part):
-            keys = part[:, :KEY].astype(np.uint64) @ (
-                256 ** np.arange(KEY - 1, -1, -1, dtype=np.uint64)
-            ) % (1 << 63)
-            part = part[np.argsort(keys, kind="stable")]
-        n_total += len(part)
+            part = part[np.argsort(_record_keys(part), kind="stable")]
         store.put(_out_name(r), part.tobytes(), mode=write_mode)
+        return len(part)
+
+    if workers > 1:
+        with ThreadPoolExecutor(max_workers=workers) as ex:
+            n_total = sum(ex.map(reduce_one, range(n_reducers)))
+    else:
+        n_total = sum(reduce_one(r) for r in range(n_reducers))
     reduce_s = time.perf_counter() - t0
 
     # --- validate -----------------------------------------------------------
@@ -136,13 +178,12 @@ def terasort(
 def teravalidate(store: TwoLevelStore, n_reducers: int) -> bool:
     """Global order: within-partition sorted AND partition maxima ordered."""
     prev_max: np.uint64 | None = None
-    weights = 256 ** np.arange(KEY - 1, -1, -1, dtype=np.uint64)
     for r in range(n_reducers):
         raw = store.get(_out_name(r))
         if not raw:
             continue
         part = np.frombuffer(raw, dtype=np.uint8).reshape(-1, RECORD)
-        keys = part[:, :KEY].astype(np.uint64) @ weights % (1 << 63)
+        keys = _record_keys(part)
         if len(keys) > 1 and (np.diff(keys.astype(np.int64)) < 0).any():
             return False
         if prev_max is not None and len(keys) and keys[0] < prev_max:

@@ -12,8 +12,15 @@ Public surface:
 
 from repro.core.cluster import ClusterSpec, paper_average_cluster, palmetto_cluster, tpu_v5e_pod
 from repro.core.layout import BlockLayout, StripeLayout, TwoLevelLayout, paper_layout
-from repro.core.store import EvictionPolicy, ReadMode, TwoLevelStore, WriteMode
-from repro.core.tiers import BlockNotFound, CapacityExceeded, IntegrityError, MemoryTier, PFSTier
+from repro.core.store import EvictionPolicy, FlushError, ReadMode, TwoLevelStore, WriteMode
+from repro.core.tiers import (
+    BlockNotFound,
+    CapacityExceeded,
+    IntegrityError,
+    MemoryTier,
+    PFSTier,
+    crc32_chunked,
+)
 
 __all__ = [
     "BlockLayout",
@@ -21,6 +28,8 @@ __all__ = [
     "CapacityExceeded",
     "ClusterSpec",
     "EvictionPolicy",
+    "FlushError",
+    "crc32_chunked",
     "IntegrityError",
     "MemoryTier",
     "PFSTier",

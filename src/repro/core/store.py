@@ -7,8 +7,8 @@ Faithful semantics:
   data-node servers (``PFSTier``/``StripeLayout``).
 * **Write modes** (Fig. 4 a-c): ``MEMORY_ONLY``, ``PFS_BYPASS``,
   ``WRITE_THROUGH`` (synchronous dual write — the paper's prototype), plus
-  the beyond-paper ``ASYNC_WRITEBACK`` (bounded queue + background
-  flusher; the paper's prototype is synchronous-only, Section 3.2).
+  the beyond-paper ``ASYNC_WRITEBACK`` (bounded queue + background flush
+  worker pool; the paper's prototype is synchronous-only, Section 3.2).
 * **Read modes** (Fig. 4 d-f): ``MEMORY_ONLY``, ``PFS_BYPASS``, ``TIERED``
   — the priority 'nearest available copy first' policy: memory tier, then
   PFS, promoting (caching) fetched blocks with LRU/LFU eviction.
@@ -17,20 +17,48 @@ Faithful semantics:
   ``get_buffered`` yields 1 MB app-side chunks.
 * Integrity: CRC32 per persisted stripe (PFSTier) + per-block CRC in the
   store's block table, checked on every read.
+
+Concurrency model (DESIGN.md §3) — the data path is parallel end to end:
+
+* ``put``/``get`` fan a file's blocks out over a shared thread pool
+  (``io_workers``, default one worker per PFS server), so PFS transfers
+  for different blocks overlap and aggregate throughput scales with the
+  server count the way the Section 4 model predicts.
+* Locking is sharded: a per-file readers-writer lock gives whole-file
+  snapshot semantics (no torn multi-block reads across an overwrite), 64
+  striped per-block locks serialize data movement of one block, and one
+  short-critical-section metadata mutex guards the block/file tables.  No
+  lock is ever held across a PFS transfer except the block's own stripe
+  lock.  Lock order: file RW lock → block lock → metadata mutex.
+* ``ASYNC_WRITEBACK`` flushes through a pool of ``flush_workers`` threads
+  draining a bounded queue, coalescing superseded flushes of the same key
+  (rapid re-puts flush once, with the latest bytes).
+* ``get_buffered`` is a true streaming iterator: per-block ``memoryview``
+  chunks with ``readahead_blocks`` of PFS prefetch in flight, never
+  materializing the whole file.  ``put_stream`` is its write-side dual.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import enum
+import heapq
+import itertools
 import queue
 import threading
-import zlib
-from collections import OrderedDict, defaultdict
-from typing import Iterator
+from collections import OrderedDict, deque
+from concurrent.futures import ThreadPoolExecutor
+from typing import Iterable, Iterator
 
 from repro.core.layout import BlockLayout
-from repro.core.tiers import BlockNotFound, CapacityExceeded, IntegrityError, MemoryTier, PFSTier
+from repro.core.tiers import (
+    BlockNotFound,
+    CapacityExceeded,
+    IntegrityError,
+    MemoryTier,
+    PFSTier,
+    crc32_chunked,
+)
 
 
 class WriteMode(enum.Enum):
@@ -58,6 +86,7 @@ class StoreStats:
     promotions: int = 0
     evictions: int = 0
     async_flushes: int = 0
+    flushes_coalesced: int = 0
     integrity_failures: int = 0
 
     def hit_rate(self) -> float:
@@ -84,8 +113,54 @@ class FlushError(Exception):
     """Raised from drain() if a background flush failed."""
 
 
+class _RWLock:
+    """Writer-preferring readers-writer lock (per logical file).
+
+    Readers of one file run concurrently; a writer (put / put_stream /
+    delete) is exclusive, so a multi-block read can never observe a mix of
+    old and new blocks across an overwrite.
+    """
+
+    __slots__ = ("_cond", "_readers", "_writer", "_writers_waiting")
+
+    def __init__(self) -> None:
+        self._cond = threading.Condition()
+        self._readers = 0
+        self._writer = False
+        self._writers_waiting = 0
+
+    def acquire_read(self) -> None:
+        with self._cond:
+            while self._writer or self._writers_waiting:
+                self._cond.wait()
+            self._readers += 1
+
+    def release_read(self) -> None:
+        with self._cond:
+            self._readers -= 1
+            if not self._readers:
+                self._cond.notify_all()
+
+    def acquire_write(self) -> None:
+        with self._cond:
+            self._writers_waiting += 1
+            try:
+                while self._writer or self._readers:
+                    self._cond.wait()
+            finally:
+                self._writers_waiting -= 1
+            self._writer = True
+
+    def release_write(self) -> None:
+        with self._cond:
+            self._writer = False
+            self._cond.notify_all()
+
+
 class TwoLevelStore:
     """The integrated two-level storage system."""
+
+    _N_BLOCK_LOCKS = 64
 
     def __init__(
         self,
@@ -102,32 +177,59 @@ class TwoLevelStore:
         pfs_buffer_bytes: int = 4 * 2**20,  # paper: 4 MB Tachyon<->OrangeFS
         async_queue_depth: int = 64,
         fsync: bool = False,
+        io_workers: int | None = None,
+        flush_workers: int = 2,
+        readahead_blocks: int = 2,
     ) -> None:
         self.layout = BlockLayout(block_bytes)
         self.mem = MemoryTier(mem_capacity_bytes)
+        # One in-flight request per PFS server by default — the paper's
+        # aggregate-throughput model (Section 4) saturates M servers with M
+        # concurrent streams; more buys nothing, fewer leaves servers idle.
+        self.io_workers = max(1, n_pfs_servers if io_workers is None else io_workers)
         self.pfs = PFSTier(
             pfs_root,
             n_servers=n_pfs_servers,
             stripe_bytes=stripe_bytes,
             io_buffer_bytes=pfs_buffer_bytes,
             fsync=fsync,
+            io_workers=self.io_workers,
         )
         self.write_mode = write_mode
         self.read_mode = read_mode
         self.eviction = eviction
         self.cache_on_read = cache_on_read
         self.app_buffer_bytes = app_buffer_bytes
+        self.readahead_blocks = max(0, readahead_blocks)
         self.stats = StoreStats()
 
-        self._lock = threading.RLock()
-        self._files: dict[str, _FileMeta] = {}
-        self._blocks: OrderedDict[str, _BlockMeta] = OrderedDict()  # LRU order
-        self._dirty: set[str] = set()
+        # Sharded locking (see module docstring for the lock order).
+        self._meta = threading.Lock()
+        self._block_locks = [threading.RLock() for _ in range(self._N_BLOCK_LOCKS)]
+        self._file_locks: dict[str, _RWLock] = {}
 
+        self._files: dict[str, _FileMeta] = {}
+        self._blocks: dict[str, _BlockMeta] = {}
+        self._dirty: set[str] = set()
+        # Memory-resident keys in LRU order → O(1) LRU victim selection.
+        self._resident: OrderedDict[str, None] = OrderedDict()
+        # Lazy (freq, seq, key) heap → O(log n) LFU victim selection; stale
+        # entries (freq bumped or block evicted since push) are skipped on pop.
+        self._lfu_heap: list[tuple[int, int, str]] = []
+        self._lfu_seq = itertools.count()
+
+        self._pool = ThreadPoolExecutor(
+            max_workers=self.io_workers, thread_name_prefix="tls-io"
+        )
+        self.flush_workers = max(1, flush_workers)
         self._flush_q: queue.Queue[str | None] = queue.Queue(maxsize=async_queue_depth)
         self._flush_errors: list[Exception] = []
-        self._flusher = threading.Thread(target=self._flush_loop, daemon=True, name="tls-flusher")
-        self._flusher.start()
+        self._flushers = [
+            threading.Thread(target=self._flush_loop, daemon=True, name=f"tls-flusher-{i}")
+            for i in range(self.flush_workers)
+        ]
+        for t in self._flushers:
+            t.start()
         self._closed = False
 
     # ------------------------------------------------------------------ util
@@ -136,75 +238,251 @@ class TwoLevelStore:
     def _bkey(name: str, idx: int) -> str:
         return f"{name}:{idx:06d}"
 
-    def _touch(self, meta: _BlockMeta) -> None:
+    def _block_lock(self, bkey: str) -> threading.RLock:
+        return self._block_locks[hash(bkey) % self._N_BLOCK_LOCKS]
+
+    def _file_lock(self, name: str) -> _RWLock:
+        with self._meta:
+            lock = self._file_locks.get(name)
+            if lock is None:
+                lock = self._file_locks[name] = _RWLock()
+            return lock
+
+    def _acquire_file(self, name: str, write: bool) -> _RWLock:
+        """Acquire the per-file lock, surviving pruning by delete().
+
+        delete() drops the registry entry for a file's lock; anyone who was
+        blocked on the old object re-checks identity after acquiring and
+        retries on the replacement, so two writers can never hold different
+        lock objects for the same name.
+        """
+        while True:
+            lock = self._file_lock(name)
+            lock.acquire_write() if write else lock.acquire_read()
+            with self._meta:
+                if self._file_locks.get(name) is lock:
+                    return lock
+            lock.release_write() if write else lock.release_read()
+
+    def _touch_locked(self, meta: _BlockMeta) -> None:
+        """Record a hit on a resident block (caller holds the meta mutex)."""
         meta.freq += 1
-        self._blocks.move_to_end(meta.key)
+        if meta.key in self._resident:
+            self._resident.move_to_end(meta.key)
+        if self.eviction is EvictionPolicy.LFU:
+            heapq.heappush(self._lfu_heap, (meta.freq, next(self._lfu_seq), meta.key))
+            # Lazy invalidation leaves one stale entry per touch; compact
+            # when stale entries dominate so a hit-heavy workload with no
+            # evictions can't grow the heap without bound.
+            if len(self._lfu_heap) > 64 + 4 * len(self._resident):
+                self._lfu_heap = [
+                    (m.freq, next(self._lfu_seq), k)
+                    for k in self._resident
+                    if (m := self._blocks.get(k)) is not None
+                ]
+                heapq.heapify(self._lfu_heap)
 
     # --------------------------------------------------------------- eviction
 
-    def _evict_until(self, need_bytes: int) -> None:
-        """Evict clean cached blocks until ``need_bytes`` fit in the memory tier.
+    def _pop_victim(self) -> str | None:
+        """Reserve and return the next eviction victim — O(1) LRU, O(log n) LFU."""
+        with self._meta:
+            if self.eviction is EvictionPolicy.LRU:
+                while self._resident:
+                    k = next(iter(self._resident))
+                    del self._resident[k]
+                    if self.mem.contains(k):
+                        return k
+                return None
+            while self._lfu_heap:
+                freq, _, k = heapq.heappop(self._lfu_heap)
+                meta = self._blocks.get(k)
+                if k not in self._resident or meta is None or meta.freq != freq:
+                    continue  # stale heap entry — a fresher one exists
+                del self._resident[k]
+                if self.mem.contains(k):
+                    return k
+            return None
 
-        Dirty blocks (pending async write-back) are flushed synchronously
-        before eviction — durability is never sacrificed to make room.
+    def _evict(self, victim: str) -> None:
+        """Evict one reserved victim, flushing it first if dirty.
+
+        Durability is never sacrificed to make room: a dirty block is
+        claimed and written down synchronously before its memory copy goes.
         """
-        while self.mem.free_bytes < need_bytes:
-            victim = self._pick_victim()
-            if victim is None:
-                raise CapacityExceeded(
-                    f"cannot make room for {need_bytes} bytes "
-                    f"(capacity {self.mem.capacity_bytes}, used {self.mem.used_bytes})"
-                )
-            meta = self._blocks[victim]
-            if meta.dirty:
-                self._flush_block(victim)
+        with self._block_lock(victim):
+            with self._meta:
+                meta = self._blocks.get(victim)
+                claimed = victim in self._dirty
+                self._dirty.discard(victim)
+            if claimed and meta is not None and meta.dirty:
+                self._flush_now(victim, meta)
             self.mem.delete(victim)
-            del self._blocks[victim]
+        with self._meta:
+            self._blocks.pop(victim, None)
             self.stats.evictions += 1
 
-    def _pick_victim(self) -> str | None:
-        candidates = [k for k in self._blocks if self.mem.contains(k)]
-        if not candidates:
-            return None
-        if self.eviction is EvictionPolicy.LRU:
-            return candidates[0]  # OrderedDict front = least recently used
-        return min(candidates, key=lambda k: (self._blocks[k].freq, k))
+    def _cache_block(self, meta: _BlockMeta, chunk) -> None:
+        """Insert a block into the memory tier, evicting until it fits."""
+        while True:
+            try:
+                with self._block_lock(meta.key):
+                    self.mem.put(meta.key, chunk)
+                break
+            except CapacityExceeded:
+                victim = self._pop_victim()
+                if victim is None:
+                    raise
+                self._evict(victim)
+        with self._meta:
+            self._resident[meta.key] = None
+            self._resident.move_to_end(meta.key)
+            if self.eviction is EvictionPolicy.LFU:
+                heapq.heappush(self._lfu_heap, (meta.freq, next(self._lfu_seq), meta.key))
 
     # ------------------------------------------------------------ write path
 
-    def put(self, name: str, data: bytes, mode: WriteMode | None = None) -> None:
-        """Write a whole logical file through the configured write mode."""
+    def put(self, name: str, data, mode: WriteMode | None = None) -> None:
+        """Write a whole logical file through the configured write mode.
+
+        Blocks are dispatched to the PFS tier concurrently (``io_workers``
+        in flight); the call returns once every block is durable per the
+        mode's contract.
+        """
         mode = mode or self.write_mode
         if self._closed:
             raise RuntimeError("store is closed")
-        with self._lock:
-            if name in self._files:
-                self.delete(name)
-            self._files[name] = _FileMeta(size=len(data), n_blocks=self.layout.n_blocks(len(data)))
-            for block in self.layout.blocks(len(data)):
-                chunk = data[block.offset : block.end]
-                bkey = self._bkey(name, block.index)
-                meta = _BlockMeta(key=bkey, length=len(chunk), crc=zlib.crc32(chunk))
-                if mode is WriteMode.PFS_BYPASS:
-                    self.pfs.put(bkey, chunk)
-                elif mode is WriteMode.MEMORY_ONLY:
-                    self._cache_block(meta, chunk)
-                elif mode is WriteMode.WRITE_THROUGH:
-                    # Paper mode (c): synchronous dual write.
-                    self._cache_block(meta, chunk)
-                    self.pfs.put(bkey, chunk)
-                elif mode is WriteMode.ASYNC_WRITEBACK:
-                    meta.dirty = True
-                    self._cache_block(meta, chunk)
-                    self._dirty.add(bkey)
-                    self._flush_q.put(bkey)  # blocks when queue is full (bounded)
-                self._blocks.setdefault(bkey, meta)
-                self._blocks[bkey] = meta
-                self._blocks.move_to_end(bkey)
+        mv = memoryview(data)
+        flock = self._acquire_file(name, write=True)
+        try:
+            n_new = self.layout.n_blocks(len(mv))
+            self._prepare_overwrite(name, n_new, mode)
+            with self._meta:
+                self._files[name] = _FileMeta(size=len(mv), n_blocks=n_new)
+            futures = []
+            for block in self.layout.blocks(len(mv)):
+                self._put_block(
+                    self._bkey(name, block.index), mv[block.offset : block.end], mode, futures
+                )
+            for f in futures:
+                f.result()
+        finally:
+            flock.release_write()
 
-    def _cache_block(self, meta: _BlockMeta, chunk: bytes) -> None:
-        self._evict_until(len(chunk))
-        self.mem.put(meta.key, chunk)
+    def _prepare_overwrite(self, name: str, n_new: int, mode: WriteMode) -> None:
+        """Make room for an overwrite (caller holds the file write lock).
+
+        Blocks ``[0, n_new)`` are overwritten *in place* — no delete+rewrite
+        round trip, and a still-dirty block being re-put coalesces with its
+        queued flush.  Only the stale tail beyond ``n_new`` is removed (the
+        probe also clears leftover PFS blocks of a cold file, so a restart
+        can never resurrect a longer stale version).  ``MEMORY_ONLY`` is the
+        exception: it must not leave durable copies of the old version, so
+        it deletes the file outright first.
+        """
+        if mode is WriteMode.MEMORY_ONLY:
+            with self._meta:
+                existed = name in self._files
+            if existed or self.pfs.contains(self._bkey(name, 0)):
+                self._delete_impl(name)
+            return
+        with self._meta:
+            old = self._files.get(name)
+        self._trim_tail(name, n_new, old.n_blocks if old else 0)
+
+    def put_stream(self, name: str, chunks: Iterable, mode: WriteMode | None = None) -> int:
+        """Write a file from an iterable of byte chunks without materializing it.
+
+        Chunks are re-blocked to ``block_bytes`` and each block enters the
+        write path as soon as it fills, overlapping upstream chunk
+        production with PFS transfers.  Returns the total bytes written.
+        """
+        mode = mode or self.write_mode
+        if self._closed:
+            raise RuntimeError("store is closed")
+        flock = self._acquire_file(name, write=True)
+        try:
+            if mode is WriteMode.MEMORY_ONLY:
+                self._prepare_overwrite(name, 0, mode)
+            futures: list = []
+            buf = bytearray()
+            idx = total = 0
+            bb = self.layout.block_size
+            for chunk in chunks:
+                total += len(chunk)
+                buf += chunk
+                while len(buf) >= bb:
+                    self._put_block(self._bkey(name, idx), bytes(buf[:bb]), mode, futures)
+                    del buf[:bb]
+                    idx += 1
+            if buf:
+                self._put_block(self._bkey(name, idx), bytes(buf), mode, futures)
+                idx += 1
+            with self._meta:
+                old = self._files.get(name)
+                self._files[name] = _FileMeta(size=total, n_blocks=idx)
+            self._trim_tail(name, idx, old.n_blocks if old else 0)
+            for f in futures:
+                f.result()
+            return total
+        finally:
+            flock.release_write()
+
+    def _put_block(self, bkey: str, chunk, mode: WriteMode, futures: list) -> None:
+        """Route one block through the write mode (caller holds file write lock).
+
+        For PFS-writing modes the block CRC is produced *by* the transfer —
+        the stripe writers fold CRC32 over the chunks they move and the
+        combined object CRC comes back with the pooled future — so the
+        caller thread never runs a separate checksum pass.
+        """
+        if mode is WriteMode.PFS_BYPASS:
+            # Bypass writes must also invalidate any resident copy of the
+            # block being overwritten in place, or later tiered reads would
+            # serve stale memory bytes against the new CRC.
+            with self._block_lock(bkey):
+                self.mem.delete(bkey)
+            meta = _BlockMeta(key=bkey, length=len(chunk), crc=0)
+            with self._meta:
+                self._blocks[bkey] = meta
+                self._dirty.discard(bkey)
+                self._resident.pop(bkey, None)
+            futures.append(self._pool.submit(self._pfs_put, bkey, chunk, meta))
+        elif mode is WriteMode.MEMORY_ONLY:
+            meta = _BlockMeta(key=bkey, length=len(chunk), crc=crc32_chunked(chunk))
+            self._cache_block(meta, chunk)
+            with self._meta:
+                self._blocks[bkey] = meta
+        elif mode is WriteMode.WRITE_THROUGH:
+            # Paper mode (c): dual write — memory insert now, PFS in flight.
+            meta = _BlockMeta(key=bkey, length=len(chunk), crc=0)
+            self._cache_block(meta, chunk)
+            with self._meta:
+                self._blocks[bkey] = meta
+            futures.append(self._pool.submit(self._pfs_put, bkey, chunk, meta))
+        elif mode is WriteMode.ASYNC_WRITEBACK:
+            meta = _BlockMeta(key=bkey, length=len(chunk), crc=crc32_chunked(chunk))
+            meta.dirty = True
+            self._cache_block(meta, chunk)
+            with self._meta:
+                self._blocks[bkey] = meta
+                if bkey in self._dirty:
+                    # Coalesce: a flush for this key is already queued; it
+                    # will pick up the latest bytes from the memory tier.
+                    self.stats.flushes_coalesced += 1
+                    enqueue = False
+                else:
+                    self._dirty.add(bkey)
+                    enqueue = True
+            if enqueue:
+                self._flush_q.put(bkey)  # blocks when queue is full (bounded)
+
+    def _pfs_put(self, bkey: str, chunk, meta: _BlockMeta | None = None) -> None:
+        with self._block_lock(bkey):
+            crc = self.pfs.put(bkey, chunk)
+        if meta is not None:
+            with self._meta:
+                meta.crc = crc
 
     # -------------------------------------------------------- async flushing
 
@@ -215,147 +493,254 @@ class TwoLevelStore:
                 self._flush_q.task_done()
                 return
             try:
-                with self._lock:
-                    if bkey in self._dirty:
-                        self._flush_block(bkey)
+                self._claim_and_flush(bkey)
             except Exception as exc:  # pragma: no cover - defensive
-                self._flush_errors.append(exc)
+                with self._meta:
+                    self._flush_errors.append(exc)
             finally:
                 self._flush_q.task_done()
 
-    def _flush_block(self, bkey: str) -> None:
-        """Write one dirty block down to the PFS tier (caller holds lock)."""
-        meta = self._blocks.get(bkey)
-        if meta is None or not meta.dirty:
-            self._dirty.discard(bkey)
-            return
-        data = self.mem.get(bkey, 0, meta.length)
-        self.pfs.put(bkey, data)
-        meta.dirty = False
-        self._dirty.discard(bkey)
-        self.stats.async_flushes += 1
+    def _claim_and_flush(self, bkey: str) -> None:
+        """Flush ``bkey`` if it is still dirty (superseded claims are no-ops).
+
+        Claim and flush happen under the block lock as one atomic unit:
+        an evictor holding the lock either sees the key still dirty (and
+        flushes it itself before deleting) or sees our finished flush —
+        there is no window where a claimed-but-unflushed block can have its
+        memory copy evicted.
+        """
+        with self._block_lock(bkey):
+            with self._meta:
+                claimed = bkey in self._dirty
+                self._dirty.discard(bkey)
+                meta = self._blocks.get(bkey)
+            if claimed and meta is not None and meta.dirty:
+                self._flush_now(bkey, meta)
+
+    def _flush_now(self, bkey: str, meta: _BlockMeta) -> None:
+        """Write one dirty block down to the PFS tier (caller holds block lock)."""
+        try:
+            view = self.mem.get_view(bkey)
+        except BlockNotFound:
+            return  # block deleted/superseded since the claim
+        self.pfs.put(bkey, view)
+        with self._meta:
+            meta.dirty = False
+            self.stats.async_flushes += 1
 
     def drain(self) -> None:
         """Durability barrier: block until every dirty block is on the PFS tier."""
         self._flush_q.join()
-        with self._lock:
-            for bkey in list(self._dirty):
-                self._flush_block(bkey)
-        if self._flush_errors:
+        with self._meta:
+            pending = list(self._dirty)
+        for bkey in pending:
+            self._claim_and_flush(bkey)
+        with self._meta:
             errs, self._flush_errors = self._flush_errors, []
+        if errs:
             raise FlushError(f"{len(errs)} background flushes failed: {errs[0]!r}") from errs[0]
 
     # ------------------------------------------------------------- read path
 
     def get(self, name: str, mode: ReadMode | None = None) -> bytes:
-        """Read a whole logical file through the configured read mode."""
+        """Read a whole logical file through the configured read mode.
+
+        Blocks are fetched concurrently — memory-tier hits are zero-copy
+        views, misses stream from the PFS tier in parallel stripes.
+        """
         mode = mode or self.read_mode
-        with self._lock:
-            fmeta = self._files.get(name)
-        if fmeta is None:
-            # File may exist only on the PFS tier (e.g. restart after losing RAM).
-            return self._get_cold(name, mode)
-        return b"".join(self._read_block(name, i, mode) for i in range(fmeta.n_blocks))
+        flock = self._acquire_file(name, write=False)
+        try:
+            with self._meta:
+                fmeta = self._files.get(name)
+            if fmeta is None:
+                # File may exist only on the PFS tier (restart after losing RAM).
+                return self._get_cold(name, mode)
+            if fmeta.n_blocks <= 1:
+                return bytes(self._read_block(name, 0, mode)) if fmeta.n_blocks else b""
+            futures = [
+                self._pool.submit(self._read_block, name, i, mode)
+                for i in range(fmeta.n_blocks)
+            ]
+            return b"".join(f.result() for f in futures)
+        finally:
+            flock.release_read()
 
-    def get_buffered(self, name: str, mode: ReadMode | None = None) -> Iterator[bytes]:
-        """Stream a file in app-side buffer chunks (paper's 1 MB requests)."""
-        data = self.get(name, mode)
-        for off in range(0, len(data), self.app_buffer_bytes):
-            yield data[off : off + self.app_buffer_bytes]
+    def get_buffered(
+        self, name: str, mode: ReadMode | None = None, readahead: int | None = None
+    ) -> Iterator[memoryview]:
+        """Stream a file in app-side buffer chunks (paper's 1 MB requests).
 
-    def _read_block(self, name: str, idx: int, mode: ReadMode) -> bytes:
+        True streaming: yields per-block ``memoryview`` slices while up to
+        ``readahead`` further blocks are prefetched from the PFS tier in the
+        background — the whole file is never materialized.  The file's read
+        lock is held while the generator is live; don't overwrite/delete the
+        same file from the consuming thread mid-iteration.
+        """
+        mode = mode or self.read_mode
+        ra = self.readahead_blocks if readahead is None else max(0, readahead)
+        flock = self._acquire_file(name, write=False)
+        try:
+            with self._meta:
+                fmeta = self._files.get(name)
+            if fmeta is None:
+                data = memoryview(self._get_cold(name, mode))
+                for off in range(0, len(data), self.app_buffer_bytes):
+                    yield data[off : off + self.app_buffer_bytes]
+                return
+            pending: deque = deque()
+            nxt = 0
+            while nxt < fmeta.n_blocks and len(pending) <= ra:
+                pending.append(self._pool.submit(self._read_block, name, nxt, mode))
+                nxt += 1
+            while pending:
+                data = memoryview(pending.popleft().result())
+                if nxt < fmeta.n_blocks:
+                    pending.append(self._pool.submit(self._read_block, name, nxt, mode))
+                    nxt += 1
+                for off in range(0, len(data), self.app_buffer_bytes):
+                    yield data[off : off + self.app_buffer_bytes]
+        finally:
+            flock.release_read()
+
+    def _read_block(self, name: str, idx: int, mode: ReadMode):
+        """Fetch one block: memory view on a hit, parallel PFS stripes on a miss."""
         bkey = self._bkey(name, idx)
-        with self._lock:
-            meta = self._blocks.get(bkey)
-            if mode is not ReadMode.PFS_BYPASS and self.mem.contains(bkey):
+        meta = self._blocks.get(bkey)  # lock-free table read (GIL-atomic)
+        if mode is not ReadMode.PFS_BYPASS:
+            try:
+                view = self.mem.get_view(bkey)
+            except BlockNotFound:
+                view = None
+            if view is not None:
                 # Priority read policy: nearest copy (local memory tier) first.
-                self.stats.mem_hits += 1
-                if meta:
-                    self._touch(meta)
-                data = self.mem.get(bkey)
-                if meta and zlib.crc32(data) != meta.crc:
-                    self.stats.integrity_failures += 1
+                with self._meta:
+                    self.stats.mem_hits += 1
+                    if meta is not None:
+                        self._touch_locked(meta)
+                if meta is not None and crc32_chunked(view) != meta.crc:
+                    with self._meta:
+                        self.stats.integrity_failures += 1
                     raise IntegrityError(f"memory-tier CRC mismatch for {bkey}")
-                return data
-            if mode is ReadMode.MEMORY_ONLY:
-                raise BlockNotFound(bkey)
+                return view
+        if mode is ReadMode.MEMORY_ONLY:
+            raise BlockNotFound(bkey)
+        with self._meta:
             self.stats.mem_misses += 1
-            data = self.pfs.get(bkey)
-            if meta and zlib.crc32(data) != meta.crc:
+        # Stripe-parallel zero-copy fetch: stripes assemble straight into the
+        # block buffer and the verified per-stripe CRCs combine into the
+        # whole-block CRC, so the end-to-end check costs no extra data pass.
+        buf = bytearray(meta.length if meta is not None else self.layout.block_size)
+        try:
+            n, crc = self.pfs.readinto(bkey, buf)
+        except ValueError:
+            with self._meta:
                 self.stats.integrity_failures += 1
-                raise IntegrityError(f"PFS CRC mismatch for {bkey}")
-            if mode is ReadMode.TIERED and self.cache_on_read:
-                try:
-                    new_meta = meta or _BlockMeta(key=bkey, length=len(data), crc=zlib.crc32(data))
-                    self._cache_block(new_meta, data)
+            raise IntegrityError(f"PFS object larger than block table entry for {bkey}") from None
+        data = memoryview(buf)[:n]
+        if crc is None:
+            crc = crc32_chunked(data)
+        if meta is not None and (n != meta.length or crc != meta.crc):
+            with self._meta:
+                self.stats.integrity_failures += 1
+            raise IntegrityError(f"PFS CRC mismatch for {bkey}")
+        if mode is ReadMode.TIERED and self.cache_on_read:
+            new_meta = meta or _BlockMeta(key=bkey, length=len(data), crc=crc)
+            try:
+                self._cache_block(new_meta, data)
+                with self._meta:
                     self._blocks[bkey] = new_meta
-                    self._blocks.move_to_end(bkey)
                     self.stats.promotions += 1
-                except CapacityExceeded:
-                    pass  # larger-than-cache block: serve without promoting
-            return data
+            except CapacityExceeded:
+                pass  # larger-than-cache block: serve without promoting
+        return data
 
     def _get_cold(self, name: str, mode: ReadMode) -> bytes:
         """Reassemble a file known only to the PFS tier (post-restart path)."""
         if mode is ReadMode.MEMORY_ONLY:
             raise BlockNotFound(name)
-        parts = []
-        idx = 0
-        while True:
-            bkey = self._bkey(name, idx)
-            if not self.pfs.contains(bkey):
-                break
-            parts.append(self.pfs.get(bkey))
-            idx += 1
-        if not parts:
+        n = 0
+        while self.pfs.contains(self._bkey(name, n)):
+            n += 1
+        if n == 0:
             raise BlockNotFound(name)
+        if n == 1:
+            parts = [self.pfs.get(self._bkey(name, 0))]
+        else:
+            parts = list(self._pool.map(lambda i: self.pfs.get(self._bkey(name, i)), range(n)))
         data = b"".join(parts)
-        with self._lock:
-            self._files[name] = _FileMeta(size=len(data), n_blocks=idx)
-            for block in self.layout.blocks(len(data)):
-                bkey = self._bkey(name, block.index)
-                chunk = data[block.offset : block.end]
-                self._blocks.setdefault(
-                    bkey, _BlockMeta(key=bkey, length=len(chunk), crc=zlib.crc32(chunk))
-                )
+        with self._meta:
+            self._files[name] = _FileMeta(size=len(data), n_blocks=n)
+            off = 0
+            for i, part in enumerate(parts):
+                bkey = self._bkey(name, i)
+                if bkey not in self._blocks:
+                    self._blocks[bkey] = _BlockMeta(
+                        key=bkey, length=len(part), crc=crc32_chunked(part)
+                    )
+                off += len(part)
         return data
 
     # ---------------------------------------------------------------- manage
 
     def exists(self, name: str) -> bool:
-        with self._lock:
+        with self._meta:
             if name in self._files:
                 return True
         return self.pfs.contains(self._bkey(name, 0))
 
     def file_size(self, name: str) -> int:
-        with self._lock:
+        with self._meta:
             if name in self._files:
                 return self._files[name].size
         return len(self._get_cold(name, ReadMode.PFS_BYPASS))
 
     def delete(self, name: str) -> bool:
-        with self._lock:
+        flock = self._acquire_file(name, write=True)
+        try:
+            found = self._delete_impl(name)
+            with self._meta:
+                # Prune the registry entry so deleted names don't leak lock
+                # objects; blocked waiters re-check identity and retry.
+                if self._file_locks.get(name) is flock:
+                    del self._file_locks[name]
+            return found
+        finally:
+            flock.release_write()
+
+    def _delete_impl(self, name: str) -> bool:
+        """Remove a file from both tiers (caller holds the file write lock)."""
+        with self._meta:
             fmeta = self._files.pop(name, None)
-            found = fmeta is not None
-            idx = 0
-            while True:
-                bkey = self._bkey(name, idx)
+        found = fmeta is not None
+        removed = self._trim_tail(name, 0, fmeta.n_blocks if fmeta else 0)
+        return found or removed
+
+    def _trim_tail(self, name: str, start: int, known_n: int) -> bool:
+        """Remove blocks ``start..`` from both tiers, probing past ``known_n``
+        for stale leftovers (caller holds the file write lock)."""
+        removed = False
+        idx = start
+        while True:
+            bkey = self._bkey(name, idx)
+            with self._block_lock(bkey):
                 in_mem = self.mem.delete(bkey)
                 in_pfs = self.pfs.delete(bkey)
+            with self._meta:
                 self._blocks.pop(bkey, None)
                 self._dirty.discard(bkey)
-                if not (in_mem or in_pfs):
-                    if fmeta is None or idx >= fmeta.n_blocks:
-                        break
-                else:
-                    found = True
-                idx += 1
-            return found
+                self._resident.pop(bkey, None)
+            if not (in_mem or in_pfs):
+                if idx >= known_n:
+                    break
+            else:
+                removed = True
+            idx += 1
+        return removed
 
     def resident_fraction(self, name: str | None = None) -> float:
         """The paper's ``f``: fraction of bytes resident in the memory tier."""
-        with self._lock:
+        with self._meta:
             total = hot = 0
             for bkey, meta in self._blocks.items():
                 if name is not None and not bkey.startswith(name + ":"):
@@ -366,7 +751,7 @@ class TwoLevelStore:
         return hot / total if total else 0.0
 
     def list_files(self) -> list[str]:
-        with self._lock:
+        with self._meta:
             names = set(self._files)
         for key in self.pfs.keys():
             names.add(key.rsplit(":", 1)[0])
@@ -387,8 +772,12 @@ class TwoLevelStore:
             return
         self.drain()
         self._closed = True
-        self._flush_q.put(None)
-        self._flusher.join(timeout=10)
+        for _ in self._flushers:
+            self._flush_q.put(None)
+        for t in self._flushers:
+            t.join(timeout=10)
+        self._pool.shutdown(wait=True)
+        self.pfs.close()
 
     def __enter__(self) -> "TwoLevelStore":
         return self

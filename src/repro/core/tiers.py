@@ -1,14 +1,25 @@
 """Storage tiers: a per-host in-memory block store and a striped PFS tier.
 
 ``MemoryTier`` is the Tachyon analogue — a capacity-bounded, thread-safe,
-in-RAM block store local to a compute host.  ``PFSTier`` is the OrangeFS
-analogue — server-striped files on a shared directory tree (one
+in-RAM block store local to a compute host.  It stores immutable ``bytes``
+objects and serves zero-copy ``memoryview`` slices (``get_view``), so a
+reader never pays a copy for a memory-tier hit.  ``PFSTier`` is the
+OrangeFS analogue — server-striped files on a shared directory tree (one
 subdirectory per data-node server), with per-stripe CRC checksums standing
-in for the data-node-internal erasure coding (DESIGN.md §6).
+in for the data-node-internal erasure coding (DESIGN.md §4).
+
+The PFS tier moves stripe units **in parallel**: each logical object's
+stripe units are laid out round-robin across the server directories, and a
+shared thread pool (sized to ``n_servers`` by default — one in-flight
+request per data-node, the paper's aggregate-throughput model) reads and
+writes the units concurrently.  Reads assemble stripes zero-copy via
+``readinto`` on a preallocated buffer; CRC32 is folded incrementally over
+the same 4 MB chunks that move the bytes, so integrity costs no extra pass.
 
 Both tiers move *real bytes* and keep a ``TierStats`` ledger (bytes, ops,
-wall seconds) so benchmarks can report measured throughput alongside the
-analytic model's prediction.
+wall seconds, and first-start/last-end spans) so benchmarks can report both
+per-op and *aggregate* measured throughput alongside the analytic model's
+prediction (DESIGN.md §5).
 """
 
 from __future__ import annotations
@@ -18,7 +29,74 @@ import os
 import threading
 import time
 import zlib
+from concurrent.futures import ThreadPoolExecutor
 from typing import Iterator
+
+#: Granularity at which CRC32 is folded while moving bytes (the paper's
+#: 4 MB Tachyon<->OrangeFS transfer buffer).  Chunking matters for
+#: concurrency: zlib releases the GIL per call, so two threads can overlap
+#: checksum work on a 2-core host instead of serializing on one giant buffer.
+CRC_CHUNK_BYTES = 4 * 2**20
+
+
+def crc32_chunked(data, chunk_bytes: int = CRC_CHUNK_BYTES) -> int:
+    """CRC32 of ``data`` computed incrementally over ``chunk_bytes`` chunks."""
+    mv = memoryview(data)
+    crc = 0
+    for off in range(0, len(mv), chunk_bytes):
+        crc = zlib.crc32(mv[off : off + chunk_bytes], crc)
+    return crc
+
+
+def _gf2_matrix_times(mat: list[int], vec: int) -> int:
+    total = 0
+    i = 0
+    while vec:
+        if vec & 1:
+            total ^= mat[i]
+        vec >>= 1
+        i += 1
+    return total
+
+
+def _gf2_matrix_square(square: list[int], mat: list[int]) -> None:
+    for n in range(32):
+        square[n] = _gf2_matrix_times(mat, mat[n])
+
+
+def crc32_combine(crc1: int, crc2: int, len2: int) -> int:
+    """CRC32 of ``A+B`` given ``crc32(A)``, ``crc32(B)`` and ``len(B)``.
+
+    Port of zlib's ``crc32_combine`` (GF(2) matrix exponentiation of the
+    CRC shift operator).  This is what lets stripe units be checksummed
+    *in parallel* during transfer and still yield the exact whole-block
+    CRC — integrity costs zero extra passes over the data.
+    """
+    if len2 <= 0:
+        return crc1
+    even = [0] * 32  # operator for 2^(2k) zero bits
+    odd = [0] * 32  # operator for 2^(2k+1) zero bits
+    odd[0] = 0xEDB88320  # CRC-32 polynomial, reflected
+    row = 1
+    for n in range(1, 32):
+        odd[n] = row
+        row <<= 1
+    _gf2_matrix_square(even, odd)  # even = one-zero-byte operator squared...
+    _gf2_matrix_square(odd, even)
+    while True:
+        _gf2_matrix_square(even, odd)
+        if len2 & 1:
+            crc1 = _gf2_matrix_times(even, crc1)
+        len2 >>= 1
+        if not len2:
+            break
+        _gf2_matrix_square(odd, even)
+        if len2 & 1:
+            crc1 = _gf2_matrix_times(odd, crc1)
+        len2 >>= 1
+        if not len2:
+            break
+    return crc1 ^ crc2
 
 
 class TierError(Exception):
@@ -45,22 +123,51 @@ class TierStats:
     write_ops: int = 0
     read_seconds: float = 0.0
     write_seconds: float = 0.0
+    # Wall-clock span of the read/write op stream: first op start .. last op
+    # end.  With concurrent ops the per-op seconds above sum *busy* time
+    # across threads (they overcount wall time), so aggregate throughput —
+    # the quantity the paper's Section 4 model predicts — must be computed
+    # over the span instead.
+    read_span_start: float = 0.0
+    read_span_end: float = 0.0
+    write_span_start: float = 0.0
+    write_span_end: float = 0.0
 
-    def record_read(self, nbytes: int, seconds: float) -> None:
+    def record_read(self, nbytes: int, seconds: float, end: float | None = None) -> None:
+        end = time.perf_counter() if end is None else end
+        start = end - seconds
         self.bytes_read += nbytes
         self.read_ops += 1
         self.read_seconds += seconds
+        if not self.read_span_start or start < self.read_span_start:
+            self.read_span_start = start
+        if end > self.read_span_end:
+            self.read_span_end = end
 
-    def record_write(self, nbytes: int, seconds: float) -> None:
+    def record_write(self, nbytes: int, seconds: float, end: float | None = None) -> None:
+        end = time.perf_counter() if end is None else end
+        start = end - seconds
         self.bytes_written += nbytes
         self.write_ops += 1
         self.write_seconds += seconds
+        if not self.write_span_start or start < self.write_span_start:
+            self.write_span_start = start
+        if end > self.write_span_end:
+            self.write_span_end = end
 
     def read_mbps(self) -> float:
         return self.bytes_read / 2**20 / self.read_seconds if self.read_seconds else 0.0
 
     def write_mbps(self) -> float:
         return self.bytes_written / 2**20 / self.write_seconds if self.write_seconds else 0.0
+
+    def aggregate_read_mbps(self) -> float:
+        span = self.read_span_end - self.read_span_start
+        return self.bytes_read / 2**20 / span if span > 0 else 0.0
+
+    def aggregate_write_mbps(self) -> float:
+        span = self.write_span_end - self.write_span_start
+        return self.bytes_written / 2**20 / span if span > 0 else 0.0
 
 
 class MemoryTier:
@@ -69,6 +176,11 @@ class MemoryTier:
     Keys are opaque strings (``"<file>:<block_index>"`` at the store layer).
     Eviction *policy* lives in the store; the tier only enforces capacity
     and exposes usage.
+
+    Blocks are immutable ``bytes``; ``get_view`` hands out zero-copy
+    ``memoryview`` slices.  A view stays valid even if the block is deleted
+    or replaced concurrently — it pins the original bytes object, so readers
+    can never observe a torn block.
     """
 
     def __init__(self, capacity_bytes: int) -> None:
@@ -77,34 +189,43 @@ class MemoryTier:
         self.capacity_bytes = capacity_bytes
         self._data: dict[str, bytes] = {}
         self._used = 0
-        self._lock = threading.RLock()
+        self._lock = threading.Lock()
+        self._stats_lock = threading.Lock()
         self.stats = TierStats()
 
     # -- core ops -----------------------------------------------------------
 
-    def put(self, key: str, data: bytes) -> None:
+    def put(self, key: str, data) -> None:
         t0 = time.perf_counter()
+        blob = data if type(data) is bytes else bytes(data)
         with self._lock:
             old = len(self._data.get(key, b""))
-            new_used = self._used - old + len(data)
+            new_used = self._used - old + len(blob)
             if new_used > self.capacity_bytes:
                 raise CapacityExceeded(
                     f"memory tier full: {new_used}/{self.capacity_bytes} bytes for {key!r}"
                 )
-            self._data[key] = bytes(data)
+            self._data[key] = blob
             self._used = new_used
-        self.stats.record_write(len(data), time.perf_counter() - t0)
+        t1 = time.perf_counter()
+        with self._stats_lock:
+            self.stats.record_write(len(blob), t1 - t0, end=t1)
+
+    def get_view(self, key: str, offset: int = 0, length: int | None = None) -> memoryview:
+        """Zero-copy read: a memoryview over the immutable stored bytes."""
+        t0 = time.perf_counter()
+        blob = self._data.get(key)  # dict read is atomic under the GIL
+        if blob is None:
+            raise BlockNotFound(key)
+        end = len(blob) if length is None else min(len(blob), offset + length)
+        out = memoryview(blob)[offset:end]
+        t1 = time.perf_counter()
+        with self._stats_lock:
+            self.stats.record_read(len(out), t1 - t0, end=t1)
+        return out
 
     def get(self, key: str, offset: int = 0, length: int | None = None) -> bytes:
-        t0 = time.perf_counter()
-        with self._lock:
-            try:
-                blob = self._data[key]
-            except KeyError:
-                raise BlockNotFound(key) from None
-            out = blob[offset:] if length is None else blob[offset : offset + length]
-        self.stats.record_read(len(out), time.perf_counter() - t0)
-        return out
+        return bytes(self.get_view(key, offset, length))
 
     def delete(self, key: str) -> bool:
         with self._lock:
@@ -115,15 +236,13 @@ class MemoryTier:
             return True
 
     def contains(self, key: str) -> bool:
-        with self._lock:
-            return key in self._data
+        return key in self._data
 
     def size_of(self, key: str) -> int:
-        with self._lock:
-            try:
-                return len(self._data[key])
-            except KeyError:
-                raise BlockNotFound(key) from None
+        blob = self._data.get(key)
+        if blob is None:
+            raise BlockNotFound(key)
+        return len(blob)
 
     def keys(self) -> list[str]:
         with self._lock:
@@ -131,13 +250,11 @@ class MemoryTier:
 
     @property
     def used_bytes(self) -> int:
-        with self._lock:
-            return self._used
+        return self._used
 
     @property
     def free_bytes(self) -> int:
-        with self._lock:
-            return self.capacity_bytes - self._used
+        return self.capacity_bytes - self._used
 
     def clear(self) -> None:
         with self._lock:
@@ -156,10 +273,19 @@ class PFSTier:
     Every stripe unit carries a CRC32 recorded in a sidecar manifest,
     validated on read (stand-in for intra-data-node erasure coding).
     Reads/writes stream through ``io_buffer_bytes`` chunks — the paper's
-    4 MB Tachyon↔OrangeFS buffer.
+    4 MB Tachyon↔OrangeFS buffer — with the unit CRC folded incrementally
+    over the same chunks (no separate checksum pass).
+
+    Stripe units of one object are moved **concurrently** by a shared
+    worker pool (default ``n_servers`` workers — at most one in-flight
+    request per data-node directory, which is how the paper's Section 4
+    aggregate-throughput model saturates M servers).  Per-key striped
+    locks serialize put/get/delete of the *same* key; different keys
+    proceed fully in parallel.
     """
 
     MANIFEST_SUFFIX = ".crc"
+    _N_KEY_LOCKS = 64
 
     def __init__(
         self,
@@ -168,6 +294,7 @@ class PFSTier:
         stripe_bytes: int = 64 * 2**20,
         io_buffer_bytes: int = 4 * 2**20,
         fsync: bool = False,
+        io_workers: int | None = None,
     ) -> None:
         if n_servers <= 0 or stripe_bytes <= 0 or io_buffer_bytes <= 0:
             raise ValueError("n_servers, stripe_bytes, io_buffer_bytes must be positive")
@@ -176,12 +303,27 @@ class PFSTier:
         self.stripe_bytes = stripe_bytes
         self.io_buffer_bytes = io_buffer_bytes
         self.fsync = fsync
-        self._lock = threading.RLock()
+        self.io_workers = n_servers if io_workers is None else max(1, io_workers)
+        self._pool: ThreadPoolExecutor | None = (
+            ThreadPoolExecutor(max_workers=self.io_workers, thread_name_prefix="pfs-io")
+            if self.io_workers > 1
+            else None
+        )
+        self._key_locks = [threading.RLock() for _ in range(self._N_KEY_LOCKS)]
+        self._stats_lock = threading.Lock()
         self.stats = TierStats()
         for s in range(n_servers):
             os.makedirs(self._server_dir(s), exist_ok=True)
 
+    def close(self) -> None:
+        if self._pool is not None:
+            self._pool.shutdown(wait=True)
+            self._pool = None
+
     # -- path helpers ---------------------------------------------------------
+
+    def _key_lock(self, key: str) -> threading.RLock:
+        return self._key_locks[hash(key) % self._N_KEY_LOCKS]
 
     def _server_dir(self, server: int) -> str:
         return os.path.join(self.root, f"server_{server:02d}")
@@ -213,29 +355,69 @@ class PFSTier:
             unit += 1
             off += ln
 
+    def _map_units(self, fn, units):
+        """Run ``fn`` over stripe units — concurrently when a pool exists."""
+        if self._pool is not None and len(units) > 1:
+            return list(self._pool.map(fn, units))
+        return [fn(u) for u in units]
+
     # -- core ops -------------------------------------------------------------
 
-    def put(self, key: str, data: bytes) -> None:
+    def put(self, key: str, data) -> int:
+        """Write one object; returns the CRC32 of the whole object.
+
+        Stripe units stream out concurrently, each folding its CRC over the
+        4 MB chunks it writes; the unit CRCs are then combined
+        (``crc32_combine``) into the object CRC — integrity metadata for
+        the layer above at zero extra passes over the data.
+        """
         t0 = time.perf_counter()
-        crcs: list[int] = []
-        with self._lock:
-            for unit, off, ln in self._iter_units(len(data)):
-                chunk = data[off : off + ln]
-                crcs.append(zlib.crc32(chunk))
-                path = self._stripe_path(key, unit)
-                with open(path, "wb") as fh:
-                    for b0 in range(0, ln, self.io_buffer_bytes):
-                        fh.write(chunk[b0 : b0 + self.io_buffer_bytes])
-                    if self.fsync:
-                        fh.flush()
-                        os.fsync(fh.fileno())
-            manifest = f"{len(data)}\n" + "\n".join(f"{c:08x}" for c in crcs) + "\n"
-            with open(self._manifest_path(key), "w") as fh:
-                fh.write(manifest)
+        mv = memoryview(data)
+        units = list(self._iter_units(len(mv)))
+
+        def write_unit(u: tuple[int, int, int]) -> int:
+            unit, off, ln = u
+            crc = 0
+            with open(self._stripe_path(key, unit), "wb") as fh:
+                for b0 in range(off, off + ln, self.io_buffer_bytes):
+                    chunk = mv[b0 : min(b0 + self.io_buffer_bytes, off + ln)]
+                    crc = zlib.crc32(chunk, crc)
+                    fh.write(chunk)
                 if self.fsync:
                     fh.flush()
                     os.fsync(fh.fileno())
-        self.stats.record_write(len(data), time.perf_counter() - t0)
+            return crc
+
+        with self._key_lock(key):
+            crcs = self._map_units(write_unit, units)
+            self._write_manifest(key, len(mv), crcs)
+            # In-place overwrite with fewer units: unlink the stale tail
+            # (units are contiguous, so probe until the first missing file).
+            unit = len(units)
+            while True:
+                try:
+                    os.remove(self._stripe_path(key, unit))
+                except FileNotFoundError:
+                    break
+                unit += 1
+        t1 = time.perf_counter()
+        with self._stats_lock:
+            self.stats.record_write(len(mv), t1 - t0, end=t1)
+        whole = 0
+        for (_, _, ln), crc in zip(units, crcs):
+            whole = crc32_combine(whole, crc, ln)
+        return whole
+
+    def _write_manifest(self, key: str, total: int, crcs: list[int]) -> None:
+        manifest = f"{total}\n" + "\n".join(f"{c:08x}" for c in crcs) + "\n"
+        path = self._manifest_path(key)
+        tmp = path + ".tmp"
+        with open(tmp, "w") as fh:
+            fh.write(manifest)
+            if self.fsync:
+                fh.flush()
+                os.fsync(fh.fileno())
+        os.replace(tmp, path)  # atomic: readers see old or new, never partial
 
     def _read_manifest(self, key: str) -> tuple[int, list[int]]:
         try:
@@ -245,32 +427,84 @@ class PFSTier:
             raise BlockNotFound(key) from None
         return int(lines[0]), [int(x, 16) for x in lines[1:] if x]
 
-    def get(self, key: str, offset: int = 0, length: int | None = None) -> bytes:
+    def _read_unit_into(self, key: str, unit: int, uln: int, dst: memoryview, crc_want: int) -> None:
+        """Fill ``dst`` (length ``uln``) from one stripe file, checking CRC."""
+        crc = 0
+        try:
+            with open(self._stripe_path(key, unit), "rb") as fh:
+                pos = 0
+                while pos < uln:
+                    n = fh.readinto(dst[pos : pos + min(self.io_buffer_bytes, uln - pos)])
+                    if not n:
+                        raise IntegrityError(f"truncated stripe unit {unit} of {key!r}")
+                    crc = zlib.crc32(dst[pos : pos + n], crc)
+                    pos += n
+        except FileNotFoundError:
+            raise IntegrityError(f"missing stripe unit {unit} of {key!r}") from None
+        if crc != crc_want:
+            raise IntegrityError(f"CRC mismatch on stripe unit {unit} of {key!r}")
+
+    def readinto(
+        self, key: str, buf, offset: int = 0, length: int | None = None
+    ) -> tuple[int, int | None]:
+        """Zero-copy read of ``[offset, offset+length)`` into ``buf``.
+
+        Stripe units are fetched concurrently (one worker per data-node by
+        default), each ``readinto``-assembled directly at its position in
+        ``buf`` — no intermediate chunk list, no join.  Returns
+        ``(bytes_read, whole_object_crc)``; the CRC is combined from the
+        verified per-unit CRCs (``crc32_combine``) when the full object was
+        read, ``None`` for a partial range.
+        """
         t0 = time.perf_counter()
-        with self._lock:
+        out = memoryview(buf)
+        with self._key_lock(key):
             total, crcs = self._read_manifest(key)
             end = total if length is None else min(total, offset + length)
-            parts: list[bytes] = []
-            for unit, uoff, uln in self._iter_units(total):
-                if uoff + uln <= offset or uoff >= end:
-                    continue
-                path = self._stripe_path(key, unit)
-                try:
-                    with open(path, "rb") as fh:
-                        chunk = b"".join(iter(lambda f=fh: f.read(self.io_buffer_bytes), b""))
-                except FileNotFoundError:
-                    raise IntegrityError(f"missing stripe unit {unit} of {key!r}") from None
-                if zlib.crc32(chunk) != crcs[unit]:
-                    raise IntegrityError(f"CRC mismatch on stripe unit {unit} of {key!r}")
-                lo = max(offset - uoff, 0)
-                hi = min(end - uoff, uln)
-                parts.append(chunk[lo:hi])
-            out = b"".join(parts)
-        self.stats.record_read(len(out), time.perf_counter() - t0)
-        return out
+            want = max(0, end - offset)
+            if len(out) < want:
+                raise ValueError(f"buffer too small: {len(out)} < {want}")
+
+            def read_unit(u: tuple[int, int, int]) -> None:
+                unit, uoff, uln = u
+                if uoff >= offset and uoff + uln <= end:
+                    # Fast path: the whole unit lands inside the request —
+                    # read it straight into place.
+                    self._read_unit_into(key, unit, uln, out[uoff - offset :], crcs[unit])
+                else:
+                    # Boundary unit: CRC covers the whole unit, so stage it
+                    # once, verify, then copy only the overlapping slice.
+                    stage = bytearray(uln)
+                    self._read_unit_into(key, unit, uln, memoryview(stage), crcs[unit])
+                    lo = max(offset - uoff, 0)
+                    hi = min(end - uoff, uln)
+                    out[uoff + lo - offset : uoff + hi - offset] = stage[lo:hi]
+
+            units = [u for u in self._iter_units(total) if u[1] + u[2] > offset and u[1] < end]
+            self._map_units(read_unit, units)
+        t1 = time.perf_counter()
+        with self._stats_lock:
+            self.stats.record_read(want, t1 - t0, end=t1)
+        whole: int | None = None
+        if offset == 0 and end == total:
+            whole = 0
+            for (_, _, ln), crc in zip(units, crcs):
+                whole = crc32_combine(whole, crc, ln)
+        return want, whole
+
+    def get(self, key: str, offset: int = 0, length: int | None = None) -> bytes:
+        # Hold the (reentrant) key lock across sizing AND the read, so a
+        # concurrent put growing the key can't invalidate the buffer size
+        # between the two manifest reads.
+        with self._key_lock(key):
+            total, _ = self._read_manifest(key)
+            end = total if length is None else min(total, offset + length)
+            out = bytearray(max(0, end - offset))
+            self.readinto(key, out, offset, length)
+        return bytes(out)
 
     def delete(self, key: str) -> bool:
-        with self._lock:
+        with self._key_lock(key):
             try:
                 total, _ = self._read_manifest(key)
             except BlockNotFound:
@@ -291,12 +525,11 @@ class PFSTier:
         return total
 
     def keys(self) -> list[str]:
-        with self._lock:
-            out = []
-            for name in os.listdir(self._server_dir(0)):
-                if name.endswith(self.MANIFEST_SUFFIX):
-                    out.append(self._unsafe(name[: -len(self.MANIFEST_SUFFIX)]))
-            return out
+        out = []
+        for name in os.listdir(self._server_dir(0)):
+            if name.endswith(self.MANIFEST_SUFFIX):
+                out.append(self._unsafe(name[: -len(self.MANIFEST_SUFFIX)]))
+        return out
 
     def server_bytes(self) -> dict[int, int]:
         """On-disk bytes per server directory (load-balance check)."""
@@ -306,6 +539,6 @@ class PFSTier:
             out[s] = sum(
                 os.path.getsize(os.path.join(d, f))
                 for f in os.listdir(d)
-                if not f.endswith(self.MANIFEST_SUFFIX)
+                if not f.endswith(self.MANIFEST_SUFFIX) and not f.endswith(".tmp")
             )
         return out

@@ -10,10 +10,12 @@ Design (mirrors the paper's Hadoop-on-TLS data path, DESIGN.md §2):
   most reads hit the local memory tier (the paper's high ridge).
 * The loader is **deterministic and resumable**: ``state()`` returns an
   exact cursor that ``restore()`` resumes from — required by the
-  checkpoint/restart story (EXPERIMENTS.md failure-injection test).
-* A background prefetch thread keeps ``prefetch_depth`` batches staged,
-  overlapping PFS reads with compute (the paper's Tachyon↔OrangeFS 4 MB
-  buffered transfers happen inside the store).
+  checkpoint/restart story (DESIGN.md §6, test_checkpoint.py).
+* Two levels of overlap: shard reads stream block-by-block through the
+  store's readahead iterator (``get_buffered`` keeps PFS stripe fetches in
+  flight while tokens are decoded), and a background prefetch thread keeps
+  ``prefetch_depth`` whole batches staged ahead of the training step
+  (DESIGN.md §3).
 """
 
 from __future__ import annotations
@@ -64,8 +66,21 @@ class SyntheticCorpus:
             self.store.put(name, toks.tobytes(), mode=write_mode)
 
     def read_shard(self, i: int, mode: ReadMode | None = None) -> np.ndarray:
-        raw = self.store.get(self.shard_name(i), mode=mode)
-        return np.frombuffer(raw, dtype=np.int32)
+        """Stream a shard into a token array without materializing the file.
+
+        Fills a preallocated array from the store's readahead iterator, so
+        PFS stripe transfers for later blocks overlap the copy-out of
+        earlier ones and peak extra memory is one block, not the shard.
+        """
+        name = self.shard_name(i)
+        nbytes = self.store.file_size(name)
+        out = np.empty(nbytes // 4, dtype=np.int32)
+        raw = out.view(np.uint8)
+        pos = 0
+        for chunk in self.store.get_buffered(name, mode=mode):
+            raw[pos : pos + len(chunk)] = np.frombuffer(chunk, dtype=np.uint8)
+            pos += len(chunk)
+        return out
 
 
 @dataclasses.dataclass

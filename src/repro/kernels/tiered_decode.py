@@ -30,6 +30,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax renamed TPUCompilerParams -> CompilerParams in 0.6; support both.
+_compiler_params = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
 NEG_INF = -1e30
 LANES = 128
 SUBLANES = 8
@@ -159,7 +162,7 @@ def tiered_decode_attention_fwd(
             pltpu.VMEM((SUBLANES, LANES), jnp.float32),
             pltpu.VMEM((SUBLANES, LANES), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(dimension_semantics=("parallel", "arbitrary")),
+        compiler_params=_compiler_params(dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(qf, hot_k.reshape(b * kv, w_max, d), hot_v.reshape(b * kv, w_max, d),
       cold_k.reshape(b * kv, t, d), cold_v.reshape(b * kv, t, d))

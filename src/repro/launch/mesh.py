@@ -12,8 +12,12 @@ from jax.sharding import Mesh
 
 
 def _mk(shape, axes) -> Mesh:
-    axis_types = (jax.sharding.AxisType.Auto,) * len(axes)
-    return jax.make_mesh(shape, axes, axis_types=axis_types)
+    # jax >= 0.5 takes explicit axis types; older releases have neither the
+    # enum nor the kwarg — fall back to the positional form.
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(shape, axes, axis_types=(axis_type.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:

@@ -1,6 +1,8 @@
 """The paper's Section 4.5 numbers, reproduced exactly from Eqs. 1-7."""
 
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis (pip install .[test])")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.cluster import paper_average_cluster, palmetto_cluster

@@ -1,5 +1,8 @@
 """Block <-> stripe layout mapping properties (paper Section 3.1, Fig. 3)."""
 
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis (pip install .[test])")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.layout import BlockLayout, StripeLayout, TwoLevelLayout, paper_layout

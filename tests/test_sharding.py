@@ -89,7 +89,8 @@ SUBPROCESS_SCRIPT = textwrap.dedent(
         out["devices"] = jax.device_count()
         # d_ff leaf must actually be sharded over the 4-way model axis
         w = new_state["params"]["periods"]["slot_0"]["ffn"]["w_gate"]
-        out["ff_nshards"] = len({s.index for s in w.addressable_shards})
+        # str() because slice objects are unhashable before Python 3.12
+        out["ff_nshards"] = len({str(s.index) for s in w.addressable_shards})
         # replicated-loss check: same value on all devices
         out["finite"] = bool(jnp.isfinite(metrics["loss"]))
     print(json.dumps(out))
