@@ -30,6 +30,7 @@ def main() -> None:
         fig7_terasort,
         parallel_scaling,
         roofline,
+        serve_scaling,
     )
 
     modules = [
@@ -38,6 +39,7 @@ def main() -> None:
         ("fig6", fig6_mountain),
         ("fig7", fig7_terasort),
         ("pscale", parallel_scaling),
+        ("sscale", serve_scaling),
         ("roofline", roofline),
     ]
     if args.only:

@@ -10,7 +10,10 @@ Kernels:
     rglru                   blocked gated-linear-recurrence scan
     mlstm                   chunkwise-parallel mLSTM (matrix memory)
     tiered_decode_attention two-level (hot VMEM / cold HBM) decode attention
-                            — the paper's two-tier read path in kernel form
+                            — the paper's two-tier read path in kernel form;
+                            ring-aware (hot tier consumed as a ring buffer)
+                            with dynamic lengths via scalar prefetch, so one
+                            trace serves a whole decode
 """
 
 from repro.kernels.ops import (

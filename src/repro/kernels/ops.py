@@ -11,6 +11,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels.flash_attention import flash_attention_fwd
 from repro.kernels.mlstm import mlstm_chunkwise_fwd
@@ -72,21 +73,41 @@ def mlstm_chunkwise(
     return mlstm_chunkwise_fwd(q, k, v, i_pre, f_log, chunk=chunk, interpret=interpret)
 
 
-@functools.partial(jax.jit, static_argnames=("hot_len", "cold_len", "block_k", "interpret"))
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def _tiered_decode_jit(q, hot_k, hot_v, cold_k, cold_v, lens, block_k, interpret):
+    return tiered_decode_attention_fwd(
+        q, hot_k, hot_v, cold_k, cold_v, lens, block_k=block_k, interpret=interpret
+    )
+
+
 def tiered_decode_attention(
     q: jax.Array,
     hot_k: jax.Array,
     hot_v: jax.Array,
     cold_k: jax.Array,
     cold_v: jax.Array,
-    hot_len: int,
-    cold_len: int,
+    hot_len: jax.Array | int,
+    cold_len: jax.Array | int,
+    ring_newest: jax.Array | int | None = None,
     block_k: int = 512,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """Two-tier decode attention; key order [cold ; hot] (DESIGN.md L3)."""
+    """Two-tier decode attention; key order [cold ; hot] (DESIGN.md L3).
+
+    ``hot_len``/``cold_len``/``ring_newest`` are *dynamic* (scalar-prefetch
+    operands) — one compiled kernel serves every decode step, instead of
+    retracing as the history grows.  ``ring_newest`` is the hot-ring slot
+    of the most recent token; ``None`` means the hot buffer is plain
+    chronological (valid slots ``[0, hot_len)``).
+    """
     interpret = _interpret_default() if interpret is None else interpret
-    return tiered_decode_attention_fwd(
-        q, hot_k, hot_v, cold_k, cold_v, hot_len=hot_len, cold_len=cold_len,
-        block_k=block_k, interpret=interpret,
+    if ring_newest is None:
+        ring_newest = hot_len - 1
+    parts = (hot_len, cold_len, ring_newest)
+    if all(isinstance(p, int) for p in parts):
+        lens = np.asarray(parts, np.int32)  # one transfer, no eager stack
+    else:
+        lens = jnp.stack([jnp.asarray(p, jnp.int32) for p in parts])
+    return _tiered_decode_jit(
+        q, hot_k, hot_v, cold_k, cold_v, lens, block_k=block_k, interpret=interpret
     )

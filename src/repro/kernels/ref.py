@@ -116,3 +116,41 @@ def mlstm_ref(
     )
     _, hs = jax.lax.scan(step, (C0, n0, m0), inputs)
     return hs.transpose(1, 2, 0, 3).astype(q.dtype)
+
+
+def tiered_ring_attention_ref(
+    q: jax.Array,  # (B, H, 1, D)
+    hot_k: jax.Array,  # (B, KV, W, D) ring buffer (rotated order)
+    hot_v: jax.Array,
+    cold_k: jax.Array,  # (B, KV, C, D) paged capacity buffer
+    cold_v: jax.Array,
+    hot_len: jax.Array | int,
+    cold_len: jax.Array | int,
+    ring_newest: jax.Array | int,
+) -> jax.Array:
+    """Ring-aware two-tier decode oracle (mirrors ``tiered_decode_attention``).
+
+    Hot slot ``j`` has age ``(ring_newest - j) mod W`` and is valid iff
+    ``age < hot_len``; cold position ``t`` is valid iff ``t < cold_len``.
+    Decode softmax is permutation-invariant over valid keys, so no
+    chronological un-rotation of the ring is needed.  Fully jittable with
+    dynamic lengths — also the XLA serving fallback off-TPU.
+    """
+    w = hot_k.shape[2]
+    age = jnp.remainder(jnp.asarray(ring_newest, jnp.int32) - jnp.arange(w), w)
+    hot_valid = age < hot_len
+    cold_valid = jnp.arange(cold_k.shape[2]) < cold_len
+    k = jnp.concatenate([cold_k, hot_k], axis=2)
+    v = jnp.concatenate([cold_v, hot_v], axis=2)
+    valid = jnp.concatenate([cold_valid, hot_valid])
+
+    b, h, _, d = q.shape
+    kv = k.shape[1]
+    g = h // kv
+    qg = q.reshape(b, kv, g, 1, d)
+    scores = jnp.einsum("bkgsd,bktd->bkgst", qg, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    scores = jnp.where(valid[None, None, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,bktd->bkgsd", probs, v)
+    return out.reshape(b, h, 1, d)

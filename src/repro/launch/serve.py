@@ -2,11 +2,22 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch gemma3-1b --reduced \
         --batch 4 --prompt-len 64 --tokens 32
+
+``--kv-window W`` routes every full-attention layer's KV through the
+two-level ``TieredKVCache`` (device hot ring of W tokens + paged host
+cold tier, DESIGN.md §2a); ``--kv-page`` sets the cold staging page.
+The tiered loop runs eagerly (host cold tier), reports the same
+throughput lines plus the two-level stats: hot fraction (the paper's
+Eq. 7 f), staged H2D bytes per step, and write-through flushes.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --reduced \
+        --batch 2 --prompt-len 48 --tokens 24 --kv-window 32 --kv-page 16
 """
 
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -14,7 +25,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, get_reduced, make_model
-from repro.launch.steps import make_prefill_step, make_serve_step
+from repro.launch.steps import (
+    make_prefill_step,
+    make_serve_step,
+    tiered_cache_stats,
+    tiered_serve_loop,
+)
 from repro.nn.module import init_with_axes
 
 
@@ -43,6 +59,22 @@ def serve_loop(cfg, batch: int, prompt_len: int, tokens: int, seed: int = 0):
     return jnp.concatenate(out, axis=1), prefill_s, decode_s
 
 
+def tiered_serve(cfg, batch: int, prompt_len: int, tokens: int, window: int,
+                 page: int | None, seed: int = 0):
+    """Decode loop routed through the two-level KV cache (eager)."""
+    cfg = dataclasses.replace(cfg, scan_layers=False)  # host cold tier can't ride a scan carry
+    if cfg.attn_logit_softcap > 0:
+        raise SystemExit("--kv-window: tiered KV does not support logit-softcap archs")
+    model = make_model(cfg)
+    params, _ = init_with_axes(model.init, jax.random.PRNGKey(seed), dtype=jnp.float32)
+    rng = np.random.default_rng(seed)
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab, (batch, prompt_len)), jnp.int32)
+    gen, prefill_s, decode_s, caches = tiered_serve_loop(
+        model, cfg, params, prompts, tokens, window=window, page=page
+    )
+    return gen, prefill_s, decode_s, tiered_cache_stats(caches)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -50,14 +82,32 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--tokens", type=int, default=32)
+    ap.add_argument("--kv-window", type=int, default=0,
+                    help="route full-attention KV through the tiered cache (hot ring size)")
+    ap.add_argument("--kv-page", type=int, default=0,
+                    help="cold-tier staging page in tokens (default min(window, 512))")
     args = ap.parse_args()
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
-    gen, prefill_s, decode_s = serve_loop(cfg, args.batch, args.prompt_len, args.tokens)
+    if args.kv_window > 0:
+        gen, prefill_s, decode_s, st = tiered_serve(
+            cfg, args.batch, args.prompt_len, args.tokens,
+            window=args.kv_window, page=args.kv_page or None,
+        )
+    else:
+        gen, prefill_s, decode_s = serve_loop(cfg, args.batch, args.prompt_len, args.tokens)
+        st = None
     print(f"prefill {args.batch}x{args.prompt_len}: {prefill_s:.3f}s "
           f"({args.batch*args.prompt_len/prefill_s:,.0f} tok/s)")
     print(f"decode {args.tokens} steps: {decode_s:.3f}s "
           f"({args.batch*args.tokens/decode_s:,.0f} tok/s)")
+    if st is not None and st["layers"]:
+        steps = max(1, args.tokens)
+        print(f"tiered KV ({st['layers']} layers, window {st['window']}, page {st['page']}): "
+              f"hot fraction f={st['hot_fraction']:.3f}, "
+              f"staged {st['bytes_staged']/steps:,.0f} B/step over {steps} steps "
+              f"({st['pages_staged']} pages, each uploaded once), "
+              f"{st['d2h_flushes']} batched write-through flushes")
     print(f"generated (row 0): {np.asarray(gen[0]).tolist()[:24]}")
 
 

@@ -169,6 +169,100 @@ def make_serve_step(model, cfg: ArchConfig) -> Callable:
 
 
 # ---------------------------------------------------------------------------
+# Tiered (two-level KV) serving — DESIGN.md §2a
+# ---------------------------------------------------------------------------
+
+
+def make_tiered_caches(
+    model, cfg: ArchConfig, batch: int, max_len: int, window: int, page: int | None, dtype=jnp.bfloat16
+) -> dict:
+    """Caches for the two-level serving backend: every full-attention GQA
+    layer gets a ``TieredKVCache`` (device hot ring + paged host cold tier);
+    windowed/recurrent/MLA layers keep their standard O(window)/O(1) caches.
+
+    Requires an unrolled stack (``cfg.scan_layers=False``) — the cold tier
+    is host state, which cannot ride a ``lax.scan`` carry.
+    """
+    from repro.models.lm import make_layer_cache  # local to avoid cycle
+    from repro.serving import TieredKVCache
+
+    if model.n_periods:
+        raise ValueError("tiered serving needs an unrolled stack (cfg.scan_layers=False)")
+    hd = cfg.resolved_head_dim
+    caches: dict[str, Any] = {}
+    for i, spec in enumerate(model.prefix):
+        if spec.mixer == "gqa" and spec.window == 0:
+            caches[f"prefix_{i}"] = TieredKVCache(
+                batch, cfg.n_kv_heads, hd, window=window, max_len=max_len,
+                dtype=dtype, page=page,
+            )
+        else:
+            caches[f"prefix_{i}"] = make_layer_cache(spec, cfg, batch, max_len, dtype)
+    return caches
+
+
+def tiered_serve_loop(
+    model,
+    cfg: ArchConfig,
+    params: PyTree,
+    prompts: jax.Array,  # (B, S) int32
+    tokens: int,
+    window: int,
+    page: int | None = None,
+    dtype=jnp.bfloat16,
+) -> tuple[jax.Array, float, float, dict]:
+    """Batched prefill + greedy decode routed through the two-level KV
+    cache.  Runs eagerly (the cold tier is host memory; pages are staged
+    to device between steps).  Returns (generated, prefill_s, decode_s,
+    caches) — read per-layer ``TieredKVStats`` off the caches.
+    """
+    import time
+
+    batch, prompt_len = prompts.shape
+    max_len = prompt_len + tokens + 1
+    caches = make_tiered_caches(model, cfg, batch, max_len, window, page, dtype)
+
+    t0 = time.perf_counter()
+    logits, caches = model.prefill(params, prompts, caches)
+    tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
+    jax.block_until_ready(tok)
+    prefill_s = time.perf_counter() - t0
+
+    out = [tok]
+    t0 = time.perf_counter()
+    for _ in range(tokens):
+        logits, caches = model.decode_step(params, tok, caches)
+        tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
+        out.append(tok)
+    jax.block_until_ready(tok)
+    decode_s = time.perf_counter() - t0
+    return jnp.concatenate(out, axis=1), prefill_s, decode_s, caches
+
+
+def tiered_cache_stats(caches: dict) -> dict:
+    """Aggregate ``TieredKVStats`` across the tiered layers of a cache dict
+    (hot fraction, staged H2D bytes, write-through flushes)."""
+    from repro.serving import TieredKVCache
+
+    tiered = [c for c in caches.values() if isinstance(c, TieredKVCache)]
+    if not tiered:
+        return {"layers": 0}
+    return {
+        "layers": len(tiered),
+        "length": tiered[0].length,
+        "window": tiered[0].window,
+        "page": tiered[0].page,
+        "hot_fraction": sum(c.stats.hot_fraction() for c in tiered) / len(tiered),
+        "bytes_staged": sum(c.stats.bytes_staged for c in tiered),
+        "pages_staged": sum(c.stats.pages_staged for c in tiered),
+        "bytes_written_through": sum(c.stats.bytes_written_through for c in tiered),
+        "d2h_flushes": sum(c.stats.d2h_flushes for c in tiered),
+        "hot_device_bytes": sum(c.hot_device_bytes() for c in tiered),
+        "host_bytes": sum(c.host_bytes() for c in tiered),
+    }
+
+
+# ---------------------------------------------------------------------------
 # Input specs (ShapeDtypeStruct stand-ins; no allocation)
 # ---------------------------------------------------------------------------
 

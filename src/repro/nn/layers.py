@@ -257,6 +257,28 @@ def attention_apply(
         q = _head_rms(q, p["q_norm"], cfg.norm_eps)
         k = _head_rms(k, p["k_norm"], cfg.norm_eps)
 
+    tiered = cache is not None and not isinstance(cache, dict)
+    if tiered and (window > 0 or cfg.attn_logit_softcap > 0):
+        # The two-level backend serves full-attention layers (windowed
+        # layers already hold only O(window) keys in their ring page).
+        raise ValueError("tiered KV backend requires window=0 and no logit softcap")
+
+    if mode == "decode" and tiered:
+        # Two-level serving backend (DESIGN.md §2a): the cache is a host
+        # TieredKVCache — hot device ring + paged cold host tier.  The
+        # decode loop runs unjitted in this mode so the cold tier can live
+        # in host memory and stage pages on demand.
+        pos = jnp.asarray([cache.length]) if positions is None else positions
+        if use_rope:
+            cos, sin = rope_tables(pos.reshape(1, -1), hd, cfg.rope_theta)
+            q = apply_rope(q, cos, sin)
+            k = apply_rope(k, cos, sin)
+        cache.append(k[:, 0], v[:, 0])  # the (B, KV, hd) token
+        out = cache.attend(q.transpose(0, 2, 1, 3)).transpose(0, 2, 1, 3).astype(dt)
+        out = constrain(out, "batch", None, "act_heads", None)
+        y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dt))
+        return y, cache
+
     if mode == "decode":
         if cache is None:
             raise ValueError("decode mode requires a cache")
@@ -309,7 +331,15 @@ def attention_apply(
             mask = _causal_window_mask(s, s, 0, window)
             out = _attend(q, k, v, mask, cfg)
         new_cache = cache
-        if mode == "prefill":
+        if mode == "prefill" and tiered:
+            if cache.length:
+                # The causal mask above only covers this chunk's tokens, so
+                # prefill-on-top-of-history would silently drop the cache.
+                raise ValueError("tiered KV backend supports fresh prefill only")
+            # Bulk write-through into the two-level cache: one batched
+            # dispatch for the whole prompt (hot ring + queued host copy).
+            cache.append_block(k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3))
+        elif mode == "prefill":
             if cache is None:
                 raise ValueError("prefill mode requires a pre-allocated cache")
             page = cache["k"].shape[1]

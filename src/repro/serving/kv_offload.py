@@ -1,26 +1,51 @@
-"""Two-level KV cache: a hot device window + cold host-offloaded history.
+"""Two-level KV cache: a hot device ring + paged, incrementally-staged
+cold host history.
 
-DESIGN.md §2 row L2 — the paper's architecture one level down the
-hierarchy: the *device HBM* plays Tachyon (small, memory-speed, holds the
-hot working set), *host DRAM* plays OrangeFS (large, slower, holds
-everything).  The paper's Eq. 7 describes the blended read rate with
-``f = hot_len / total_len``; its read mode (f) — nearest copy first, fall
-through to the big tier — is exactly the decode path here, and the
-``tiered_decode_attention`` Pallas kernel consumes the two tiers
-directly (hot VMEM-resident, cold streamed).
+DESIGN.md §2a — the paper's architecture one level down the hierarchy:
+*device HBM* plays Tachyon (small, memory-speed, holds the hot working
+set), *host DRAM* plays OrangeFS (large, slower, holds everything).  The
+paper's Eq. 7 blended read applies with ``f = hot_len / total_len`` and
+rates (HBM bw, PCIe bw); its read mode (f) — nearest copy first, fall
+through to the big tier — is the decode path here.
+
+The cold tier is **paged** (the L2 analogue of ``core/layout.py``
+blocks): fixed-size pages of ``page`` tokens, page-aligned at the
+hot/cold boundary.  Because decode history is append-only, a completed
+page is immutable — it is uploaded host→device **exactly once** into a
+device-resident staging buffer and reused by every later step.  Per-step
+staged H2D bytes are therefore O(page) amortized O(1), not O(history):
+the fix for the seed's restage-the-whole-prefix-per-step O(T²) decode
+path (the "re-read the whole file from the slow tier per request"
+anti-pattern the two-level design exists to eliminate).
 
 Semantics:
-* ``append(k, v)`` writes the newest token into the hot ring (device).
-* When the ring wraps, the evicted token has ALREADY been written through
-  to the host tier (write mode (c): every append is dual-written, so
-  eviction is free — the paper's low-cost fault-tolerance argument).
-* ``device_views()`` returns (hot_k, hot_v, hot_len) device arrays;
-  ``host_views()`` returns the cold prefix (everything older than the
-  ring) as numpy, staged to device on demand in ``cold_device_slices``.
-* ``attend(q)`` runs the tiered decode kernel over both tiers.
+* ``append(k, v)`` writes the newest token into the hot ring (device)
+  and queues it for **batched** host write-through — no device→host sync
+  per token; pending tokens are flushed in one transfer when a page
+  completes (or on ``flush_host()``).  This is the paper's write mode
+  (c) with a bounded async window (≤ ~2 pages of tokens), the same
+  durability trade as the store's ASYNC_WRITEBACK flush pipeline.
+* ``stage_cold()`` uploads newly completed cold pages to the device
+  staging buffer (dispatch it before ``attend`` so the H2D DMA overlaps
+  compute; jax dispatch is async).  The staging buffer grows by doubling
+  — O(log T) reallocations / retraces over a whole decode, never per
+  step.  With ``page <= window`` every page is complete before the first
+  step that needs it, so the partial tail page is never re-uploaded; the
+  capacity tail past ``cold_len`` is masked inside the kernel.
+* ``attend(q)`` runs the ring-aware tiered decode kernel over both tiers
+  with *dynamic* lengths — one compiled kernel for the whole decode, no
+  per-step chronological gather of the ring, no per-step ``jnp.pad`` of
+  the history, and no per-step dummy allocation when the cold tier is
+  empty (the capacity buffer always exists; ``cold_len=0`` masks it).
+* ``host_views()`` returns the flushed history as numpy views;
+  ``rebuild_hot_from_cold()`` is the fault-tolerance path.
 
-The capacity story mirrors the paper: device budget = O(window), host
-budget = O(total) — long contexts cost host memory, not HBM.
+The host tier is stored in the cache dtype (bf16 via ``ml_dtypes``), not
+hard-coded float32 — half the ``host_bytes`` of the seed layout.  The
+capacity story mirrors the paper: hot-ring budget = O(window); the
+staging buffer converges to the full cold history in device memory (the
+win is *bandwidth* — each page crosses PCIe once), host budget =
+O(max_len) for durability and device-loss recovery.
 """
 
 from __future__ import annotations
@@ -37,8 +62,13 @@ class TieredKVStats:
     appended: int = 0
     hot_hits_tokens: int = 0
     cold_reads_tokens: int = 0
+    bytes_staged: int = 0  # host->device page uploads (each page once)
+    pages_staged: int = 0
+    bytes_written_through: int = 0  # device->host write-through traffic
+    d2h_flushes: int = 0  # batched sync points (seed path: one per token)
 
     def hot_fraction(self) -> float:
+        """The paper's f = hot / (hot + cold) over all attends so far."""
         total = self.hot_hits_tokens + self.cold_reads_tokens
         return self.hot_hits_tokens / total if total else 1.0
 
@@ -47,108 +77,244 @@ class TieredKVCache:
     """Per-layer two-level KV cache for one decoding batch.
 
     Shapes: k, v tokens are (B, KV, D). Hot ring: (B, KV, W, D) on device.
-    Cold store: host numpy (B, KV, T_max, D), written through on append.
+    Cold store: host numpy (B, KV, T_max, D) in the cache dtype, written
+    through in batches; staged to device in immutable ``page``-token pages.
     """
 
-    def __init__(self, batch: int, kv_heads: int, head_dim: int, window: int, max_len: int, dtype=jnp.bfloat16):
+    def __init__(
+        self,
+        batch: int,
+        kv_heads: int,
+        head_dim: int,
+        window: int,
+        max_len: int,
+        dtype=jnp.bfloat16,
+        page: int | None = None,
+    ):
         if window <= 0 or max_len < window:
             raise ValueError("need 0 < window <= max_len")
+        page = min(window, 512) if page is None else page
+        if not 0 < page <= window:
+            # page <= window guarantees a cold page is complete (and
+            # flushable) before the first token it holds leaves the ring.
+            raise ValueError("need 0 < page <= window")
         self.batch, self.kv, self.dim = batch, kv_heads, head_dim
-        self.window, self.max_len = window, max_len
+        self.window, self.max_len, self.page = window, max_len, page
         self.dtype = dtype
         self.hot_k = jnp.zeros((batch, kv_heads, window, head_dim), dtype)
         self.hot_v = jnp.zeros((batch, kv_heads, window, head_dim), dtype)
-        # host tier (the 'OrangeFS' of the pair): full history, numpy
-        self.cold_k = np.zeros((batch, kv_heads, max_len, head_dim), np.float32)
-        self.cold_v = np.zeros((batch, kv_heads, max_len, head_dim), np.float32)
+        # host tier (the 'OrangeFS' of the pair): full history, numpy, in
+        # the cache dtype (ml_dtypes handles bf16) — not fp32.
+        host_dt = np.dtype(jnp.dtype(dtype))
+        self.cold_k = np.zeros((batch, kv_heads, max_len, head_dim), host_dt)
+        self.cold_v = np.zeros((batch, kv_heads, max_len, head_dim), host_dt)
+        # device staging buffer: paged capacity, grown by doubling.  The
+        # kernel streams it in sublane-aligned blocks, so capacity is kept
+        # a _block_k multiple — serving never hits the kernel's pad path.
+        self._block_k = page if page % 8 == 0 else 8 * (-(-page // 8))
+        self._cap = self._block_k
+        self._cold_k_dev = jnp.zeros((batch, kv_heads, self._cap, head_dim), dtype)
+        self._cold_v_dev = jnp.zeros_like(self._cold_k_dev)
+        self._staged_pages = 0  # completed pages valid in the staging buffer
+        self._pending_k: list[jax.Array] = []  # (B, KV, n, D) blocks awaiting
+        self._pending_v: list[jax.Array] = []  # batched host write-through
+        self._flushed = 0  # tokens durably on the host tier
         self.length = 0
         self.stats = TieredKVStats()
 
     # ------------------------------------------------------------- append
 
     def append(self, k: jax.Array, v: jax.Array) -> None:
-        """Write one token (B, KV, D): hot ring slot + host write-through."""
-        if self.length >= self.max_len:
+        """Write one token (B, KV, D): hot ring slot + queued write-through."""
+        self.append_block(k[:, :, None, :], v[:, :, None, :])
+
+    def append_block(self, k: jax.Array, v: jax.Array) -> None:
+        """Write S tokens (B, KV, S, D) — prefill bulk path, one dispatch."""
+        s = k.shape[2]
+        if self.length + s > self.max_len:
             raise ValueError("cache full")
-        slot = self.length % self.window
-        self.hot_k = self.hot_k.at[:, :, slot, :].set(k.astype(self.dtype))
-        self.hot_v = self.hot_v.at[:, :, slot, :].set(v.astype(self.dtype))
-        # write mode (c): synchronous write-through to the big tier
-        self.cold_k[:, :, self.length, :] = np.asarray(k, np.float32)
-        self.cold_v[:, :, self.length, :] = np.asarray(v, np.float32)
-        self.length += 1
-        self.stats.appended += 1
+        w = self.window
+        k = k.astype(self.dtype)
+        v = v.astype(self.dtype)
+        if s >= w:
+            order = jnp.argsort((self.length + s - w + jnp.arange(w)) % w)
+            self.hot_k = jnp.take(k[:, :, -w:, :], order, axis=2)
+            self.hot_v = jnp.take(v[:, :, -w:, :], order, axis=2)
+        else:
+            slots = (self.length + np.arange(s)) % w
+            self.hot_k = self.hot_k.at[:, :, slots, :].set(k)
+            self.hot_v = self.hot_v.at[:, :, slots, :].set(v)
+        self._pending_k.append(k)
+        self._pending_v.append(v)
+        self.length += s
+        self.stats.appended += s
+        if self.length - self._flushed >= 2 * self.page:
+            self.flush_host()
 
-    # -------------------------------------------------------------- views
-
-    @property
-    def hot_len(self) -> int:
-        return min(self.length, self.window)
+    # -------------------------------------------------------------- tiers
 
     @property
     def cold_len(self) -> int:
-        return max(0, self.length - self.window)
+        """Tokens served from the cold tier: the page-aligned boundary
+        covering everything already evicted from the hot ring."""
+        evicted = self.length - self.window
+        if evicted <= 0:
+            return 0
+        return -(-evicted // self.page) * self.page  # ceil to a page
 
-    def device_views(self) -> tuple[jax.Array, jax.Array, int]:
-        return self.hot_k, self.hot_v, self.hot_len
+    @property
+    def hot_len(self) -> int:
+        return self.length - self.cold_len
 
-    def cold_device_slices(self) -> tuple[jax.Array, jax.Array]:
-        """Stage the cold prefix to device (the 4 MB-buffer path of the
-        paper corresponds to the H2D DMA here)."""
-        n = self.cold_len
-        ck = jnp.asarray(self.cold_k[:, :, :n, :], self.dtype)
-        cv = jnp.asarray(self.cold_v[:, :, :n, :], self.dtype)
-        return ck, cv
+    @property
+    def ring_newest(self) -> int:
+        """Hot-ring slot of the most recent token."""
+        return (self.length - 1) % self.window
+
+    def device_views(self) -> tuple[jax.Array, jax.Array, int, int]:
+        """(hot_k, hot_v, hot_len, ring_newest): the raw ring plus what a
+        consumer needs to decode it — slot j is valid iff
+        ``(ring_newest - j) mod window < hot_len``."""
+        return self.hot_k, self.hot_v, self.hot_len, self.ring_newest
+
+    def host_views(self) -> tuple[np.ndarray, np.ndarray]:
+        """The written-through history [0, length) as host numpy views."""
+        self.flush_host()
+        n = self.length
+        return self.cold_k[:, :, :n, :], self.cold_v[:, :, :n, :]
+
+    def flush_host(self) -> None:
+        """Batched write-through: one device→host transfer for all pending
+        tokens (the seed path synced per token)."""
+        if not self._pending_k:
+            return
+        ks = self._pending_k[0] if len(self._pending_k) == 1 else jnp.concatenate(self._pending_k, axis=2)
+        vs = self._pending_v[0] if len(self._pending_v) == 1 else jnp.concatenate(self._pending_v, axis=2)
+        self._pending_k, self._pending_v = [], []
+        n = ks.shape[2]
+        start = self._flushed
+        assert start + n == self.length, "pending run out of sync"
+        self.cold_k[:, :, start : start + n, :] = np.asarray(ks)
+        self.cold_v[:, :, start : start + n, :] = np.asarray(vs)
+        self._flushed = self.length
+        self.stats.d2h_flushes += 1
+        self.stats.bytes_written_through += 2 * ks.size * ks.dtype.itemsize
+
+    def _ensure_capacity(self, tokens: int) -> None:
+        if tokens <= self._cap:
+            return
+        cap = self._cap
+        while cap < tokens:
+            cap *= 2  # doubling: O(log T) reallocations over a decode
+        cap = min(cap, -(-self.max_len // self._block_k) * self._block_k)
+        grow = ((0, 0), (0, 0), (0, cap - self._cap), (0, 0))
+        self._cold_k_dev = jnp.pad(self._cold_k_dev, grow)
+        self._cold_v_dev = jnp.pad(self._cold_v_dev, grow)
+        self._cap = cap
+
+    def stage_cold(self) -> None:
+        """Upload newly completed cold pages host→device — each exactly once
+        (append-only history ⇒ completed pages are immutable).  Call ahead
+        of ``attend`` to overlap the H2D copy with other dispatched work."""
+        need = self.cold_len // self.page
+        if need <= self._staged_pages:
+            return
+        self.flush_host()  # pages to stage are complete ⇒ flushable now
+        self._ensure_capacity(need * self.page)
+        lo, hi = self._staged_pages * self.page, need * self.page
+        pk = jnp.asarray(self.cold_k[:, :, lo:hi, :])  # the H2D DMA
+        pv = jnp.asarray(self.cold_v[:, :, lo:hi, :])
+        self._cold_k_dev = jax.lax.dynamic_update_slice(
+            self._cold_k_dev, pk, (0, 0, lo, 0)
+        )
+        self._cold_v_dev = jax.lax.dynamic_update_slice(
+            self._cold_v_dev, pv, (0, 0, lo, 0)
+        )
+        self.stats.pages_staged += need - self._staged_pages
+        self.stats.bytes_staged += 2 * pk.size * pk.dtype.itemsize
+        self._staged_pages = need
 
     # ------------------------------------------------------------- attend
 
-    def attend(self, q: jax.Array, block_k: int = 512) -> jax.Array:
+    def attend(self, q: jax.Array, block_k: int | None = None, impl: str = "auto") -> jax.Array:
         """Tiered decode attention for q (B, H, 1, D) over both tiers.
 
-        Ring slots map slot -> absolute position ``p ≡ slot (mod W)``; the
-        kernel expects hot keys ordered newest-window with valid length, so
-        we unroll the ring into chronological order first (cheap: W slots).
-        """
-        from repro.kernels import tiered_decode_attention
+        The hot ring goes to the kernel as-is (no chronological gather):
+        decode softmax is permutation-invariant, so ring rotation is
+        position arithmetic inside the kernel (``ring_newest``).  Lengths
+        are dynamic — every step reuses one compiled kernel.
 
-        hot_n = self.hot_len
-        cold_n = self.cold_len
+        ``impl='kernel'`` runs the Pallas kernel; ``impl='xla'`` runs the
+        jitted XLA oracle over the identical tiered operands.  The default
+        ``'auto'`` compiles the kernel on TPU and takes the XLA path
+        elsewhere — off-TPU the kernel only exists interpreted, whose
+        per-step cost would measure the interpreter, not the data path.
+        """
+        if self.length == 0:
+            raise ValueError("attend on an empty cache")
+        self.stage_cold()
+        hot_n, cold_n = self.hot_len, self.cold_len
         self.stats.hot_hits_tokens += hot_n
         self.stats.cold_reads_tokens += cold_n
+        if impl == "auto":
+            impl = "kernel" if jax.default_backend() == "tpu" else "xla"
+        if impl == "kernel":
+            from repro.kernels import tiered_decode_attention
 
-        # chronological hot window: positions [length-hot_n, length)
-        start = self.length - hot_n
-        order = jnp.arange(start, self.length) % self.window
-        hk = jnp.take(self.hot_k, order, axis=2)
-        hv = jnp.take(self.hot_v, order, axis=2)
-
-        if cold_n == 0:
-            ck = jnp.zeros((self.batch, self.kv, block_k, self.dim), self.dtype)
-            cv = jnp.zeros_like(ck)
-        else:
-            ck, cv = self.cold_device_slices()
-        return tiered_decode_attention(
-            q.astype(self.dtype), hk, hv, ck, cv,
-            hot_len=hot_n, cold_len=cold_n, block_k=block_k,
+            if block_k is None:
+                block_k = self._block_k  # sublane-aligned; divides _cap
+            return tiered_decode_attention(
+                q.astype(self.dtype), self.hot_k, self.hot_v,
+                self._cold_k_dev, self._cold_v_dev,
+                hot_len=hot_n, cold_len=cold_n, ring_newest=self.ring_newest,
+                block_k=block_k,
+            )
+        return _xla_attend(
+            q.astype(self.dtype), self.hot_k, self.hot_v,
+            self._cold_k_dev, self._cold_v_dev,
+            jnp.asarray(hot_n, jnp.int32), jnp.asarray(cold_n, jnp.int32),
+            jnp.asarray(self.ring_newest, jnp.int32),
         )
 
     # ----------------------------------------------------------- recovery
 
     def rebuild_hot_from_cold(self) -> None:
-        """Device loss: reconstruct the hot ring from the host tier —
-        the paper's fault-tolerance path (re-read checkpointed blocks)."""
-        n = self.hot_len
-        start = self.length - n
-        ring_k = np.zeros((self.batch, self.kv, self.window, self.dim), np.float32)
+        """Device loss: reconstruct the hot ring from the host tier — the
+        paper's fault-tolerance path (re-read checkpointed blocks).  One
+        vectorized gather, dtype-preserving; the staging buffer is marked
+        unstaged so the next attend re-uploads the needed pages."""
+        self.flush_host()
+        n = min(self.length, self.window)
+        pos = np.arange(self.length - n, self.length)
+        ring_k = np.zeros(
+            (self.batch, self.kv, self.window, self.dim), self.cold_k.dtype
+        )
         ring_v = np.zeros_like(ring_k)
-        for p in range(start, self.length):
-            ring_k[:, :, p % self.window, :] = self.cold_k[:, :, p, :]
-            ring_v[:, :, p % self.window, :] = self.cold_v[:, :, p, :]
+        ring_k[:, :, pos % self.window, :] = self.cold_k[:, :, pos, :]
+        ring_v[:, :, pos % self.window, :] = self.cold_v[:, :, pos, :]
         self.hot_k = jnp.asarray(ring_k, self.dtype)
         self.hot_v = jnp.asarray(ring_v, self.dtype)
+        self._staged_pages = 0  # staging buffer presumed lost with the device
 
-    def device_bytes(self) -> int:
+    # --------------------------------------------------------- accounting
+
+    def hot_device_bytes(self) -> int:
         return 2 * self.batch * self.kv * self.window * self.dim * jnp.dtype(self.dtype).itemsize
 
+    def staged_device_bytes(self) -> int:
+        return 2 * self.batch * self.kv * self._cap * self.dim * jnp.dtype(self.dtype).itemsize
+
+    def device_bytes(self) -> int:
+        return self.hot_device_bytes() + self.staged_device_bytes()
+
     def host_bytes(self) -> int:
-        return 2 * self.batch * self.kv * self.max_len * self.dim * 4
+        return 2 * self.batch * self.kv * self.max_len * self.dim * self.cold_k.dtype.itemsize
+
+
+@jax.jit
+def _xla_attend(q, hot_k, hot_v, cold_k, cold_v, hot_len, cold_len, newest):
+    from repro.kernels.ref import tiered_ring_attention_ref
+
+    return tiered_ring_attention_ref(
+        q, hot_k, hot_v, cold_k, cold_v, hot_len, cold_len, newest
+    )
