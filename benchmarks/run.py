@@ -7,12 +7,19 @@ noted in the derived column).
 ``--quick`` runs every module at smoke-test sizes (small files / few
 records) — used by CI to catch throughput-path regressions on every PR
 without paying full-measurement wall time.
+
+Every module additionally emits a ``BENCH_<label>.json`` artifact (rows +
+elapsed wall time) into ``$BENCH_ARTIFACT_DIR`` (default: current
+directory) — CI uploads these so the perf trajectory (agg MB/s, tok/s,
+bytes/step) is tracked across PRs.
 """
 
 from __future__ import annotations
 
 import argparse
 import inspect
+import json
+import os
 import sys
 import time
 
@@ -31,6 +38,7 @@ def main() -> None:
         parallel_scaling,
         roofline,
         serve_scaling,
+        train_io_scaling,
     )
 
     modules = [
@@ -40,10 +48,13 @@ def main() -> None:
         ("fig7", fig7_terasort),
         ("pscale", parallel_scaling),
         ("sscale", serve_scaling),
+        ("tscale", train_io_scaling),
         ("roofline", roofline),
     ]
     if args.only:
         modules = [(label, mod) for label, mod in modules if label in args.only]
+    art_dir = os.environ.get("BENCH_ARTIFACT_DIR", ".")
+    os.makedirs(art_dir, exist_ok=True)
     print("name,value,derived")
     failures = 0
     for label, mod in modules:
@@ -57,9 +68,21 @@ def main() -> None:
             failures += 1
             print(f"{label}.ERROR,0,{type(e).__name__}: {e}")
             continue
+        elapsed = time.perf_counter() - t0
         for name, value, derived in rows:
             print(f"{name},{value},{derived}")
-        print(f"{label}.elapsed_s,{time.perf_counter() - t0:.2f},harness")
+        print(f"{label}.elapsed_s,{elapsed:.2f},harness")
+        with open(os.path.join(art_dir, f"BENCH_{label}.json"), "w") as fh:
+            json.dump(
+                {
+                    "label": label,
+                    "quick": args.quick,
+                    "elapsed_s": round(elapsed, 3),
+                    "rows": {n: {"value": v, "derived": d} for n, v, d in rows},
+                },
+                fh,
+                indent=2,
+            )
     if failures:
         sys.exit(1)
 

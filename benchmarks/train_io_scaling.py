@@ -1,0 +1,279 @@
+"""Training-plane I/O scaling — the acceptance gate for the two-level
+training plane (chunked checkpointing + ranged store reads + slab cache).
+
+Three gates, each against a byte-movement replica of the seed path:
+
+* **Data plane** (`tscale.data.read_reduction`, gate ≥ 4×): store bytes
+  read per training step.  The seed `_read_span` re-read an **entire
+  shard** from the store for every sequence window (O(batch × shard)
+  bytes/step); the new loader serves windows from an LRU slab cache
+  filled by `get_range`, moving O(batch × window) bytes.  Both paths are
+  measured against live `TierStats`/`MemoryTier` ledgers of the same
+  store geometry — zero-copy memory-tier hits count as bytes read.
+* **Checkpoint plane** (`tscale.ckpt.critical_speedup`, gate ≥ 2×):
+  save-call critical-path seconds.  The seed saved one monolithic blob
+  through synchronous write-through; the new manager snapshots leaves
+  (device_get) on the caller and runs chunk packing + batched `put_many`
+  off the critical path (async mode).
+* **Crash consistency** (`tscale.ckpt.restore_bit_identical`, gate = 1):
+  after `wait_until_durable`, the memory tier is discarded (simulated
+  host loss — a fresh store over the same PFS root) and the restored
+  state must be bit-identical to what was saved.
+
+Run standalone for the full-size measurement + hard gate assertions::
+
+    PYTHONPATH=src python -m benchmarks.train_io_scaling [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import tempfile
+
+import numpy as np
+
+from repro.core.store import TwoLevelStore, WriteMode
+from repro.data.pipeline import ShardedLoader, SyntheticCorpus
+from repro.runtime.checkpoint import CheckpointManager
+
+MB = 2**20
+
+
+def _bytes_read(store: TwoLevelStore) -> int:
+    """Bytes the store served so far, both tiers (zero-copy views included)."""
+    return store.mem.stats.bytes_read + store.pfs.stats.bytes_read
+
+
+# --------------------------------------------------------------- data plane
+
+
+class SeedSpanReader:
+    """Byte-movement replica of the seed loader's span path.
+
+    Reproduces exactly what the pre-refactor `_read_span` did per window:
+    stream the **whole shard** out of the store (`read_shard`), slice the
+    span out of it.  Window order replicates the seed's flat epoch
+    permutation.
+    """
+
+    def __init__(self, corpus: SyntheticCorpus, global_batch: int, seq_len: int) -> None:
+        self.corpus = corpus
+        self.global_batch = global_batch
+        self.seq_len = seq_len
+
+    def batch_at(self, epoch: int, step: int) -> np.ndarray:
+        span = self.seq_len + 1
+        total = self.corpus.n_shards * self.corpus.tokens_per_shard
+        n_windows = total // span
+        rng = np.random.default_rng((self.corpus.seed << 16) ^ epoch)
+        perm = rng.permutation(n_windows)
+        rows = []
+        for b in range(self.global_batch):
+            w = int(perm[(step * self.global_batch + b) % n_windows])
+            start = w * span
+            out = np.empty(span, dtype=np.int32)
+            filled = 0
+            while filled < span:
+                shard, off = divmod(start + filled, self.corpus.tokens_per_shard)
+                take = min(span - filled, self.corpus.tokens_per_shard - off)
+                toks = self.corpus.read_shard(shard % self.corpus.n_shards)  # whole shard!
+                out[filled : filled + take] = toks[off : off + take]
+                filled += take
+            rows.append(out)
+        return np.stack(rows)
+
+
+def measure_data(
+    n_shards: int, tokens_per_shard: int, global_batch: int, seq_len: int, steps: int
+) -> dict[str, float]:
+    with tempfile.TemporaryDirectory() as d:
+        with TwoLevelStore(
+            os.path.join(d, "pfs"),
+            mem_capacity_bytes=max(4 * n_shards * tokens_per_shard * 4, 64 * MB),
+            block_bytes=1 * MB,
+            n_pfs_servers=4,
+        ) as store:
+            corpus = SyntheticCorpus(
+                store, vocab_size=32768, n_shards=n_shards, tokens_per_shard=tokens_per_shard
+            )
+            corpus.generate()
+
+            base = _bytes_read(store)
+            seed = SeedSpanReader(corpus, global_batch, seq_len)
+            for s in range(steps):
+                seed.batch_at(0, s)
+            seed_bytes = (_bytes_read(store) - base) / steps
+
+            loader = ShardedLoader(corpus, global_batch, seq_len, prefetch_depth=0)
+            base = _bytes_read(store)
+            for _ in range(steps):
+                next(loader)
+            new_bytes = (_bytes_read(store) - base) / steps
+
+            return {
+                "seed_bytes_per_step": seed_bytes,
+                "new_bytes_per_step": new_bytes,
+                "read_reduction": seed_bytes / max(new_bytes, 1.0),
+                "slab_hit_rate": loader.stats.hit_rate(),
+            }
+
+
+# ---------------------------------------------------------- checkpoint plane
+
+
+def synth_state(total_mb: int, n_leaves: int = 24, seed: int = 0) -> dict:
+    """A training-state-shaped pytree of ``n_leaves`` float32/int arrays."""
+    rng = np.random.default_rng(seed)
+    per = max(1, total_mb * MB // (4 * n_leaves))
+    state: dict = {"params": {}, "opt": {}, "step": np.int64(7)}
+    for i in range(n_leaves // 2):
+        state["params"][f"w{i:02d}"] = rng.normal(size=per).astype(np.float32)
+        state["opt"][f"m{i:02d}"] = rng.normal(size=per).astype(np.float32)
+    return state
+
+
+def seed_monolithic_save(store: TwoLevelStore, prefix: str, state: dict) -> None:
+    """Replica of the seed CheckpointManager.save: one concatenated blob,
+    synchronous write-through, manifest + COMMIT."""
+    import json
+
+    import jax
+
+    manifest = {}
+    parts = []
+    offset = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(state)[0]:
+        arr = np.asarray(leaf)
+        raw = np.ascontiguousarray(arr).tobytes()
+        manifest[jax.tree_util.keystr(path)] = {
+            "shape": list(arr.shape),
+            "dtype": str(arr.dtype),
+            "offset": offset,
+            "size": len(raw),
+        }
+        parts.append(raw)
+        offset += len(raw)
+    blob = b"".join(parts)
+    store.put(f"{prefix}/leaves", blob, mode=WriteMode.WRITE_THROUGH)
+    store.put(f"{prefix}/manifest", json.dumps(manifest).encode(), mode=WriteMode.WRITE_THROUGH)
+    store.put(f"{prefix}/COMMIT", str(len(blob)).encode(), mode=WriteMode.WRITE_THROUGH)
+
+
+def measure_ckpt(total_mb: int, chunk_mb: int, repeats: int = 3) -> dict[str, float]:
+    import time
+
+    state = synth_state(total_mb)
+    template = {
+        k: ({kk: np.zeros_like(vv) for kk, vv in v.items()} if isinstance(v, dict) else v)
+        for k, v in state.items()
+    }
+    with tempfile.TemporaryDirectory() as d:
+        root = os.path.join(d, "pfs")
+        seed_s = new_s = float("inf")
+        with TwoLevelStore(
+            root, mem_capacity_bytes=max(8 * total_mb, 64) * MB, block_bytes=4 * MB,
+            n_pfs_servers=4,
+        ) as store:
+            for r in range(repeats):
+                t0 = time.perf_counter()
+                seed_monolithic_save(store, f"seedckpt/step_{r}", state)
+                seed_s = min(seed_s, time.perf_counter() - t0)
+
+            cm = CheckpointManager(
+                store, tag="t", mode="async", keep_last=1, chunk_bytes=chunk_mb * MB
+            )
+            for r in range(repeats):
+                t0 = time.perf_counter()
+                cm.save(r + 1, state)
+                new_s = min(new_s, time.perf_counter() - t0)
+            cm.wait_until_durable()
+            cm.close()
+
+        # Simulated host loss: a fresh store over the same PFS root — the
+        # memory tier is gone, restore must reassemble from chunk stripes.
+        with TwoLevelStore(root, mem_capacity_bytes=max(8 * total_mb, 64) * MB,
+                           block_bytes=4 * MB, n_pfs_servers=4) as store2:
+            cm2 = CheckpointManager(store2, tag="t", chunk_bytes=chunk_mb * MB)
+            step, got = cm2.restore(template)
+            cm2.close()
+            identical = step == repeats
+            import jax
+
+            for (pa, a), (_, b) in zip(
+                jax.tree_util.tree_flatten_with_path(state)[0],
+                jax.tree_util.tree_flatten_with_path(got)[0],
+            ):
+                a, b = np.asarray(a), np.asarray(b)
+                if a.dtype != b.dtype or not np.array_equal(a, b):
+                    identical = False
+                    break
+
+    return {
+        "seed_save_s": seed_s,
+        "async_critical_s": new_s,
+        "critical_speedup": seed_s / max(new_s, 1e-9),
+        "restore_bit_identical": 1.0 if identical else 0.0,
+    }
+
+
+# -------------------------------------------------------------------- driver
+
+
+def run(quick: bool = False) -> list[tuple[str, float, str]]:
+    if quick:
+        data = measure_data(n_shards=8, tokens_per_shard=1 << 14, global_batch=8,
+                            seq_len=128, steps=4)
+        ck = measure_ckpt(total_mb=8, chunk_mb=1)
+        geom = "8 shards x 64KiB, batch 8x128 (quick)"
+        ckgeom = "8MB state, 1MB chunks (quick)"
+    else:
+        data = measure_data(n_shards=16, tokens_per_shard=1 << 17, global_batch=16,
+                            seq_len=256, steps=8)
+        ck = measure_ckpt(total_mb=64, chunk_mb=8)
+        geom = "16 shards x 512KiB, batch 16x256"
+        ckgeom = "64MB state, 8MB chunks"
+
+    return [
+        ("tscale.data.seed_bytes_per_step_mb", round(data["seed_bytes_per_step"] / MB, 2),
+         f"seed path re-reads whole shards, {geom}"),
+        ("tscale.data.new_bytes_per_step_mb", round(data["new_bytes_per_step"] / MB, 4),
+         "ranged reads + slab cache"),
+        ("tscale.data.read_reduction", round(data["read_reduction"], 1),
+         ">=4.0 required (store bytes read per training step, seed/new)"),
+        ("tscale.data.slab_hit_rate", round(data["slab_hit_rate"], 3),
+         "loader LRU slab cache"),
+        ("tscale.ckpt.seed_save_s", round(ck["seed_save_s"], 4),
+         f"monolithic blob, sync write-through, {ckgeom}"),
+        ("tscale.ckpt.async_critical_s", round(ck["async_critical_s"], 4),
+         "chunked async: snapshot-only critical path"),
+        ("tscale.ckpt.critical_speedup", round(ck["critical_speedup"], 1),
+         ">=2.0 required (save critical-path time, seed/async)"),
+        ("tscale.ckpt.restore_bit_identical", ck["restore_bit_identical"],
+         "=1 required (fresh store over same PFS root after simulated host loss)"),
+    ]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true", help="smoke sizes + hard gate assertions")
+    args = ap.parse_args()
+    rows = run(quick=args.quick)
+    vals = {name: value for name, value, _ in rows}
+    print("name,value,derived")
+    for name, value, derived in rows:
+        print(f"{name},{value},{derived}")
+    assert vals["tscale.data.read_reduction"] >= 4.0, (
+        f"data-plane gate FAILED: {vals['tscale.data.read_reduction']}x < 4x read reduction"
+    )
+    assert vals["tscale.ckpt.critical_speedup"] >= 2.0, (
+        f"checkpoint gate FAILED: {vals['tscale.ckpt.critical_speedup']}x < 2x critical-path speedup"
+    )
+    assert vals["tscale.ckpt.restore_bit_identical"] == 1.0, (
+        "crash-consistency gate FAILED: restored state differs from saved state"
+    )
+    print("tscale.gates,1,all acceptance gates passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -93,6 +93,30 @@ def main() -> None:
             print(f"checkpoint traffic to PFS tier: {st['pfs']['bytes_written']/2**20:.1f} MiB; "
                   f"async flushes: {st['store']['async_flushes']}")
 
+            s = res.stalls
+            print("\nstep stall breakdown (where the wall time went):")
+            print(f"  data stall:  {s['data_stall_total_s']:7.2f}s total, "
+                  f"{s['data_stall_ewma_s']*1e3:7.2f}ms/step EWMA")
+            print(f"  ckpt stall:  {s['ckpt_stall_total_s']:7.2f}s total, "
+                  f"{s['ckpt_stall_ewma_s']*1e3:7.2f}ms/step EWMA "
+                  f"(async save critical path {s['ckpt_save_critical_s']:.2f}s)")
+
+            ls = res.loader_stats
+            slab_total = ls.get("slab_hits", 0) + ls.get("slab_misses", 0)
+            win_total = ls.get("local_windows", 0) + ls.get("remote_windows", 0)
+            ss = st["store"]
+            mem_total = ss["mem_hits"] + ss["mem_misses"]
+            print("two-level hit rates:")
+            print(f"  loader slab cache: {ls.get('slab_hits', 0)}/{slab_total} hits "
+                  f"({ls.get('slab_hits', 0)/max(slab_total,1):.1%}), "
+                  f"{ls.get('bytes_fetched', 0)/2**20:.1f} MiB fetched via ranged reads")
+            print(f"  window locality:   {ls.get('local_windows', 0)}/{win_total} "
+                  f"windows on owned shards")
+            print(f"  store memory tier: {ss['mem_hits']}/{mem_total} hits "
+                  f"({ss['mem_hits']/max(mem_total,1):.1%}); "
+                  f"{ss['range_reads']} ranged reads, "
+                  f"{ss['range_bytes']/2**20:.1f} MiB ranged")
+
 
 if __name__ == "__main__":
     main()

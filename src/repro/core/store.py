@@ -36,6 +36,20 @@ Concurrency model (DESIGN.md §3) — the data path is parallel end to end:
 * ``get_buffered`` is a true streaming iterator: per-block ``memoryview``
   chunks with ``readahead_blocks`` of PFS prefetch in flight, never
   materializing the whole file.  ``put_stream`` is its write-side dual.
+
+Ranged and batched I/O (DESIGN.md §6) — the training-plane surface:
+
+* ``get_range(name, offset, size)`` fetches **only the covering blocks**
+  of a byte range: a memory-tier hit serves a zero-copy sub-block view, a
+  miss reads just the overlapping PFS stripe units (per-stripe CRCs still
+  verified).  ``get_buffered`` accepts the same ``offset``/``length``.
+  Partial blocks are served without promotion — a range read never drags
+  a whole block through the cache it didn't ask for.
+* ``put_many``/``get_many`` move *unrelated* files in one call: every
+  block of every file fans out over the shared pool together, so many
+  small files (checkpoint chunks) enjoy the same pipelining one large
+  file gets.  File locks are taken in sorted-name order (no deadlocks
+  between concurrent batch calls).
 """
 
 from __future__ import annotations
@@ -88,6 +102,8 @@ class StoreStats:
     async_flushes: int = 0
     flushes_coalesced: int = 0
     integrity_failures: int = 0
+    range_reads: int = 0
+    range_bytes: int = 0
 
     def hit_rate(self) -> float:
         total = self.mem_hits + self.mem_misses
@@ -238,6 +254,21 @@ class TwoLevelStore:
     def _bkey(name: str, idx: int) -> str:
         return f"{name}:{idx:06d}"
 
+    @staticmethod
+    def _settle(futures: list) -> None:
+        """Wait out in-flight block transfers before lock release.
+
+        Used on error paths: a file lock must never be released while its
+        blocks are still moving, and a failed transfer must not rot in an
+        unobserved future.  Secondary errors are swallowed — the primary
+        exception is already propagating.
+        """
+        for f in futures:
+            try:
+                f.result()
+            except Exception:
+                pass
+
     def _block_lock(self, bkey: str) -> threading.RLock:
         return self._block_locks[hash(bkey) % self._N_BLOCK_LOCKS]
 
@@ -352,22 +383,27 @@ class TwoLevelStore:
         mode = mode or self.write_mode
         if self._closed:
             raise RuntimeError("store is closed")
-        mv = memoryview(data)
         flock = self._acquire_file(name, write=True)
+        futures: list = []
         try:
-            n_new = self.layout.n_blocks(len(mv))
-            self._prepare_overwrite(name, n_new, mode)
-            with self._meta:
-                self._files[name] = _FileMeta(size=len(mv), n_blocks=n_new)
-            futures = []
-            for block in self.layout.blocks(len(mv)):
-                self._put_block(
-                    self._bkey(name, block.index), mv[block.offset : block.end], mode, futures
-                )
+            self._put_file_locked(name, memoryview(data), mode, futures)
             for f in futures:
                 f.result()
         finally:
+            self._settle(futures)
             flock.release_write()
+
+    def _put_file_locked(self, name: str, mv: memoryview, mode: WriteMode, futures: list) -> None:
+        """Dispatch one whole file's blocks (caller holds the file write lock
+        and awaits ``futures``)."""
+        n_new = self.layout.n_blocks(len(mv))
+        self._prepare_overwrite(name, n_new, mode)
+        with self._meta:
+            self._files[name] = _FileMeta(size=len(mv), n_blocks=n_new)
+        for block in self.layout.blocks(len(mv)):
+            self._put_block(
+                self._bkey(name, block.index), mv[block.offset : block.end], mode, futures
+            )
 
     def _prepare_overwrite(self, name: str, n_new: int, mode: WriteMode) -> None:
         """Make room for an overwrite (caller holds the file write lock).
@@ -401,10 +437,10 @@ class TwoLevelStore:
         if self._closed:
             raise RuntimeError("store is closed")
         flock = self._acquire_file(name, write=True)
+        futures: list = []
         try:
             if mode is WriteMode.MEMORY_ONLY:
                 self._prepare_overwrite(name, 0, mode)
-            futures: list = []
             buf = bytearray()
             idx = total = 0
             bb = self.layout.block_size
@@ -426,7 +462,39 @@ class TwoLevelStore:
                 f.result()
             return total
         finally:
+            self._settle(futures)
             flock.release_write()
+
+    def put_many(self, items, mode: WriteMode | None = None) -> None:
+        """Write many unrelated files in one batched, pool-fanned call.
+
+        ``items`` is a mapping or an iterable of ``(name, bytes-like)``
+        pairs.  Blocks of *every* file are dispatched onto the shared pool
+        before any result is awaited, so a batch of small files (checkpoint
+        chunks) pipelines PFS transfers exactly like one large file does.
+        File write locks are acquired in sorted-name order — two concurrent
+        batch calls can never deadlock — and released only after every
+        block of the batch is durable per the mode's contract.
+        """
+        mode = mode or self.write_mode
+        if self._closed:
+            raise RuntimeError("store is closed")
+        entries = sorted(items.items() if isinstance(items, dict) else items)
+        names = [name for name, _ in entries]
+        if len(set(names)) != len(names):
+            raise ValueError("put_many: duplicate names in one batch")
+        held: list[_RWLock] = []
+        futures: list = []
+        try:
+            for name, data in entries:
+                held.append(self._acquire_file(name, write=True))
+                self._put_file_locked(name, memoryview(data), mode, futures)
+            for f in futures:
+                f.result()
+        finally:
+            self._settle(futures)
+            for lock in held:
+                lock.release_write()
 
     def _put_block(self, bkey: str, chunk, mode: WriteMode, futures: list) -> None:
         """Route one block through the write mode (caller holds file write lock).
@@ -566,42 +634,192 @@ class TwoLevelStore:
         finally:
             flock.release_read()
 
+    def get_many(self, names: list[str], mode: ReadMode | None = None) -> list[bytes]:
+        """Read many unrelated files in one batched, pool-fanned call.
+
+        All blocks of all files are submitted to the shared pool before any
+        result is awaited (read locks taken in sorted-name order), so a
+        batch of small files pipelines PFS fetches like one large file.
+        Returns the file contents in the order ``names`` was given.
+        """
+        mode = mode or self.read_mode
+        order = sorted(set(names))
+        held: dict[str, _RWLock] = {}
+        jobs: dict[str, list] = {}
+        try:
+            for name in order:
+                held[name] = self._acquire_file(name, write=False)
+            for name in order:
+                fmeta = self._file_meta_or_cold(name)
+                jobs[name] = [
+                    self._pool.submit(self._read_block, name, i, mode)
+                    for i in range(fmeta.n_blocks)
+                ]
+            done = {name: b"".join(bytes(f.result()) for f in fs) for name, fs in jobs.items()}
+            return [done[name] for name in names]
+        finally:
+            self._settle([f for fs in jobs.values() for f in fs])
+            for lock in held.values():
+                lock.release_read()
+
+    def get_range(self, name: str, offset: int, size: int, mode: ReadMode | None = None) -> bytes:
+        """Read ``[offset, offset+size)`` of a file, touching only covering blocks.
+
+        A memory-tier hit serves a zero-copy sub-block view; a miss reads
+        only the overlapping PFS stripe units (each staged unit's CRC is
+        still verified).  The range is clamped to the file size.  Partial
+        blocks are *not* promoted into the memory tier — promotion happens
+        only when the range happens to cover a whole block.
+        """
+        mode = mode or self.read_mode
+        if offset < 0 or size < 0:
+            raise ValueError("offset/size must be non-negative")
+        flock = self._acquire_file(name, write=False)
+        try:
+            fmeta = self._file_meta_or_cold(name)
+            end = min(offset + size, fmeta.size)
+            if end <= offset:
+                return b""
+            with self._meta:
+                self.stats.range_reads += 1
+                self.stats.range_bytes += end - offset
+            bb = self.layout.block_size
+            first, last = offset // bb, (end - 1) // bb
+
+            def fetch(i: int) -> bytes:
+                lo = max(offset, i * bb) - i * bb
+                hi = min(end, (i + 1) * bb) - i * bb
+                blen = min(bb, fmeta.size - i * bb)
+                return bytes(self._read_block_range(name, i, lo, hi, blen, mode))
+
+            if first == last:
+                return fetch(first)
+            return b"".join(self._pool.map(fetch, range(first, last + 1)))
+        finally:
+            flock.release_read()
+
     def get_buffered(
-        self, name: str, mode: ReadMode | None = None, readahead: int | None = None
+        self,
+        name: str,
+        mode: ReadMode | None = None,
+        readahead: int | None = None,
+        offset: int = 0,
+        length: int | None = None,
     ) -> Iterator[memoryview]:
-        """Stream a file in app-side buffer chunks (paper's 1 MB requests).
+        """Stream a file (or a byte range of it) in app-side buffer chunks.
 
         True streaming: yields per-block ``memoryview`` slices while up to
         ``readahead`` further blocks are prefetched from the PFS tier in the
-        background — the whole file is never materialized.  The file's read
-        lock is held while the generator is live; don't overwrite/delete the
-        same file from the consuming thread mid-iteration.
+        background — the whole file is never materialized.  With
+        ``offset``/``length`` only the covering blocks are touched, and the
+        boundary blocks are read partially (paper's 1 MB app requests over
+        the exact bytes asked for).  The file's read lock is held while the
+        generator is live; don't overwrite/delete the same file from the
+        consuming thread mid-iteration.
         """
         mode = mode or self.read_mode
+        if offset < 0 or (length is not None and length < 0):
+            raise ValueError("offset/length must be non-negative")
         ra = self.readahead_blocks if readahead is None else max(0, readahead)
         flock = self._acquire_file(name, write=False)
         try:
-            with self._meta:
-                fmeta = self._files.get(name)
-            if fmeta is None:
-                data = memoryview(self._get_cold(name, mode))
-                for off in range(0, len(data), self.app_buffer_bytes):
-                    yield data[off : off + self.app_buffer_bytes]
+            fmeta = self._file_meta_or_cold(name)
+            end = fmeta.size if length is None else min(fmeta.size, offset + length)
+            if end <= offset:
                 return
+            bb = self.layout.block_size
+            first, last = offset // bb, (end - 1) // bb
+
+            def submit(i: int):
+                lo = max(offset, i * bb) - i * bb
+                hi = min(end, (i + 1) * bb) - i * bb
+                blen = min(bb, fmeta.size - i * bb)
+                return self._pool.submit(self._read_block_range, name, i, lo, hi, blen, mode)
+
             pending: deque = deque()
-            nxt = 0
-            while nxt < fmeta.n_blocks and len(pending) <= ra:
-                pending.append(self._pool.submit(self._read_block, name, nxt, mode))
+            nxt = first
+            while nxt <= last and len(pending) <= ra:
+                pending.append(submit(nxt))
                 nxt += 1
             while pending:
                 data = memoryview(pending.popleft().result())
-                if nxt < fmeta.n_blocks:
-                    pending.append(self._pool.submit(self._read_block, name, nxt, mode))
+                if nxt <= last:
+                    pending.append(submit(nxt))
                     nxt += 1
                 for off in range(0, len(data), self.app_buffer_bytes):
                     yield data[off : off + self.app_buffer_bytes]
         finally:
             flock.release_read()
+
+    def _file_meta_or_cold(self, name: str) -> _FileMeta:
+        """File metadata, registering a PFS-only (post-restart) file if needed.
+
+        Cold registration probes block manifests without moving any data,
+        so ranged/batched reads of a cold file don't pay a full-file read
+        just to learn its size.  Caller holds the file's read lock.
+        """
+        with self._meta:
+            fmeta = self._files.get(name)
+        if fmeta is not None:
+            return fmeta
+        n = 0
+        size = 0
+        while self.pfs.contains(self._bkey(name, n)):
+            size += self.pfs.size_of(self._bkey(name, n))
+            n += 1
+        if n == 0:
+            raise BlockNotFound(name)
+        with self._meta:
+            fmeta = self._files.get(name)
+            if fmeta is None:
+                fmeta = self._files[name] = _FileMeta(size=size, n_blocks=n)
+        return fmeta
+
+    def _read_block_range(self, name: str, idx: int, lo: int, hi: int, blen: int, mode: ReadMode):
+        """Fetch bytes ``[lo, hi)`` of one block of length ``blen``, moving
+        only what's asked.
+
+        A full-block range delegates to ``_read_block`` (promotion + whole
+        -block CRC) — cold blocks with no table entry included, so ranged
+        reads still warm the memory tier after a restart; a partial range
+        serves a zero-copy memory-tier slice on a hit or a partial PFS
+        stripe read on a miss — per-stripe CRCs verified by the tier, no
+        promotion of bytes the caller didn't ask for.
+        """
+        if lo == 0 and hi >= blen:
+            return self._read_block(name, idx, mode)
+        bkey = self._bkey(name, idx)
+        meta = self._blocks.get(bkey)  # lock-free table read (GIL-atomic)
+        if mode is not ReadMode.PFS_BYPASS:
+            try:
+                view = self.mem.get_view(bkey, lo, hi - lo)
+            except BlockNotFound:
+                view = None
+            if view is not None:
+                with self._meta:
+                    self.stats.mem_hits += 1
+                    if meta is not None:
+                        self._touch_locked(meta)
+                # The block CRC covers the whole block, so verify it over the
+                # resident bytes (stat-free peek — the caller only consumes
+                # the slice) exactly like the full-block hit path does.
+                blob = self.mem.peek(bkey)
+                if meta is not None and blob is not None and crc32_chunked(blob) != meta.crc:
+                    with self._meta:
+                        self.stats.integrity_failures += 1
+                    raise IntegrityError(f"memory-tier CRC mismatch for {bkey}")
+                return view
+        if mode is ReadMode.MEMORY_ONLY:
+            raise BlockNotFound(bkey)
+        with self._meta:
+            self.stats.mem_misses += 1
+        buf = bytearray(hi - lo)
+        n, _ = self.pfs.readinto(bkey, buf, offset=lo, length=hi - lo)
+        if n < hi - lo:
+            with self._meta:
+                self.stats.integrity_failures += 1
+            raise IntegrityError(f"short PFS range read for {bkey}")
+        return memoryview(buf)[:n]
 
     def _read_block(self, name: str, idx: int, mode: ReadMode):
         """Fetch one block: memory view on a hit, parallel PFS stripes on a miss."""
@@ -693,7 +911,12 @@ class TwoLevelStore:
         with self._meta:
             if name in self._files:
                 return self._files[name].size
-        return len(self._get_cold(name, ReadMode.PFS_BYPASS))
+        # Cold file: size from the stripe manifests — no data movement.
+        flock = self._acquire_file(name, write=False)
+        try:
+            return self._file_meta_or_cold(name).size
+        finally:
+            flock.release_read()
 
     def delete(self, name: str) -> bool:
         flock = self._acquire_file(name, write=True)

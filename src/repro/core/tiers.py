@@ -227,6 +227,11 @@ class MemoryTier:
     def get(self, key: str, offset: int = 0, length: int | None = None) -> bytes:
         return bytes(self.get_view(key, offset, length))
 
+    def peek(self, key: str) -> bytes | None:
+        """Raw resident bytes without touching the read ledger — for
+        integrity checks over data the caller isn't actually consuming."""
+        return self._data.get(key)  # dict read is atomic under the GIL
+
     def delete(self, key: str) -> bool:
         with self._lock:
             blob = self._data.pop(key, None)

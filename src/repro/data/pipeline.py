@@ -5,9 +5,23 @@ Design (mirrors the paper's Hadoop-on-TLS data path, DESIGN.md §2):
 * The corpus is materialized as shard files in the store.  Hot shards live
   in the memory tier; every shard is persisted on the PFS tier
   (write-through), so any host can lose its cache and re-read (read mode f).
-* Locality scheduling: shard ``s`` is owned by host ``s % n_hosts`` — the
-  analogue of Hadoop scheduling maps onto the node holding the block, so
-  most reads hit the local memory tier (the paper's high ridge).
+* **Ranged reads, not shard re-reads:** a sequence window is fetched with
+  ``store.get_range`` through a small LRU *slab cache* (fixed-size token
+  slabs per shard), so one batch moves O(batch × window) bytes instead of
+  the seed's O(batch × shard) full-shard re-read per window.
+* **Locality scheduling (implemented):** the epoch permutation never moves
+  a window out of its home shard — windows are permuted *within* each
+  shard and the global order interleaves shards round-robin.  Shards are
+  owned in contiguous blocks (``shard_owner``); with ``global_batch ==
+  n_shards`` (the train driver's default geometry) every row of host
+  ``h`` draws from a shard ``h`` owns, every step — its slab cache and
+  the store's memory tier see repeat traffic (the paper's high ridge) —
+  and the per-owner permutation keeps the stream a pure function of
+  ``(seed, epoch)`` regardless of ``n_hosts``.  Other geometries still
+  get the round-robin spread (and stable per-host residue sets whenever
+  ``n_shards`` divides the global batch), just not the perfect
+  row↔owned-shard match; ``LoaderStats.locality_fraction`` reports the
+  achieved fraction honestly either way.
 * The loader is **deterministic and resumable**: ``state()`` returns an
   exact cursor that ``restore()`` resumes from — required by the
   checkpoint/restart story (DESIGN.md §6, test_checkpoint.py).
@@ -23,6 +37,7 @@ from __future__ import annotations
 import dataclasses
 import queue
 import threading
+from collections import OrderedDict
 
 import numpy as np
 
@@ -82,6 +97,12 @@ class SyntheticCorpus:
             pos += len(chunk)
         return out
 
+    def read_tokens(self, shard: int, token_offset: int, n_tokens: int) -> np.ndarray:
+        """Ranged read of ``n_tokens`` tokens from one shard — only the
+        covering store blocks move (memory-tier hit or partial stripe read)."""
+        raw = self.store.get_range(self.shard_name(shard), token_offset * 4, n_tokens * 4)
+        return np.frombuffer(raw, dtype=np.int32)
+
 
 @dataclasses.dataclass
 class PipelineState:
@@ -96,6 +117,59 @@ class PipelineState:
     @classmethod
     def from_dict(cls, d: dict) -> "PipelineState":
         return cls(**d)
+
+
+@dataclasses.dataclass
+class LoaderStats:
+    """Two-level data-path ledger for one loader."""
+
+    slab_hits: int = 0
+    slab_misses: int = 0
+    bytes_fetched: int = 0  # bytes pulled from the store (slab fills)
+    local_windows: int = 0  # windows whose home shard this host owns
+    remote_windows: int = 0
+
+    def hit_rate(self) -> float:
+        total = self.slab_hits + self.slab_misses
+        return self.slab_hits / total if total else 0.0
+
+    def locality_fraction(self) -> float:
+        total = self.local_windows + self.remote_windows
+        return self.local_windows / total if total else 0.0
+
+
+class _SlabCache:
+    """LRU cache of fixed-size token slabs, filled by ``store.get_range``.
+
+    The slab is the data plane's caching unit below the store block: a
+    window read touches only its covering slabs, a slab is fetched with a
+    single ranged read (no full-shard materialization), and the LRU keeps
+    the working set of the current permutation rounds resident.
+    """
+
+    def __init__(self, corpus: SyntheticCorpus, slab_tokens: int, capacity: int, stats: LoaderStats) -> None:
+        self.corpus = corpus
+        self.slab_tokens = slab_tokens
+        self.capacity = max(1, capacity)
+        self.stats = stats
+        self._slabs: OrderedDict[tuple[int, int], np.ndarray] = OrderedDict()
+
+    def get(self, shard: int, slab_idx: int) -> np.ndarray:
+        key = (shard, slab_idx)
+        slab = self._slabs.get(key)
+        if slab is not None:
+            self._slabs.move_to_end(key)
+            self.stats.slab_hits += 1
+            return slab
+        off = slab_idx * self.slab_tokens
+        n = min(self.slab_tokens, self.corpus.tokens_per_shard - off)
+        slab = self.corpus.read_tokens(shard, off, n)
+        self.stats.slab_misses += 1
+        self.stats.bytes_fetched += slab.nbytes
+        self._slabs[key] = slab
+        while len(self._slabs) > self.capacity:
+            self._slabs.popitem(last=False)
+        return slab
 
 
 class ShardedLoader:
@@ -116,6 +190,8 @@ class ShardedLoader:
         n_hosts: int = 1,
         prefetch_depth: int = 2,
         state: PipelineState | None = None,
+        slab_tokens: int = 2048,
+        cache_slabs: int = 64,
     ) -> None:
         if global_batch % n_hosts:
             raise ValueError(f"global_batch={global_batch} not divisible by n_hosts={n_hosts}")
@@ -130,6 +206,10 @@ class ShardedLoader:
         self._q: queue.Queue = queue.Queue(maxsize=max(1, prefetch_depth))
         self._worker: threading.Thread | None = None
         self._stop = threading.Event()
+        self.stats = LoaderStats()
+        self.slab_tokens = max(1, min(slab_tokens, corpus.tokens_per_shard))
+        self._cache = _SlabCache(corpus, self.slab_tokens, cache_slabs, self.stats)
+        self._order_cache: tuple[int, np.ndarray] | None = None
 
         total_tokens = corpus.n_shards * corpus.tokens_per_shard
         self.tokens_per_global_batch = global_batch * (seq_len + 1)
@@ -140,35 +220,94 @@ class ShardedLoader:
                 f"({self.tokens_per_global_batch})"
             )
 
+    # ------------------------------------------------------------- locality
+
+    def shard_owner(self, shard: int) -> int:
+        """Owner host of a shard: contiguous blocks of ``n_shards/n_hosts``.
+
+        Matches the round-robin epoch order: with ``global_batch ==
+        n_shards``, host ``h``'s rows sit at batch positions
+        ``[h*local_batch, (h+1)*local_batch)`` → shard residues equal to
+        exactly the contiguous block this function assigns to ``h``, every
+        step.  (Divisibility alone is not enough: with ``global_batch >
+        n_shards`` a host's ``local_batch`` consecutive residues wrap
+        around all shards.)
+        """
+        return min(shard * self.n_hosts // self.corpus.n_shards, self.n_hosts - 1)
+
+    def _window_shard(self, w: int) -> int:
+        """Home shard of window ``w`` (the shard holding its first token)."""
+        return (w * (self.seq_len + 1)) // self.corpus.tokens_per_shard
+
+    def _epoch_order(self, epoch: int) -> np.ndarray:
+        """Global window order for one epoch: per-shard (hence per-owner)
+        permutation, interleaved round-robin across shards.
+
+        Pure function of ``(corpus.seed, epoch)`` — independent of
+        ``n_hosts``/``host_id``, so elastic restarts and host-slice
+        reassembly stay exact while every permutation round walks the
+        shards in a fixed cycle (consecutive global rows hit consecutive
+        shards; each host's rows hit exactly its owned block when
+        ``global_batch == n_shards``).
+        """
+        if self._order_cache is not None and self._order_cache[0] == epoch:
+            return self._order_cache[1]
+        span = self.seq_len + 1
+        total_tokens = self.corpus.n_shards * self.corpus.tokens_per_shard
+        n_windows = total_tokens // span
+        home = (np.arange(n_windows, dtype=np.int64) * span) // self.corpus.tokens_per_shard
+        rng = np.random.default_rng((self.corpus.seed << 16) ^ epoch)
+        groups = []
+        for s in range(self.corpus.n_shards):
+            g = np.flatnonzero(home == s)
+            groups.append(g[rng.permutation(len(g))])
+        order = np.empty(n_windows, dtype=np.int64)
+        pos = 0
+        rnd = 0
+        while pos < n_windows:
+            for g in groups:
+                if rnd < len(g):
+                    order[pos] = g[rnd]
+                    pos += 1
+            rnd += 1
+        self._order_cache = (epoch, order)
+        return order
+
     # ------------------------------------------------------------- sampling
 
     def _batch_at(self, epoch: int, step: int) -> tuple[np.ndarray, np.ndarray]:
         """Deterministic batch materialization for this host's slice."""
         span = self.seq_len + 1
-        total_tokens = self.corpus.n_shards * self.corpus.tokens_per_shard
-        # Epoch-level deterministic permutation of sequence windows.
-        n_windows = total_tokens // span
-        rng = np.random.default_rng((self.corpus.seed << 16) ^ epoch)
-        perm = rng.permutation(n_windows)
+        order = self._epoch_order(epoch)
+        n_windows = len(order)
         rows = []
         for b in range(self.local_batch):
             gidx = step * self.global_batch + self.host_id * self.local_batch + b
-            w = int(perm[gidx % n_windows])
-            start = w * span
-            rows.append(self._read_span(start, span))
+            w = int(order[gidx % n_windows])
+            if self.shard_owner(self._window_shard(w)) == self.host_id:
+                self.stats.local_windows += 1
+            else:
+                self.stats.remote_windows += 1
+            rows.append(self._read_span(w * span, span))
         arr = np.stack(rows)
         return arr[:, :-1], arr[:, 1:]
 
     def _read_span(self, start: int, length: int) -> np.ndarray:
-        """Read [start, start+length) tokens across shard boundaries."""
+        """Read [start, start+length) tokens across shard boundaries.
+
+        Served slab-by-slab from the LRU cache — each miss moves one
+        ranged store read of ``slab_tokens`` tokens, never a whole shard.
+        """
         tps = self.corpus.tokens_per_shard
+        st = self.slab_tokens
         out = np.empty(length, dtype=np.int32)
         filled = 0
         while filled < length:
             shard, off = divmod(start + filled, tps)
-            take = min(length - filled, tps - off)
-            toks = self.corpus.read_shard(shard % self.corpus.n_shards)
-            out[filled : filled + take] = toks[off : off + take]
+            slab_idx, soff = divmod(off, st)
+            slab = self._cache.get(shard % self.corpus.n_shards, slab_idx)
+            take = min(length - filled, len(slab) - soff)
+            out[filled : filled + take] = slab[soff : soff + take]
             filled += take
         return out
 
@@ -269,6 +408,13 @@ class ShardedLoader:
     def _rewind_one(self) -> None:
         st = self._state
         if st.step == 0:
+            # Clamp at the stream origin: rewinding past (epoch 0, step 0)
+            # would fabricate an epoch −1 that never existed.
+            if st.epoch <= 0:
+                raise RuntimeError(
+                    "pipeline cursor rewound past (epoch 0, step 0) — more "
+                    "batches drained than were ever produced"
+                )
             st.epoch -= 1
             st.step = self.steps_per_epoch - 1
         else:

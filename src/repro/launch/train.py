@@ -38,6 +38,10 @@ class TrainResult:
     losses: list
     restarts: int
     steps_run: int
+    #: per-phase stall breakdown (seconds): where the step wall time went
+    stalls: dict = dataclasses.field(default_factory=dict)
+    #: accumulated two-level data-path stats across all loaders of the run
+    loader_stats: dict = dataclasses.field(default_factory=dict)
 
 
 def run_training(
@@ -67,7 +71,19 @@ def run_training(
     corpus.generate()
     ckpt = CheckpointManager(store, tag=cfg.name, mode=ckpt_mode, keep_last=2)
     injector = injector or FailureInjector()
+    # One monitor per step phase: total step time, time stalled on the data
+    # plane (next(loader)), and time stalled on the checkpoint critical path
+    # (cursor sync + save).  In async mode the save stall is the device_get
+    # snapshot only — serialization and store puts run off the step path.
     monitor = StepTimeMonitor(n_hosts=1)
+    data_monitor = StepTimeMonitor(n_hosts=1)
+    ckpt_monitor = StepTimeMonitor(n_hosts=1)
+    data_stall_s = ckpt_stall_s = 0.0
+    agg_loader: dict[str, float] = {}
+
+    def fold_loader_stats(loader: ShardedLoader) -> None:
+        for k, v in dataclasses.asdict(loader.stats).items():
+            agg_loader[k] = agg_loader.get(k, 0) + v
 
     def fresh_state():
         state, _ = init_state(model, cfg, optimizer, jax.random.PRNGKey(0))
@@ -82,49 +98,79 @@ def run_training(
     restarts = 0
     steps_run = 0
 
-    with Heartbeat(timeout_s=heartbeat_timeout) as hb:
-        while True:
-            pstate = PipelineState(int(state["pipeline"]["epoch"]), int(state["pipeline"]["step"]))
-            loader = ShardedLoader(
-                corpus, global_batch, seq_len, prefetch_depth=2, state=pstate
-            )
-            try:
-                while int(state["step"]) < total_steps:
-                    step_no = int(state["step"])
-                    injector.maybe_fail(step_no)
-                    t0 = time.perf_counter()
-                    inputs, labels = next(loader)
-                    batch = {"inputs": jnp.asarray(inputs), "labels": jnp.asarray(labels)}
-                    state, metrics = train_step(state, batch)
-                    hb.beat()
-                    monitor.record({0: time.perf_counter() - t0})
-                    loss = float(metrics["loss"])
-                    losses.append(loss)
-                    steps_run += 1
-                    if on_step:
-                        on_step(step_no, metrics)
-                    if int(state["step"]) % ckpt_every == 0:
-                        cursor = loader.sync()
-                        state["pipeline"] = {
-                            "epoch": np.int64(cursor.epoch),
-                            "step": np.int64(cursor.step),
-                        }
-                        ckpt.save(int(state["step"]), state)
-                break  # completed
-            except SimulatedFailure:
-                restarts += 1
-                if restarts > max_restarts:
-                    raise
-                # Recovery: last committed two-level checkpoint (memory-tier
-                # hit when the tier survived; PFS read mode (f) otherwise).
-                state = fresh_state()
-                if ckpt.latest_step() is not None:
-                    _, state = ckpt.restore(state)
-            finally:
-                loader.close()
+    try:
+        with Heartbeat(timeout_s=heartbeat_timeout) as hb:
+            while True:
+                pstate = PipelineState(
+                    int(state["pipeline"]["epoch"]), int(state["pipeline"]["step"])
+                )
+                loader = ShardedLoader(
+                    corpus, global_batch, seq_len, prefetch_depth=2, state=pstate
+                )
+                try:
+                    while int(state["step"]) < total_steps:
+                        step_no = int(state["step"])
+                        injector.maybe_fail(step_no)
+                        t0 = time.perf_counter()
+                        inputs, labels = next(loader)
+                        t_data = time.perf_counter() - t0
+                        batch = {"inputs": jnp.asarray(inputs), "labels": jnp.asarray(labels)}
+                        state, metrics = train_step(state, batch)
+                        hb.beat()
+                        loss = float(metrics["loss"])
+                        losses.append(loss)
+                        steps_run += 1
+                        if on_step:
+                            on_step(step_no, metrics)
+                        t_ckpt = 0.0
+                        if int(state["step"]) % ckpt_every == 0:
+                            tc = time.perf_counter()
+                            cursor = loader.sync()
+                            state["pipeline"] = {
+                                "epoch": np.int64(cursor.epoch),
+                                "step": np.int64(cursor.step),
+                            }
+                            ckpt.save(int(state["step"]), state)
+                            t_ckpt = time.perf_counter() - tc
+                        monitor.record({0: time.perf_counter() - t0})
+                        data_monitor.record({0: t_data})
+                        ckpt_monitor.record({0: t_ckpt})
+                        data_stall_s += t_data
+                        ckpt_stall_s += t_ckpt
+                    break  # completed
+                except SimulatedFailure:
+                    restarts += 1
+                    if restarts > max_restarts:
+                        raise
+                    # Recovery: last committed two-level checkpoint (memory-
+                    # tier hit when the tier survived; PFS read mode (f)
+                    # otherwise).
+                    state = fresh_state()
+                    if ckpt.latest_step() is not None:
+                        _, state = ckpt.restore(state)
+                finally:
+                    loader.close()
+                    fold_loader_stats(loader)
 
-    ckpt.wait_until_durable()
-    return TrainResult(state=state, losses=losses, restarts=restarts, steps_run=steps_run)
+        ckpt.wait_until_durable()
+    finally:
+        ckpt.close()  # stop the background save lane (joins pending saves)
+    stalls = {
+        "step_ewma_s": monitor.synchronous_step_time(),
+        "data_stall_ewma_s": data_monitor.synchronous_step_time(),
+        "ckpt_stall_ewma_s": ckpt_monitor.synchronous_step_time(),
+        "data_stall_total_s": data_stall_s,
+        "ckpt_stall_total_s": ckpt_stall_s,
+        "ckpt_save_critical_s": sum(ckpt.save_critical_s),
+    }
+    return TrainResult(
+        state=state,
+        losses=losses,
+        restarts=restarts,
+        steps_run=steps_run,
+        stalls=stalls,
+        loader_stats=agg_loader,
+    )
 
 
 def main() -> None:
@@ -154,6 +200,11 @@ def main() -> None:
     print(
         f"done: {res.steps_run} steps run ({res.restarts} restarts), "
         f"final loss {res.losses[-1]:.4f}"
+    )
+    print(
+        f"stalls: data {res.stalls['data_stall_total_s']:.2f}s, "
+        f"ckpt {res.stalls['ckpt_stall_total_s']:.2f}s "
+        f"(save critical path {res.stalls['ckpt_save_critical_s']:.2f}s)"
     )
 
 

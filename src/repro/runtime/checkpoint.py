@@ -7,16 +7,28 @@ the tier outlives the process); durability comes from the PFS tier.
 
 * ``mode="sync"``  — paper write mode (c): synchronous write-through.
   ``save()`` returns only after PFS stripes + CRCs are on disk.
-* ``mode="async"`` — beyond-paper: ``save()`` returns after the memory-tier
-  copy (fast, training resumes immediately); a background flusher drains
-  to the PFS tier.  ``wait_until_durable()`` is the barrier.
+* ``mode="async"`` — beyond-paper: ``save()`` snapshots the leaves off
+  device (``jax.device_get``) and returns; serialization and store puts
+  run on a background thread, and the store's own write-back flushers
+  drain to the PFS tier behind that.  The training critical path pays
+  only the device→host copy.  ``wait_until_durable()`` is the barrier.
 
-Checkpoint layout inside the store (atomic-commit protocol)::
+Checkpoint layout inside the store (atomic-commit protocol, DESIGN.md §6)::
 
-    ckpt/<tag>/step_00000042/leaves      one blob, concatenated leaf bytes
-    ckpt/<tag>/step_00000042/manifest    JSON: keypath -> {shape,dtype,offset,size}
-    ckpt/<tag>/step_00000042/COMMIT      written last; restore only sees
-                                         committed steps
+    ckpt/<tag>/step_00000042/chunk_0000   packed leaf bytes, ~chunk_bytes each
+    ckpt/<tag>/step_00000042/chunk_0001   ...
+    ckpt/<tag>/step_00000042/manifest     JSON: chunk sizes + keypath ->
+                                          {shape, dtype, chunk, offset, size}
+    ckpt/<tag>/step_00000042/COMMIT       written last; restore only sees
+                                          committed steps
+
+Chunks are written with one batched ``put_many`` (every block of every
+chunk in flight on the store's pool together) and restored with ranged
+reads: a leaf is fetched via ``get_range(chunk, offset, size)``, so a
+restore that needs only part of a chunk — or an elastic
+``restore_sharded`` filling a template subset — moves only the bytes it
+asks for.  Whole chunks whose every leaf is needed come back through one
+batched ``get_many``.
 
 Restore takes a **template pytree** (the abstract train state from
 ``init``) and fills leaves by keypath — this makes restore *elastic*: the
@@ -27,6 +39,9 @@ device count / mesh is a restore-time re-shard (``restore_sharded``).
 from __future__ import annotations
 
 import json
+import threading
+import time
+from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Any
 
 import jax
@@ -35,6 +50,11 @@ import numpy as np
 from repro.core.store import ReadMode, TwoLevelStore, WriteMode
 
 PyTree = Any
+
+#: Default packed-chunk target size.  Big enough that PFS striping wins,
+#: small enough that several chunks are in flight per checkpoint and a
+#: partial restore skips real bytes.
+DEFAULT_CHUNK_BYTES = 16 * 2**20
 
 
 def _keystr(path) -> str:
@@ -46,6 +66,46 @@ def _flatten_with_names(tree: PyTree) -> list[tuple[str, Any]]:
     return [(_keystr(p), v) for p, v in leaves]
 
 
+def _pack_chunks(
+    named: list[tuple[str, np.ndarray]], chunk_bytes: int
+) -> tuple[dict[str, dict], list[bytes]]:
+    """Greedy-pack leaf bytes into ~``chunk_bytes`` chunks, in leaf order.
+
+    Every leaf lands whole inside exactly one chunk (an oversized leaf
+    gets a chunk of its own), so restore can fetch it with a single
+    ranged read.  Returns (manifest leaves, chunk blobs).
+    """
+    leaves: dict[str, dict] = {}
+    chunks: list[bytes] = []
+    parts: list[bytes] = []
+    filled = 0
+
+    def flush() -> None:
+        nonlocal parts, filled
+        if parts:
+            chunks.append(b"".join(parts))
+            parts = []
+            filled = 0
+
+    for name, arr in named:
+        raw = np.ascontiguousarray(arr).tobytes()
+        if filled and filled + len(raw) > chunk_bytes:
+            flush()
+        leaves[name] = {
+            "shape": list(arr.shape),
+            "dtype": str(arr.dtype),
+            "chunk": len(chunks),
+            "offset": filled,
+            "size": len(raw),
+        }
+        parts.append(raw)
+        filled += len(raw)
+        if filled >= chunk_bytes:
+            flush()
+    flush()
+    return leaves, chunks
+
+
 class CheckpointManager:
     """Save/restore train-state pytrees through the two-level store."""
 
@@ -55,13 +115,24 @@ class CheckpointManager:
         tag: str = "default",
         mode: str = "sync",
         keep_last: int = 3,
+        chunk_bytes: int = DEFAULT_CHUNK_BYTES,
     ) -> None:
         if mode not in ("sync", "async", "memory_only"):
             raise ValueError(f"mode must be sync/async/memory_only, got {mode!r}")
+        if chunk_bytes <= 0:
+            raise ValueError("chunk_bytes must be positive")
         self.store = store
         self.tag = tag
         self.mode = mode
         self.keep_last = keep_last
+        self.chunk_bytes = chunk_bytes
+        # One background lane: saves serialize+put off the critical path but
+        # still land in submission order (COMMIT order == save order).
+        self._bg = ThreadPoolExecutor(max_workers=1, thread_name_prefix="ckpt-save")
+        self._pending: list[Future] = []
+        self._pending_lock = threading.Lock()
+        #: wall seconds save() spent on the caller's critical path, per save
+        self.save_critical_s: list[float] = []
 
     # -------------------------------------------------------------- naming
 
@@ -78,39 +149,67 @@ class CheckpointManager:
     # ---------------------------------------------------------------- save
 
     def save(self, step: int, state: PyTree) -> None:
-        """Serialize and store one checkpoint; commit marker written last."""
-        named = _flatten_with_names(state)
-        manifest: dict[str, dict] = {}
-        parts: list[bytes] = []
-        offset = 0
-        for name, leaf in named:
-            arr = np.asarray(jax.device_get(leaf))
-            raw = np.ascontiguousarray(arr).tobytes()
-            manifest[name] = {
-                "shape": list(arr.shape),
-                "dtype": str(arr.dtype),
-                "offset": offset,
-                "size": len(raw),
-            }
-            parts.append(raw)
-            offset += len(raw)
-        blob = b"".join(parts)
+        """Store one checkpoint; commit marker written last.
+
+        Sync/memory_only: fully synchronous.  Async: the device→host leaf
+        snapshot happens here (the only part that must see consistent
+        training state); chunk packing and store puts run on the
+        background lane and ``save`` returns immediately.
+        """
+        t0 = time.perf_counter()
+        named = [
+            (name, np.asarray(jax.device_get(leaf)))
+            for name, leaf in _flatten_with_names(state)
+        ]
+        if self.mode == "async":
+            # Surface failures of already-finished saves without blocking on
+            # the one still in flight — the critical path stays snapshot-only.
+            self._join_pending(wait=False)
+            fut = self._bg.submit(self._serialize_and_put, step, named)
+            with self._pending_lock:
+                self._pending.append(fut)
+        else:
+            self._serialize_and_put(step, named)
+        self.save_critical_s.append(time.perf_counter() - t0)
+
+    def _serialize_and_put(self, step: int, named: list[tuple[str, np.ndarray]]) -> None:
+        leaves, chunks = _pack_chunks(named, self.chunk_bytes)
+        manifest = {"chunks": [len(c) for c in chunks], "leaves": leaves}
         mode = self._write_mode()
         prefix = self._prefix(step)
-        self.store.put(f"{prefix}/leaves", blob, mode=mode)
-        self.store.put(f"{prefix}/manifest", json.dumps(manifest).encode(), mode=mode)
+        batch = {f"{prefix}/chunk_{i:04d}": blob for i, blob in enumerate(chunks)}
+        batch[f"{prefix}/manifest"] = json.dumps(manifest).encode()
+        self.store.put_many(batch, mode=mode)
         # Commit marker LAST: a crash mid-save leaves an uncommitted step
         # that restore ignores and gc() reaps.
-        self.store.put(f"{prefix}/COMMIT", str(len(blob)).encode(), mode=mode)
+        self.store.put(f"{prefix}/COMMIT", str(len(chunks)).encode(), mode=mode)
         self.gc()
 
+    def _join_pending(self, wait: bool = True) -> None:
+        """Re-raise background save failures; optionally block on completion."""
+        with self._pending_lock:
+            pending = list(self._pending)
+        done: list[Future] = []
+        for fut in pending:
+            if wait or fut.done():
+                fut.result()  # re-raises a background failure here
+                done.append(fut)
+        with self._pending_lock:
+            self._pending = [f for f in self._pending if f not in done]
+
     def wait_until_durable(self) -> None:
-        """Barrier: all async-written checkpoints are on the PFS tier."""
+        """Barrier: all saves are serialized AND on the PFS tier."""
+        self._join_pending()
         self.store.drain()
 
     # ------------------------------------------------------------- restore
 
     def steps(self, committed_only: bool = True) -> list[int]:
+        self._join_pending()
+        return self._steps_impl(committed_only)
+
+    def _steps_impl(self, committed_only: bool = True) -> list[int]:
+        """steps() without the pending-save join (safe on the save lane)."""
         base = f"ckpt/{self.tag}/"
         steps = set()
         committed = set()
@@ -123,7 +222,10 @@ class CheckpointManager:
             stepdir, leafname = rest.split("/", 1)
             if not stepdir.startswith("step_"):
                 continue
-            s = int(stepdir[len("step_") :])
+            try:
+                s = int(stepdir[len("step_") :])
+            except ValueError:
+                continue  # stray debris under ckpt/<tag>/ — not a step dir
             steps.add(s)
             if leafname == "COMMIT":
                 committed.add(s)
@@ -134,25 +236,76 @@ class CheckpointManager:
         return steps[-1] if steps else None
 
     def restore(self, template: PyTree, step: int | None = None) -> tuple[int, PyTree]:
-        """Fill ``template``'s leaves from the checkpoint at ``step`` (or latest)."""
+        """Fill ``template``'s leaves from the checkpoint at ``step`` (or latest).
+
+        Only the chunks holding the template's leaves are touched: chunks
+        needed in full arrive via one batched ``get_many``; a chunk needed
+        partially is read leaf-by-leaf with ``get_range`` — restore byte
+        traffic follows the template, not the checkpoint.
+        """
+        self._join_pending()
         if step is None:
             step = self.latest_step()
             if step is None:
                 raise FileNotFoundError(f"no committed checkpoint under tag {self.tag!r}")
         prefix = self._prefix(step)
         manifest = json.loads(self.store.get(f"{prefix}/manifest").decode())
-        blob = self.store.get(f"{prefix}/leaves")
+        if "leaves" not in manifest or "chunks" not in manifest:
+            # Pre-chunked monolithic layout (flat keypath -> {offset,size,...}
+            # manifest + one `leaves` blob) from an older run on the same
+            # PFS root — still restorable.
+            return step, self._restore_legacy(prefix, manifest, template, step)
+        leaves_meta: dict[str, dict] = manifest["leaves"]
+        chunk_sizes: list[int] = manifest["chunks"]
+
+        named = _flatten_with_names(template)
+        missing = [name for name, _ in named if name not in leaves_meta]
+        if missing:
+            raise KeyError(
+                f"checkpoint step {step} has no leaf {missing[0]!r}; "
+                f"template/checkpoint structure mismatch"
+            )
+
+        by_chunk: dict[int, int] = {}
+        for name, _ in named:
+            meta = leaves_meta[name]
+            by_chunk[meta["chunk"]] = by_chunk.get(meta["chunk"], 0) + meta["size"]
+        full = sorted(c for c, need in by_chunk.items() if need == chunk_sizes[c])
+        blobs = dict(
+            zip(full, self.store.get_many([f"{prefix}/chunk_{c:04d}" for c in full]))
+        )
+        # Leaves in partially-needed chunks: fan the ranged reads out over a
+        # transient pool so they pipeline on the store like get_many does,
+        # instead of one blocking round trip per leaf inside tree_map.
+        partial = [
+            (name, leaves_meta[name])
+            for name, _ in named
+            if leaves_meta[name]["chunk"] not in blobs
+        ]
+        ranged: dict[str, bytes] = {}
+        if partial:
+            with ThreadPoolExecutor(
+                max_workers=min(8, len(partial)), thread_name_prefix="ckpt-restore"
+            ) as pool:
+                for (name, _), raw in zip(
+                    partial,
+                    pool.map(
+                        lambda m: self.store.get_range(
+                            f"{prefix}/chunk_{m['chunk']:04d}", m["offset"], m["size"]
+                        ),
+                        [m for _, m in partial],
+                    ),
+                ):
+                    ranged[name] = raw
 
         def fill(path, leaf):
             name = _keystr(path)
-            try:
-                meta = manifest[name]
-            except KeyError:
-                raise KeyError(
-                    f"checkpoint step {step} has no leaf {name!r}; "
-                    f"template/checkpoint structure mismatch"
-                ) from None
-            raw = blob[meta["offset"] : meta["offset"] + meta["size"]]
+            meta = leaves_meta[name]
+            c = meta["chunk"]
+            if c in blobs:
+                raw = blobs[c][meta["offset"] : meta["offset"] + meta["size"]]
+            else:
+                raw = ranged[name]
             arr = np.frombuffer(raw, dtype=np.dtype(meta["dtype"])).reshape(meta["shape"])
             want = getattr(leaf, "shape", None)
             if want is not None and tuple(want) != tuple(arr.shape):
@@ -163,6 +316,28 @@ class CheckpointManager:
 
         restored = jax.tree_util.tree_map_with_path(fill, template)
         return step, restored
+
+    def _restore_legacy(self, prefix: str, manifest: dict, template: PyTree, step: int) -> PyTree:
+        """Fill a template from the pre-chunked monolithic-blob layout."""
+        def fill(path, leaf):
+            name = _keystr(path)
+            try:
+                meta = manifest[name]
+            except KeyError:
+                raise KeyError(
+                    f"checkpoint step {step} has no leaf {name!r}; "
+                    f"template/checkpoint structure mismatch"
+                ) from None
+            raw = self.store.get_range(f"{prefix}/leaves", meta["offset"], meta["size"])
+            arr = np.frombuffer(raw, dtype=np.dtype(meta["dtype"])).reshape(meta["shape"])
+            want = getattr(leaf, "shape", None)
+            if want is not None and tuple(want) != tuple(arr.shape):
+                raise ValueError(
+                    f"shape mismatch for {name!r}: checkpoint {arr.shape} vs template {want}"
+                )
+            return arr.copy()
+
+        return jax.tree_util.tree_map_with_path(fill, template)
 
     def restore_sharded(
         self,
@@ -175,6 +350,7 @@ class CheckpointManager:
         Because checkpoints hold full logical arrays, the target mesh may
         have a different device count than the mesh that saved them —
         resharding is just ``jax.device_put`` against the new sharding.
+        Chunks not referenced by the template are never read.
         """
         step, host_tree = self.restore(template, step)
         placed = jax.tree_util.tree_map(jax.device_put, host_tree, shardings)
@@ -185,14 +361,26 @@ class CheckpointManager:
     def gc(self) -> None:
         """Delete all but the newest ``keep_last`` committed checkpoints,
         plus any uncommitted debris older than the newest commit."""
-        committed = self.steps(committed_only=True)
+        # _steps_impl, not steps(): gc runs *on* the background save lane,
+        # and joining the lane from itself would deadlock.
+        committed = self._steps_impl(committed_only=True)
         doomed = set(committed[: -self.keep_last]) if self.keep_last > 0 else set()
         if committed:
             newest = committed[-1]
-            for s in self.steps(committed_only=False):
+            for s in self._steps_impl(committed_only=False):
                 if s < newest and s not in committed:
                     doomed.add(s)  # crashed, uncommitted save
-        for s in doomed:
-            prefix = self._prefix(s)
-            for leaf in ("COMMIT", "manifest", "leaves"):
-                self.store.delete(f"{prefix}/{leaf}")
+        if not doomed:
+            return
+        # COMMIT first: if gc dies midway the leftover is uncommitted
+        # debris (reaped next round), never a committed-but-gutted step.
+        prefixes = tuple(self._prefix(s) + "/" for s in sorted(doomed))
+        for s in sorted(doomed):
+            self.store.delete(f"{self._prefix(s)}/COMMIT")
+        for name in self.store.list_files():  # one listing pass for all steps
+            if name.startswith(prefixes):
+                self.store.delete(name)
+
+    def close(self) -> None:
+        self._join_pending()
+        self._bg.shutdown(wait=True)

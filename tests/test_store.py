@@ -196,3 +196,146 @@ class TestRestartAndConcurrency:
             assert st.delete("f")
             assert not st.exists("f")
             assert not st.delete("f")
+
+
+class TestRangedReads:
+    def test_get_range_exact_bytes(self, tmp_path):
+        with make(tmp_path) as st:
+            data = os.urandom(3 * MB + 517)
+            st.put("f", data)
+            for off, size in [(0, 100), (MB - 7, 20), (MB, MB), (2 * MB + 3, MB + 514), (0, len(data))]:
+                assert st.get_range("f", off, size) == data[off : off + size]
+
+    def test_get_range_clamps_to_file_size(self, tmp_path):
+        with make(tmp_path) as st:
+            data = os.urandom(MB + 100)
+            st.put("f", data)
+            assert st.get_range("f", MB, 5 * MB) == data[MB:]
+            assert st.get_range("f", 10 * MB, 4) == b""
+
+    def test_get_range_partial_block_moves_partial_bytes(self, tmp_path):
+        """A sub-block range read off the PFS tier must not read the whole file."""
+        with make(tmp_path) as st:
+            data = os.urandom(4 * MB)
+            st.put("f", data, mode=WriteMode.PFS_BYPASS)
+            before = st.pfs.stats.bytes_read
+            got = st.get_range("f", 2 * MB + 100, 1000, mode=ReadMode.PFS_BYPASS)
+            assert got == data[2 * MB + 100 : 2 * MB + 1100]
+            assert st.pfs.stats.bytes_read - before < MB  # not the 4MB file
+
+    def test_get_range_hits_memory_tier_zero_promotion(self, tmp_path):
+        with make(tmp_path) as st:
+            data = os.urandom(2 * MB)
+            st.put("f", data)  # write-through: resident
+            h0 = st.stats.mem_hits
+            assert st.get_range("f", 100, 50) == data[100:150]
+            assert st.stats.mem_hits == h0 + 1
+
+    def test_get_range_cold_file_no_full_read(self, tmp_path):
+        """Ranged read of a PFS-only file (post-restart) must register
+        metadata without streaming the whole file."""
+        root = str(tmp_path / "pfs")
+        data = os.urandom(3 * MB)
+        with TwoLevelStore(root, mem_capacity_bytes=8 * MB, block_bytes=MB,
+                           n_pfs_servers=2, stripe_bytes=256 * 1024) as st:
+            st.put("f", data)
+        with TwoLevelStore(root, mem_capacity_bytes=8 * MB, block_bytes=MB,
+                           n_pfs_servers=2, stripe_bytes=256 * 1024) as st2:
+            got = st2.get_range("f", MB + 10, 100)
+            assert got == data[MB + 10 : MB + 110]
+            assert st2.pfs.stats.bytes_read < MB
+
+    def test_get_buffered_range_streams_exact_bytes(self, tmp_path):
+        with make(tmp_path) as st:
+            data = os.urandom(3 * MB + 11)
+            st.put("f", data)
+            off, ln = MB - 5, MB + 200
+            got = b"".join(bytes(c) for c in st.get_buffered("f", offset=off, length=ln))
+            assert got == data[off : off + ln]
+
+    def test_get_range_integrity_on_partial_miss(self, tmp_path):
+        """Partial reads still verify per-stripe CRCs inside the PFS tier."""
+        with make(tmp_path) as st:
+            st.put("f", os.urandom(2 * MB), mode=WriteMode.PFS_BYPASS)
+            # corrupt the stripe holding the range
+            victim = None
+            for s in range(2):
+                d = tmp_path / "pfs" / f"server_{s:02d}"
+                for f in sorted(os.listdir(d)):
+                    if f.startswith("f@000000.s"):
+                        victim = d / f
+                        break
+                if victim:
+                    break
+            raw = bytearray(victim.read_bytes())
+            raw[10] ^= 0xFF
+            victim.write_bytes(bytes(raw))
+            with pytest.raises(IntegrityError):
+                st.get_range("f", 0, 1000, mode=ReadMode.PFS_BYPASS)
+
+
+class TestBatchAPI:
+    def test_put_many_get_many_roundtrip(self, tmp_path):
+        with make(tmp_path) as st:
+            files = {f"dir/f{i:02d}": os.urandom((i % 3) * MB + 1000 + i) for i in range(8)}
+            st.put_many(files)
+            names = list(files)
+            got = st.get_many(names)
+            assert got == [files[n] for n in names]
+
+    def test_put_many_duplicate_names_rejected(self, tmp_path):
+        with make(tmp_path) as st:
+            with pytest.raises(ValueError):
+                st.put_many([("a", b"x"), ("a", b"y")])
+
+    def test_put_many_async_durable_after_drain(self, tmp_path):
+        with make(tmp_path) as st:
+            files = {f"f{i}": os.urandom(MB + i) for i in range(4)}
+            st.put_many(files, mode=WriteMode.ASYNC_WRITEBACK)
+            st.drain()
+            st.mem.clear()
+            assert st.get_many(list(files)) == list(files.values())
+
+    def test_get_many_duplicates_and_order(self, tmp_path):
+        with make(tmp_path) as st:
+            st.put_many({"a": b"alpha", "b": b"beta"})
+            assert st.get_many(["b", "a", "b"]) == [b"beta", b"alpha", b"beta"]
+
+    def test_concurrent_put_many_batches_no_deadlock(self, tmp_path):
+        """Two overlapping-name batches must serialize per-file, not deadlock."""
+        with make(tmp_path) as st:
+            a = {f"k{i}": os.urandom(1000) for i in range(6)}
+            b = {f"k{i}": os.urandom(1000) for i in range(6)}
+            errs = []
+
+            def go(batch):
+                try:
+                    st.put_many(batch)
+                except Exception as e:  # pragma: no cover
+                    errs.append(e)
+
+            ts = [threading.Thread(target=go, args=(x,)) for x in (a, b)]
+            for t in ts:
+                t.start()
+            for t in ts:
+                t.join(timeout=30)
+                assert not t.is_alive(), "put_many deadlocked"
+            assert not errs
+            for i in range(6):
+                assert st.get(f"k{i}") in (a[f"k{i}"], b[f"k{i}"])
+
+    def test_get_range_full_block_promotes_even_when_cold(self, tmp_path):
+        """A ranged read covering a whole block of a cold file must warm the
+        memory tier (read mode f), like any full-block TIERED read."""
+        root = str(tmp_path / "pfs")
+        data = os.urandom(2 * MB)
+        with TwoLevelStore(root, mem_capacity_bytes=8 * MB, block_bytes=MB,
+                           n_pfs_servers=2, stripe_bytes=256 * 1024) as st:
+            st.put("f", data)
+        with TwoLevelStore(root, mem_capacity_bytes=8 * MB, block_bytes=MB,
+                           n_pfs_servers=2, stripe_bytes=256 * 1024) as st2:
+            assert st2.get_range("f", MB, MB) == data[MB:]
+            assert st2.stats.promotions == 1
+            h0 = st2.stats.mem_hits
+            assert st2.get_range("f", MB, MB) == data[MB:]  # now a mem hit
+            assert st2.stats.mem_hits == h0 + 1
