@@ -1,0 +1,159 @@
+"""Perf-trajectory gate: compare fresh ``BENCH_*.json`` against baselines.
+
+``benchmarks/baselines/`` holds committed ``BENCH_<label>.json`` seeds
+(produced by ``python -m benchmarks.run --quick`` — CI compares
+quick-vs-quick).  This tool loads both sides, prints a per-metric delta
+table (markdown, also appended to ``$GITHUB_STEP_SUMMARY`` when set) and
+**fails if any gated metric regresses more than the tolerance** (default
+20%) versus its committed baseline.
+
+Gated metrics are machine-deterministic: analytic-model outputs,
+byte-count ratios, correctness bounds, and budget-discipline ratios that
+do not depend on wall-clock speed.  Raw MB/s, wall seconds, and
+wall-clock speedup ratios are shown in the table but never gated here —
+they measure the runner, not the code (each speedup ratio is instead
+hard-gated against its absolute floor inside its own benchmark's CI
+step, where run-to-run variance was designed in).  A gated metric that
+disappears from the fresh results is itself a failure: a silently
+dropped gate is the purest form of regression.
+
+Usage::
+
+    python -m benchmarks.compare_bench --baseline benchmarks/baselines \
+        --fresh bench_artifacts [--tolerance 0.2]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+#: metric name -> direction ("higher" / "lower" is better).
+GATED: dict[str, str] = {
+    # deterministic phase-model reproductions (fig7 model half)
+    "fig7.model.map_speedup_vs_hdfs": "higher",
+    "fig7.model.map_speedup_vs_ofs": "higher",
+    "fig7.model.reduce_gain_4nodes": "higher",
+    "fig7.model.reduce_gain_12nodes": "higher",
+    # training plane: byte-count ratio + crash-consistency bit (deterministic)
+    "tscale.data.read_reduction": "higher",
+    "tscale.ckpt.restore_bit_identical": "higher",
+    # serving KV staging: byte-count flatness + numeric correctness bound
+    "sscale.staged_flatness": "lower",
+    "sscale.max_rel_err": "lower",
+    # out-of-core shuffle engine: regime, correctness, budget discipline,
+    # cleanup (all deterministic; the >=2x speedup floor is hard-asserted
+    # in terasort_scaling's own CI step, like pscale's >=2x standalone gate)
+    "terascale.over_capacity": "higher",
+    "terascale.validate_ok": "higher",
+    "terascale.peak_buffer_x_budget": "lower",
+    "terascale.spill_files_left": "lower",
+}
+
+
+def load_rows(path_dir: str) -> dict[str, float]:
+    rows: dict[str, float] = {}
+    for path in sorted(glob.glob(os.path.join(path_dir, "BENCH_*.json"))):
+        with open(path) as fh:
+            data = json.load(fh)
+        for name, cell in data.get("rows", {}).items():
+            try:
+                rows[name] = float(cell["value"])
+            except (TypeError, ValueError):
+                continue  # non-numeric cells aren't comparable
+    return rows
+
+
+def regression(name: str, base: float, fresh: float) -> float:
+    """Signed regression fraction for a gated metric (positive = worse)."""
+    direction = GATED[name]
+    if base == 0:
+        # A zero baseline is a hard bound (e.g. leftover spill files = 0):
+        # any move in the bad direction is a full regression.
+        worse = fresh > 0 if direction == "lower" else fresh < 0
+        return 1.0 if worse else 0.0
+    delta = (fresh - base) / abs(base)
+    return -delta if direction == "higher" else delta
+
+
+def compare(baseline: dict[str, float], fresh: dict[str, float],
+            tolerance: float) -> tuple[list[str], list[str]]:
+    """Returns (markdown table lines, failure messages)."""
+    lines = [
+        "| metric | baseline | fresh | delta | gated | status |",
+        "|---|---:|---:|---:|:---:|:---:|",
+    ]
+    failures: list[str] = []
+    for name in sorted(set(baseline) | set(fresh)):
+        b, f = baseline.get(name), fresh.get(name)
+        gated = name in GATED
+        if b is None:
+            status = "new"
+        elif f is None:
+            status = "missing"
+            if gated:
+                failures.append(f"{name}: gated metric missing from fresh results")
+        elif gated:
+            reg = regression(name, b, f)
+            status = "OK" if reg <= tolerance else f"REGRESSED {reg:+.0%}"
+            if reg > tolerance:
+                failures.append(
+                    f"{name}: {b} -> {f} ({reg:+.0%} worse, tolerance {tolerance:.0%}, "
+                    f"{GATED[name]} is better)"
+                )
+        else:
+            status = "info"
+        delta = "" if b is None or f is None or b == 0 else f"{(f - b) / abs(b):+.1%}"
+        fmt = lambda v: "—" if v is None else f"{v:g}"
+        mark = "✔" if gated else ""
+        lines.append(f"| {name} | {fmt(b)} | {fmt(f)} | {delta} | {mark} | {status} |")
+    return lines, failures
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", default="benchmarks/baselines")
+    ap.add_argument("--fresh", default="bench_artifacts")
+    ap.add_argument("--tolerance", type=float, default=0.20,
+                    help="allowed regression fraction on gated metrics")
+    args = ap.parse_args()
+
+    baseline = load_rows(args.baseline)
+    fresh = load_rows(args.fresh)
+    if not baseline:
+        print(f"no baselines under {args.baseline!r} — nothing to gate", file=sys.stderr)
+        sys.exit(2)
+    if not fresh:
+        print(f"no fresh BENCH_*.json under {args.fresh!r} — did the bench step run?",
+              file=sys.stderr)
+        sys.exit(2)
+
+    lines, failures = compare(baseline, fresh, args.tolerance)
+    table = "\n".join(lines)
+    print(table)
+    summary_path = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary_path:
+        with open(summary_path, "a") as fh:
+            fh.write("## Perf trajectory vs committed baselines\n\n")
+            fh.write(table + "\n\n")
+            if failures:
+                fh.write("**Gated regressions:**\n")
+                for f in failures:
+                    fh.write(f"- {f}\n")
+
+    gated_checked = sum(1 for n in GATED if n in baseline and n in fresh)
+    print(f"\n{gated_checked}/{len(GATED)} gated metrics compared, "
+          f"tolerance {args.tolerance:.0%}")
+    if failures:
+        print("\nFAIL — gated perf regressions:", file=sys.stderr)
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        sys.exit(1)
+    print("perf trajectory OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -38,6 +38,7 @@ def main() -> None:
         parallel_scaling,
         roofline,
         serve_scaling,
+        terasort_scaling,
         train_io_scaling,
     )
 
@@ -49,6 +50,7 @@ def main() -> None:
         ("pscale", parallel_scaling),
         ("sscale", serve_scaling),
         ("tscale", train_io_scaling),
+        ("terascale", terasort_scaling),
         ("roofline", roofline),
     ]
     if args.only:

@@ -1,7 +1,8 @@
 """TeraSort on three storage organizations (the paper's Section 5.3
-evaluation, miniaturized but moving real bytes).
+evaluation, miniaturized but moving real bytes) — now running on the
+out-of-core shuffle engine, so ``--records`` may exceed the memory tier.
 
-    PYTHONPATH=src python examples/terasort.py [--records 200000]
+    PYTHONPATH=src python examples/terasort.py [--records 200000 --budget-mb 8]
 """
 
 import argparse
@@ -23,10 +24,14 @@ MODES = {
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--records", type=int, default=200_000)
+    ap.add_argument("--budget-mb", type=int, default=8,
+                    help="engine sort budget; spills beyond it go through the store")
     args = ap.parse_args()
 
-    print(f"TeraSort, {args.records:,} records x 100 B = {args.records * 100 / MB:.0f} MiB\n")
-    print(f"{'storage':28s} {'gen(s)':>8s} {'map(s)':>8s} {'reduce(s)':>10s} {'hit rate':>9s}")
+    print(f"TeraSort, {args.records:,} records x 100 B = {args.records * 100 / MB:.0f} MiB, "
+          f"{args.budget_mb} MiB sort budget\n")
+    print(f"{'storage':28s} {'gen(s)':>8s} {'map(s)':>8s} {'reduce(s)':>10s} "
+          f"{'hit rate':>9s} {'spills':>7s}")
     results = {}
     for label, (wgen, rmap, wred) in MODES.items():
         with tempfile.TemporaryDirectory() as d:
@@ -37,14 +42,26 @@ def main() -> None:
                 stripe_bytes=1 * MB,
             ) as st:
                 gen_s = teragen(st, args.records, n_shards=4, write_mode=wgen)
-                t = terasort(st, n_shards=4, n_reducers=4, read_mode=rmap, write_mode=wred, label=label)
+                t = terasort(
+                    st,
+                    n_shards=4,
+                    n_reducers=4,
+                    read_mode=rmap,
+                    write_mode=wred,
+                    label=label,
+                    memory_budget_bytes=args.budget_mb * MB,
+                )
                 results[label] = t
-                print(f"{label:28s} {gen_s:8.3f} {t.map_s:8.3f} {t.reduce_s:10.3f} {t.mem_hit_rate:9.2f}")
+                print(f"{label:28s} {gen_s:8.3f} {t.map_s:8.3f} {t.reduce_s:10.3f} "
+                      f"{t.mem_hit_rate:9.2f} {t.spill_files:7d}")
 
     tls = results["two-level (tiered)"]
     ofs = results["orangefs (pfs bypass)"]
     print(f"\ntwo-level map phase vs orangefs: {ofs.map_s / tls.map_s:.2f}x "
           f"(paper measured 4.2x at cluster scale; mapper reads hit the memory tier)")
+    print(f"external sort: {tls.spill_files} spill runs, k<={tls.merge_runs_max} merge, "
+          f"peak buffers {tls.peak_buffer_bytes / MB:.1f} MiB, "
+          f"{tls.shuffle_mbps:.1f} MB/s aggregate shuffle")
     print("output validated: globally ordered ✓")
 
 

@@ -1,26 +1,23 @@
 """TeraSort on the two-level storage system (paper Section 5.3).
 
-A faithful miniature of the benchmark's I/O pattern:
+A faithful miniature of the benchmark's I/O pattern, now a thin client of
+the out-of-core shuffle engine (``apps/shuffle.py``):
 
 * **TeraGen** — map-only job writing random fixed-size records (10-byte
   key + payload) as shard files through a chosen write mode.
-* **TeraSort** — mappers read shards (read-once), partition records by
-  sampled key splitters (the shuffle), reducers sort partitions and
-  write output shards (write-once).
-* **TeraValidate** — reads outputs and checks global key order.
+* **TeraSort** — the engine's external sort: mappers stream shards
+  (read-once) and partition/sort/spill within a fixed memory budget;
+  reducers k-way-merge their spill runs with ranged readahead and stream
+  output shards as the merge drains.  Peak memory is bounded by the
+  budget, so TeraSort runs on datasets far larger than the memory tier —
+  the whole point of the benchmark.
+* **TeraValidate** — streams outputs and checks global key order without
+  materializing a partition.
 
-The I/O rides the store's parallel data path: mappers stream shards
-concurrently through ``get_buffered`` (per-block readahead overlapping PFS
-stripes with the partitioning compute), and reducers sort + write their
-output shards concurrently, so the PFS servers see one in-flight request
-each, exactly the aggregate-throughput pattern of the paper's Section 4
-model.  The shuffle itself is a single argsort-split — records are routed
-to all reducers in one stable sort over destination ids instead of one
-full scan per reducer.
-
-Phase wall-times + store tier stats are returned so the fig7 benchmark
-can compare HDFS-style (bypass-memory ~ local-disk-only), OrangeFS-style
-(PFS bypass) and two-level (tiered) storage on real moved bytes.
+Phase wall-times + spill/merge stats + store tier stats are returned so
+the fig7 / terasort_scaling benchmarks can compare HDFS-style
+(memory-only), OrangeFS-style (PFS bypass) and two-level (tiered)
+storage on real moved bytes.
 """
 
 from __future__ import annotations
@@ -31,30 +28,36 @@ from concurrent.futures import ThreadPoolExecutor
 
 import numpy as np
 
+from repro.apps.shuffle import ShuffleConfig, ShuffleEngine, ShuffleStats, fold_keys
 from repro.core.store import ReadMode, TwoLevelStore, WriteMode
 
 RECORD = 100  # bytes per record (TeraSort convention)
 KEY = 10  # leading key bytes
 
-# Big-endian byte weights folding a 10-byte key into one uint64 (mod 2^63).
-_KEY_WEIGHTS = 256 ** np.arange(KEY - 1, -1, -1, dtype=np.uint64)
+MB = 2**20
 
 
 def _record_keys(records: np.ndarray) -> np.ndarray:
     """Fold each record's leading KEY bytes into a sortable uint64."""
-    return records[:, :KEY].astype(np.uint64) @ _KEY_WEIGHTS % (1 << 63)
+    return fold_keys(records, KEY)
 
 
 @dataclasses.dataclass
 class TeraSortTimings:
     label: str
     gen_s: float
-    map_s: float
-    shuffle_s: float
-    reduce_s: float
+    map_s: float  # map/spill phase: stream + partition + sort + spill
+    shuffle_s: float  # splitter sampling (the shuffle plan)
+    reduce_s: float  # k-way merge + output streaming
     validate_s: float
     records: int
     mem_hit_rate: float
+    # Spill/merge accounting from the engine (out-of-core path).
+    spill_files: int = 0
+    spill_bytes: int = 0
+    merge_runs_max: int = 0
+    peak_buffer_bytes: int = 0
+    shuffle_mbps: float = 0.0
 
     @property
     def sort_s(self) -> float:
@@ -83,8 +86,18 @@ def teragen(
 
     def gen_shard(i: int) -> None:
         rng = np.random.default_rng(seed + i)
-        data = rng.integers(0, 256, size=(per, RECORD), dtype=np.uint8)
-        store.put(_shard_name(i), data.tobytes(), mode=write_mode)
+        # Generate + stream in bounded slabs so TeraGen itself stays
+        # out-of-core friendly at dataset >> RAM-budget sizes.
+        slab = max(1, (8 * MB) // RECORD)
+
+        def chunks():
+            left = per
+            while left:
+                n = min(slab, left)
+                left -= n
+                yield rng.integers(0, 256, size=(n, RECORD), dtype=np.uint8).tobytes()
+
+        store.put_stream(_shard_name(i), chunks(), mode=write_mode)
 
     if workers > 1:
         with ThreadPoolExecutor(max_workers=workers) as ex:
@@ -95,15 +108,16 @@ def teragen(
     return time.perf_counter() - t0
 
 
-def _read_shard(store: TwoLevelStore, i: int, read_mode: ReadMode | None) -> np.ndarray:
-    """Stream one shard through the buffered reader into a records array."""
-    nbytes = store.file_size(_shard_name(i))
-    out = np.empty(nbytes, dtype=np.uint8)
-    pos = 0
-    for chunk in store.get_buffered(_shard_name(i), mode=read_mode):
-        out[pos : pos + len(chunk)] = np.frombuffer(chunk, dtype=np.uint8)
-        pos += len(chunk)
-    return out.reshape(-1, RECORD)
+def _spill_mode_for(write_mode: WriteMode | None) -> WriteMode:
+    """Spills follow the storage organization under test.
+
+    Memory-only and PFS-bypass runs must keep their single-tier contract;
+    everything else spills via ASYNC_WRITEBACK so durability overlaps the
+    next batch's sort (Fig. 4 write modes, DESIGN.md §9).
+    """
+    if write_mode in (WriteMode.MEMORY_ONLY, WriteMode.PFS_BYPASS):
+        return write_mode
+    return WriteMode.ASYNC_WRITEBACK
 
 
 def terasort(
@@ -114,51 +128,27 @@ def terasort(
     write_mode: WriteMode | None = None,
     label: str = "tls",
     workers: int = 1,
+    memory_budget_bytes: int = 32 * MB,
 ) -> TeraSortTimings:
-    # --- map phase: read-once + partition by sampled splitters ------------
+    """External-sort TeraSort: bounded-memory spill + merge on the store."""
+    cfg = ShuffleConfig(
+        n_reducers=n_reducers,
+        record_bytes=RECORD,
+        key_bytes=KEY,
+        memory_budget_bytes=memory_budget_bytes,
+        workers=workers,
+        spill_mode=_spill_mode_for(write_mode),
+        output_mode=write_mode,
+        read_mode=read_mode,
+        prefix="terasort/shuffle",
+    )
+    engine = ShuffleEngine(store, cfg)
+    stats: ShuffleStats = engine.run(
+        [_shard_name(i) for i in range(n_shards)], _out_name
+    )
+
     t0 = time.perf_counter()
-    if workers > 1:
-        with ThreadPoolExecutor(max_workers=workers) as ex:
-            shards = list(ex.map(lambda i: _read_shard(store, i, read_mode), range(n_shards)))
-    else:
-        shards = [_read_shard(store, i, read_mode) for i in range(n_shards)]
-    # sample splitters from the first shard (Hadoop samples input splits)
-    sample = shards[0][:: max(1, len(shards[0]) // 1024)]
-    sample_keys = _record_keys(sample)
-    splitters = np.quantile(sample_keys, np.linspace(0, 1, n_reducers + 1)[1:-1]).astype(np.uint64)
-    map_s = time.perf_counter() - t0
-
-    # --- shuffle: route records to reducers in one argsort-split ----------
-    t0 = time.perf_counter()
-    records = np.concatenate(shards) if len(shards) > 1 else shards[0]
-    dest = np.searchsorted(splitters, _record_keys(records), side="right")
-    order = np.argsort(dest, kind="stable")
-    routed = records[order]
-    counts = np.bincount(dest, minlength=n_reducers)
-    bounds = np.cumsum(counts)[:-1]
-    partitions = np.split(routed, bounds)
-    shuffle_s = time.perf_counter() - t0
-
-    # --- reduce: sort partitions + write-once, reducers in parallel --------
-    t0 = time.perf_counter()
-
-    def reduce_one(r: int) -> int:
-        part = partitions[r]
-        if len(part):
-            part = part[np.argsort(_record_keys(part), kind="stable")]
-        store.put(_out_name(r), part.tobytes(), mode=write_mode)
-        return len(part)
-
-    if workers > 1:
-        with ThreadPoolExecutor(max_workers=workers) as ex:
-            n_total = sum(ex.map(reduce_one, range(n_reducers)))
-    else:
-        n_total = sum(reduce_one(r) for r in range(n_reducers))
-    reduce_s = time.perf_counter() - t0
-
-    # --- validate -----------------------------------------------------------
-    t0 = time.perf_counter()
-    ok = teravalidate(store, n_reducers)
+    ok = teravalidate(store, n_reducers, read_mode=read_mode)
     validate_s = time.perf_counter() - t0
     if not ok:
         raise AssertionError("terasort output is not globally ordered")
@@ -166,28 +156,47 @@ def terasort(
     return TeraSortTimings(
         label=label,
         gen_s=0.0,
-        map_s=map_s,
-        shuffle_s=shuffle_s,
-        reduce_s=reduce_s,
+        map_s=stats.spill_s,
+        shuffle_s=stats.sample_s,
+        reduce_s=stats.merge_s,
         validate_s=validate_s,
-        records=n_total,
+        records=stats.records_out,
         mem_hit_rate=store.stats.hit_rate(),
+        spill_files=stats.spill_files,
+        spill_bytes=stats.spill_bytes,
+        merge_runs_max=stats.runs_merged_max,
+        peak_buffer_bytes=stats.peak_buffer_bytes,
+        shuffle_mbps=stats.aggregate_mbps(),
     )
 
 
-def teravalidate(store: TwoLevelStore, n_reducers: int) -> bool:
-    """Global order: within-partition sorted AND partition maxima ordered."""
-    prev_max: np.uint64 | None = None
+def teravalidate(
+    store: TwoLevelStore, n_reducers: int, read_mode: ReadMode | None = None
+) -> bool:
+    """Global order: within-partition sorted AND partitions ordered.
+
+    Streams each output shard through ``get_buffered`` — O(chunk) memory,
+    so validation works at dataset >> memory-tier sizes too.
+    """
+    prev_max: int | None = None
     for r in range(n_reducers):
-        raw = store.get(_out_name(r))
-        if not raw:
+        if not store.exists(_out_name(r)):
             continue
-        part = np.frombuffer(raw, dtype=np.uint8).reshape(-1, RECORD)
-        keys = _record_keys(part)
-        if len(keys) > 1 and (np.diff(keys.astype(np.int64)) < 0).any():
-            return False
-        if prev_max is not None and len(keys) and keys[0] < prev_max:
-            return False
-        if len(keys):
-            prev_max = keys[-1]
+        carry = bytearray()
+        for chunk in store.get_buffered(_out_name(r), mode=read_mode):
+            carry += chunk
+            whole = (len(carry) // RECORD) * RECORD
+            if not whole:
+                continue
+            part = np.frombuffer(bytes(carry[:whole]), dtype=np.uint8).reshape(-1, RECORD)
+            del carry[:whole]
+            keys = _record_keys(part)
+            if len(keys) > 1 and (np.diff(keys.astype(np.int64)) < 0).any():
+                return False
+            if prev_max is not None and len(keys) and int(keys[0]) < prev_max:
+                return False
+            if len(keys):
+                prev_max = int(keys[-1])
+        if carry:
+            return False  # trailing partial record
     return True

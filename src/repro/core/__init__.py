@@ -12,7 +12,14 @@ Public surface:
 
 from repro.core.cluster import ClusterSpec, paper_average_cluster, palmetto_cluster, tpu_v5e_pod
 from repro.core.layout import BlockLayout, StripeLayout, TwoLevelLayout, paper_layout
-from repro.core.store import EvictionPolicy, FlushError, ReadMode, TwoLevelStore, WriteMode
+from repro.core.store import (
+    AppendHandle,
+    EvictionPolicy,
+    FlushError,
+    ReadMode,
+    TwoLevelStore,
+    WriteMode,
+)
 from repro.core.tiers import (
     BlockNotFound,
     CapacityExceeded,
@@ -23,6 +30,7 @@ from repro.core.tiers import (
 )
 
 __all__ = [
+    "AppendHandle",
     "BlockLayout",
     "BlockNotFound",
     "CapacityExceeded",

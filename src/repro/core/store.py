@@ -50,6 +50,16 @@ Ranged and batched I/O (DESIGN.md §6) — the training-plane surface:
   small files (checkpoint chunks) enjoy the same pipelining one large
   file gets.  File locks are taken in sorted-name order (no deadlocks
   between concurrent batch calls).
+
+Appendable spill handles (DESIGN.md §9) — the shuffle-engine surface:
+
+* ``open_append(name)`` returns an :class:`AppendHandle` whose
+  ``append_chunk`` re-blocks arbitrary-size chunks into ``block_bytes``
+  blocks, dispatching each block onto the shared pool the moment it
+  fills — earlier blocks are **never** read back or rewritten (no
+  read-modify-write), only the in-handle partial tail waits in RAM.
+  Re-opening an existing file resumes at its end: at most the old
+  partial tail block is fetched once; all earlier blocks stay put.
 """
 
 from __future__ import annotations
@@ -171,6 +181,129 @@ class _RWLock:
         with self._cond:
             self._writer = False
             self._cond.notify_all()
+
+
+class AppendHandle:
+    """Appendable write handle: re-blocks chunk appends, no read-modify-write.
+
+    Obtained from :meth:`TwoLevelStore.open_append`.  Chunks accumulate in
+    an in-handle tail buffer; every time the buffer crosses ``block_bytes``
+    a full block enters the store's write path (pool-fanned, per the write
+    mode's contract) and is *done* — closing the handle writes only the
+    final partial tail and registers the file's metadata.  Earlier blocks
+    are never touched again, which is what makes this the right primitive
+    for streaming spill runs and merge output: O(block) memory per open
+    handle regardless of how much has been appended.
+
+    Opening an existing file resumes appending at its end.  Only the old
+    partial tail block (if any) is read — once — into the buffer so it can
+    be completed and rewritten in place when it fills; full blocks of the
+    existing file are never re-read.
+
+    The file's write lock is held for the handle's lifetime (readers of
+    this file block until ``close``); a handle is single-threaded, but
+    different handles on different files append fully in parallel.  Use as
+    a context manager to guarantee release.
+    """
+
+    def __init__(self, store: "TwoLevelStore", name: str, mode: WriteMode) -> None:
+        self._store = store
+        self.name = name
+        self.mode = mode
+        self._futures: list = []
+        self._buf = bytearray()
+        self._closed = False
+        self._flock = store._acquire_file(name, write=True)
+        try:
+            try:
+                # Known or cold file: metadata from the table, or registered
+                # from the stripe manifests without data movement (the write
+                # lock held here is stronger than the read lock the helper
+                # documents).
+                old = store._file_meta_or_cold(name)
+            except BlockNotFound:
+                old = None  # brand-new file
+            bb = store.layout.block_size
+            if old is None or old.n_blocks == 0:
+                self._idx = 0
+                self._total = 0
+            else:
+                tail_len = old.size - (old.n_blocks - 1) * bb
+                if 0 < tail_len < bb:
+                    # Resume mid-block: fetch just the partial tail once.
+                    self._buf += store._read_block(name, old.n_blocks - 1, ReadMode.TIERED)
+                    self._idx = old.n_blocks - 1
+                    self._total = old.size - tail_len
+                else:
+                    self._idx = old.n_blocks
+                    self._total = old.size
+        except BaseException:
+            self._flock.release_write()
+            raise
+
+    @property
+    def size(self) -> int:
+        """Bytes in the file so far (committed blocks + buffered tail)."""
+        return self._total + len(self._buf)
+
+    def append_chunk(self, chunk) -> int:
+        """Append one bytes-like chunk; returns the file size so far.
+
+        Full blocks are dispatched immediately (concurrent, per the write
+        mode); at most ``block_bytes`` of tail stays buffered in the handle.
+        """
+        if self._closed:
+            raise RuntimeError(f"append handle for {self.name!r} is closed")
+        store = self._store
+        self._buf += memoryview(chunk)
+        bb = store.layout.block_size
+        while len(self._buf) >= bb:
+            store._put_block(
+                store._bkey(self.name, self._idx), bytes(self._buf[:bb]), self.mode, self._futures
+            )
+            del self._buf[:bb]
+            self._idx += 1
+            self._total += bb
+            # Reap settled transfers so a long append doesn't hoard futures
+            # (they complete roughly in dispatch order).
+            while len(self._futures) > 2 * store.io_workers and self._futures[0].done():
+                self._futures.pop(0).result()
+        return self.size
+
+    def close(self) -> int:
+        """Flush the tail, publish file metadata, release the file lock.
+
+        Returns the final file size.  Idempotent.
+        """
+        if self._closed:
+            return self._total
+        store = self._store
+        try:
+            if self._buf:
+                store._put_block(
+                    store._bkey(self.name, self._idx), bytes(self._buf), self.mode, self._futures
+                )
+                self._total += len(self._buf)
+                self._idx += 1
+                self._buf.clear()
+            with store._meta:
+                old = store._files.get(self.name)
+                store._files[self.name] = _FileMeta(size=self._total, n_blocks=self._idx)
+            store._trim_tail(self.name, self._idx, old.n_blocks if old else 0)
+            for f in self._futures:
+                f.result()
+            return self._total
+        finally:
+            self._closed = True
+            store._settle(self._futures)
+            self._futures.clear()
+            self._flock.release_write()
+
+    def __enter__(self) -> "AppendHandle":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
 
 class TwoLevelStore:
@@ -465,6 +598,18 @@ class TwoLevelStore:
             self._settle(futures)
             flock.release_write()
 
+    def open_append(self, name: str, mode: WriteMode | None = None) -> AppendHandle:
+        """Open an appendable handle on ``name`` (created if absent).
+
+        See :class:`AppendHandle`: chunk appends are re-blocked to
+        ``block_bytes`` without read-modify-write of earlier blocks — the
+        primitive spill runs and streaming merge output are built on.
+        """
+        mode = mode or self.write_mode
+        if self._closed:
+            raise RuntimeError("store is closed")
+        return AppendHandle(self, name, mode)
+
     def put_many(self, items, mode: WriteMode | None = None) -> None:
         """Write many unrelated files in one batched, pool-fanned call.
 
@@ -524,14 +669,35 @@ class TwoLevelStore:
         elif mode is WriteMode.WRITE_THROUGH:
             # Paper mode (c): dual write — memory insert now, PFS in flight.
             meta = _BlockMeta(key=bkey, length=len(chunk), crc=0)
-            self._cache_block(meta, chunk)
+            try:
+                self._cache_block(meta, chunk)
+            except CapacityExceeded:
+                # Oversubscribed memory tier (all victims claimed by
+                # concurrent evictions, or block larger than capacity):
+                # the PFS copy below is the durable one — serve this block
+                # cold rather than failing the write.
+                with self._block_lock(bkey):
+                    self.mem.delete(bkey)
             with self._meta:
                 self._blocks[bkey] = meta
             futures.append(self._pool.submit(self._pfs_put, bkey, chunk, meta))
         elif mode is WriteMode.ASYNC_WRITEBACK:
             meta = _BlockMeta(key=bkey, length=len(chunk), crc=crc32_chunked(chunk))
             meta.dirty = True
-            self._cache_block(meta, chunk)
+            try:
+                self._cache_block(meta, chunk)
+            except CapacityExceeded:
+                # No memory copy to flush from later — degrade this block
+                # to a pooled write-through (durability preserved; the
+                # write-back optimization is best-effort by design).
+                meta.dirty = False
+                with self._block_lock(bkey):
+                    self.mem.delete(bkey)
+                with self._meta:
+                    self._blocks[bkey] = meta
+                    self._dirty.discard(bkey)
+                futures.append(self._pool.submit(self._pfs_put, bkey, chunk, meta))
+                return
             with self._meta:
                 self._blocks[bkey] = meta
                 if bkey in self._dirty:

@@ -24,7 +24,13 @@ class SimulatedFailure(RuntimeError):
 
 
 class FailureInjector:
-    """Deterministically injects failures at configured steps (once each)."""
+    """Deterministically injects failures at configured steps (once each).
+
+    Thread-safe: ``maybe_fail`` may race between the training loop and
+    watcher threads (heartbeat stall handlers re-checking the same step);
+    claim-and-record happens under a lock so one configured step can
+    never inject twice.
+    """
 
     def __init__(self, fail_at_steps: dict[int, str] | list[int] | None = None) -> None:
         if fail_at_steps is None:
@@ -32,14 +38,17 @@ class FailureInjector:
         if isinstance(fail_at_steps, list):
             fail_at_steps = {s: "host-loss" for s in fail_at_steps}
         self._pending = dict(fail_at_steps)
+        self._lock = threading.Lock()
         self.injected: list[SimulatedFailure] = []
 
     def maybe_fail(self, step: int) -> None:
-        kind = self._pending.pop(step, None)
-        if kind is not None:
+        with self._lock:
+            kind = self._pending.pop(step, None)
+            if kind is None:
+                return
             failure = SimulatedFailure(step, kind)
             self.injected.append(failure)
-            raise failure
+        raise failure
 
 
 class Heartbeat:

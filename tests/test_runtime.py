@@ -25,6 +25,34 @@ class TestFailureInjector:
         with pytest.raises(SimulatedFailure, match="pod-loss"):
             inj.maybe_fail(2)
 
+    def test_thread_safe_single_injection(self):
+        """Heartbeat thread and train loop racing one step inject once.
+
+        The seed popped ``_pending`` without a lock, so two threads could
+        both observe the step pending and double-inject.
+        """
+        import threading
+
+        for _ in range(50):  # race-amplifying repetition
+            inj = FailureInjector([7])
+            raised = []
+            barrier = threading.Barrier(4)
+
+            def hammer():
+                barrier.wait()
+                try:
+                    inj.maybe_fail(7)
+                except SimulatedFailure as e:
+                    raised.append(e)
+
+            ts = [threading.Thread(target=hammer) for _ in range(4)]
+            for t in ts:
+                t.start()
+            for t in ts:
+                t.join(timeout=10)
+            assert len(raised) == 1, "one configured step injected more than once"
+            assert len(inj.injected) == 1
+
 
 class TestHeartbeat:
     def test_stall_detected(self):

@@ -1,0 +1,258 @@
+"""Out-of-core shuffle engine: spill/merge correctness, memory bounds,
+spill cleanup, and the workloads built on it (DESIGN.md §9)."""
+
+import numpy as np
+import pytest
+
+from repro.apps.groupby import (
+    AGG_RECORD,
+    groupby_sum,
+    groupgen,
+    read_aggregates,
+)
+from repro.apps.groupby import RECORD as GREC
+from repro.apps.groupby import _shard_name as _gshard
+from repro.apps.shuffle import ShuffleConfig, ShuffleEngine, fold_keys
+from repro.apps.terasort import KEY, RECORD, teragen, terasort, teravalidate
+from repro.core import ReadMode, TwoLevelStore, WriteMode
+
+MB = 2**20
+KB = 1024
+
+
+def make(tmp_path, **kw):
+    kw.setdefault("mem_capacity_bytes", 1 * MB)
+    kw.setdefault("block_bytes", 256 * KB)
+    kw.setdefault("stripe_bytes", 64 * KB)
+    kw.setdefault("n_pfs_servers", 2)
+    return TwoLevelStore(str(tmp_path / "pfs"), **kw)
+
+
+def put_records(store, name, records):
+    store.put(name, records.tobytes())
+
+
+def engine(store, n_reducers=4, budget=256 * KB, workers=1, **kw):
+    cfg = ShuffleConfig(
+        n_reducers=n_reducers,
+        record_bytes=RECORD,
+        key_bytes=KEY,
+        memory_budget_bytes=budget,
+        workers=workers,
+        **kw,
+    )
+    return ShuffleEngine(store, cfg)
+
+
+def sorted_expected(parts):
+    exp = np.concatenate(parts)
+    return exp[np.argsort(fold_keys(exp, KEY), kind="stable")]
+
+
+def read_outputs(store, n_reducers, name=lambda r: f"out/{r}"):
+    raw = b"".join(store.get(name(r)) for r in range(n_reducers))
+    return np.frombuffer(raw, dtype=np.uint8).reshape(-1, RECORD)
+
+
+class TestEngineCorrectness:
+    def test_multiset_and_global_order(self, tmp_path):
+        rng = np.random.default_rng(0)
+        with make(tmp_path) as st:
+            parts = []
+            for i in range(3):
+                recs = rng.integers(0, 256, size=(4000, RECORD), dtype=np.uint8)
+                parts.append(recs)
+                put_records(st, f"in/{i}", recs)
+            eng = engine(st, budget=128 * KB)
+            stats = eng.run([f"in/{i}" for i in range(3)], lambda r: f"out/{r}")
+            got = read_outputs(st, 4)
+            exp = sorted_expected(parts)
+            assert stats.records_in == stats.records_out == 12000
+            assert (fold_keys(got, KEY) == fold_keys(exp, KEY)).all()
+            # full-record multiset equality, not just keys
+            assert (
+                got[np.lexsort(got.T[::-1])] == exp[np.lexsort(exp.T[::-1])]
+            ).all()
+            assert stats.spill_batches > 1  # actually exercised the spill path
+
+    def test_adversarial_run_skew(self, tmp_path):
+        """One run holds ~90% of the records; merge must stay correct."""
+        rng = np.random.default_rng(1)
+        with make(tmp_path) as st:
+            # Shard 0: 9000 records. Shard 1: 1000 records. A large budget
+            # makes each shard exactly one spill batch -> for every reducer,
+            # one run carries ~90% of its records.
+            big = rng.integers(0, 256, size=(9000, RECORD), dtype=np.uint8)
+            small = rng.integers(0, 256, size=(1000, RECORD), dtype=np.uint8)
+            put_records(st, "in/0", big)
+            put_records(st, "in/1", small)
+            eng = engine(st, budget=4 * MB, workers=1)
+            stats = eng.run(["in/0", "in/1"], lambda r: f"out/{r}")
+            assert stats.spill_batches == 2
+            got = read_outputs(st, 4)
+            exp = sorted_expected([big, small])
+            assert (fold_keys(got, KEY) == fold_keys(exp, KEY)).all()
+            assert (
+                got[np.lexsort(got.T[::-1])] == exp[np.lexsort(exp.T[::-1])]
+            ).all()
+
+    def test_duplicate_keys_survive(self, tmp_path):
+        """Heavy key duplication (ties at every merge bound) stays lossless."""
+        rng = np.random.default_rng(2)
+        with make(tmp_path) as st:
+            recs = rng.integers(0, 256, size=(6000, RECORD), dtype=np.uint8)
+            recs[:, :KEY] = recs[:, :KEY] % 3  # 3^10 >> collisions everywhere
+            put_records(st, "in/0", recs)
+            eng = engine(st, n_reducers=2, budget=128 * KB)
+            stats = eng.run(["in/0"], lambda r: f"out/{r}")
+            got = read_outputs(st, 2)
+            assert stats.records_out == 6000
+            assert (
+                got[np.lexsort(got.T[::-1])]
+                == recs[np.lexsort(recs.T[::-1])]
+            ).all()
+
+    def test_empty_reducer_and_empty_shard(self, tmp_path):
+        rng = np.random.default_rng(3)
+        with make(tmp_path) as st:
+            # all keys = 0 -> every record lands in reducer 0
+            recs = rng.integers(0, 256, size=(500, RECORD), dtype=np.uint8)
+            recs[:, :KEY] = 0
+            put_records(st, "in/0", recs)
+            st.put("in/1", b"")  # empty shard
+            eng = engine(st, n_reducers=3, budget=64 * KB)
+            stats = eng.run(["in/0", "in/1"], lambda r: f"out/{r}")
+            assert stats.records_out == 500
+            sizes = [st.file_size(f"out/{r}") for r in range(3)]
+            # identical keys collapse the splitters: one reducer gets all
+            # 500 records, the other two exist but are empty
+            assert sorted(sizes) == [0, 0, 500 * RECORD]
+            assert len(read_outputs(st, 3)) == 500
+
+
+class TestMemoryBoundsAndCleanup:
+    def test_spill_files_cleaned_after_reducers(self, tmp_path):
+        rng = np.random.default_rng(4)
+        with make(tmp_path) as st:
+            put_records(st, "in/0", rng.integers(0, 256, size=(8000, RECORD), dtype=np.uint8))
+            eng = engine(st, budget=128 * KB)
+            stats = eng.run(["in/0"], lambda r: f"out/{r}")
+            assert stats.spill_files > 0
+            assert stats.spills_deleted == stats.spill_files
+            assert not [f for f in st.list_files() if "/spill/" in f]
+
+    def test_cleanup_off_keeps_runs(self, tmp_path):
+        rng = np.random.default_rng(5)
+        with make(tmp_path) as st:
+            put_records(st, "in/0", rng.integers(0, 256, size=(4000, RECORD), dtype=np.uint8))
+            eng = engine(st, budget=128 * KB, cleanup_spills=False)
+            stats = eng.run(["in/0"], lambda r: f"out/{r}")
+            left = [f for f in st.list_files() if "/spill/" in f]
+            assert len(left) == stats.spill_files > 0
+
+    def test_peak_buffers_bounded_by_budget(self, tmp_path):
+        rng = np.random.default_rng(6)
+        with make(tmp_path) as st:
+            for i in range(2):
+                put_records(st, f"in/{i}", rng.integers(0, 256, size=(8000, RECORD), dtype=np.uint8))
+            budget = 256 * KB
+            eng = engine(st, budget=budget, workers=2)
+            stats = eng.run(["in/0", "in/1"], lambda r: f"out/{r}")
+            assert 0 < stats.peak_buffer_bytes <= 2 * budget
+
+
+class TestTeraSortOutOfCore:
+    def test_validates_beyond_memory_tier_capacity(self, tmp_path):
+        """The acceptance property at test scale: dataset ≥ 8× the memory
+        tier, bounded engine buffers, TeraValidate green."""
+        mem = 512 * KB
+        budget = 512 * KB
+        n_records = 45_000  # 4.3 MB ≈ 8.6× the memory tier
+        with make(tmp_path, mem_capacity_bytes=mem, block_bytes=128 * KB) as st:
+            teragen(st, n_records, n_shards=4, seed=7)
+            t = terasort(st, n_shards=4, n_reducers=4, memory_budget_bytes=budget)
+            assert n_records * RECORD >= 8 * mem
+            assert t.records == (n_records // 4) * 4
+            assert t.spill_files > 4  # genuinely external
+            assert t.peak_buffer_bytes <= 2 * budget
+            assert teravalidate(st, 4)
+
+    def test_detects_disorder(self, tmp_path):
+        with make(tmp_path) as st:
+            bad = np.zeros((10, RECORD), dtype=np.uint8)
+            # low key byte: descending and inside the 63-bit fold's range
+            # (the topmost key byte folds to zero mod 2^63)
+            bad[:, KEY - 1] = np.arange(10, 0, -1, dtype=np.uint8)
+            st.put("terasort/out_0000", bad.tobytes())
+            assert not teravalidate(st, 1)
+
+    def test_write_modes_follow_storage_org(self, tmp_path):
+        """MEMORY_ONLY jobs must not leak spills to the PFS tier."""
+        with make(tmp_path, mem_capacity_bytes=32 * MB) as st:
+            teragen(st, 8_000, n_shards=2, write_mode=WriteMode.MEMORY_ONLY)
+            terasort(
+                st,
+                n_shards=2,
+                n_reducers=2,
+                read_mode=ReadMode.MEMORY_ONLY,
+                write_mode=WriteMode.MEMORY_ONLY,
+                memory_budget_bytes=1 * MB,
+            )
+            assert not st.pfs.keys()  # nothing — spills included — hit PFS
+
+
+class TestGroupBy:
+    def test_aggregates_match_recomputation(self, tmp_path):
+        with make(tmp_path, mem_capacity_bytes=2 * MB) as st:
+            groupgen(st, 20_000, n_groups=300, n_shards=4, seed=11)
+            res = groupby_sum(st, n_shards=4, n_reducers=4, memory_budget_bytes=256 * KB)
+            aggs = read_aggregates(st, 4)
+            be = 256 ** np.arange(7, -1, -1, dtype=np.uint64)
+            exp: dict[int, tuple[int, int]] = {}
+            for i in range(4):
+                raw = np.frombuffer(st.get(_gshard(i)), dtype=np.uint8).reshape(-1, GREC)
+                keys = raw[:, :8].astype(np.uint64) @ be
+                vals = raw[:, 8:16].astype(np.uint64) @ be
+                for k, v in zip(keys, vals):
+                    s, c = exp.get(int(k), (0, 0))
+                    exp[int(k)] = (s + int(v), c + 1)
+            assert aggs == exp
+            assert res.groups == len(exp) == 300
+            assert res.stats.output_bytes == len(exp) * AGG_RECORD
+            # groups are disjoint across reducers (read_aggregates raises on
+            # split groups) and spills are gone
+            assert not [f for f in st.list_files() if "/spill/" in f]
+
+    def test_group_spanning_batches(self, tmp_path):
+        """A single giant group must survive batch-boundary carry logic."""
+        with make(tmp_path, mem_capacity_bytes=4 * MB) as st:
+            groupgen(st, 6_000, n_groups=1, n_shards=2, seed=13)
+            groupby_sum(st, n_shards=2, n_reducers=2, memory_budget_bytes=64 * KB)
+            aggs = read_aggregates(st, 2)
+            assert len(aggs) == 1
+            (_, (s, c)), = aggs.items()
+            assert c == 6_000 and s > 0
+
+
+class TestSplitterQuality:
+    def test_balanced_partitions_on_uniform_keys(self, tmp_path):
+        rng = np.random.default_rng(17)
+        with make(tmp_path) as st:
+            put_records(st, "in/0", rng.integers(0, 256, size=(12_000, RECORD), dtype=np.uint8))
+            eng = engine(st, n_reducers=4, budget=1 * MB)
+            eng.run(["in/0"], lambda r: f"out/{r}")
+            sizes = [st.file_size(f"out/{r}") for r in range(4)]
+            assert sum(sizes) == 12_000 * RECORD
+            # sampled splitters keep the largest partition within 2x of fair
+            assert max(sizes) < 2 * (sum(sizes) / 4)
+
+
+@pytest.mark.parametrize("bad_cfg", [
+    dict(n_reducers=0, record_bytes=RECORD, key_bytes=KEY),
+    dict(n_reducers=2, record_bytes=RECORD, key_bytes=0),
+    dict(n_reducers=2, record_bytes=8, key_bytes=9),
+])
+def test_config_validation(tmp_path, bad_cfg):
+    with make(tmp_path) as st:
+        with pytest.raises(ValueError):
+            ShuffleEngine(st, ShuffleConfig(**bad_cfg))
