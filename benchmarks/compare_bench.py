@@ -51,6 +51,12 @@ GATED: dict[str, str] = {
     "terascale.validate_ok": "higher",
     "terascale.peak_buffer_x_budget": "lower",
     "terascale.spill_files_left": "lower",
+    # adaptive I/O control plane: working-set retention under a scan storm
+    # and the binary Eq. 7 curve-tracking verdict (the raw 1.3x aggregate
+    # speedup is hard-asserted in mixed_scaling's own CI step, like the
+    # other wall-clock gates)
+    "mixed.hot_retained_adaptive": "higher",
+    "mixed.model_within_tol": "higher",
 }
 
 

@@ -35,6 +35,7 @@ def main() -> None:
         fig5_crossover,
         fig6_mountain,
         fig7_terasort,
+        mixed_scaling,
         parallel_scaling,
         roofline,
         serve_scaling,
@@ -51,6 +52,7 @@ def main() -> None:
         ("sscale", serve_scaling),
         ("tscale", train_io_scaling),
         ("terascale", terasort_scaling),
+        ("mixed", mixed_scaling),
         ("roofline", roofline),
     ]
     if args.only:

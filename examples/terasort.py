@@ -10,7 +10,7 @@ import os
 import tempfile
 
 from repro.apps.terasort import teragen, terasort
-from repro.core import ReadMode, TwoLevelStore, WriteMode
+from repro.core import IOController, ReadMode, TwoLevelStore, WriteMode
 
 MB = 2**20
 
@@ -33,13 +33,16 @@ def main() -> None:
     print(f"{'storage':28s} {'gen(s)':>8s} {'map(s)':>8s} {'reduce(s)':>10s} "
           f"{'hit rate':>9s} {'spills':>7s}")
     results = {}
+    reports = {}
     for label, (wgen, rmap, wred) in MODES.items():
         with tempfile.TemporaryDirectory() as d:
+            ctl = IOController()  # adaptive control plane (DESIGN.md §10)
             with TwoLevelStore(
                 os.path.join(d, "pfs"),
                 mem_capacity_bytes=256 * MB,
                 block_bytes=4 * MB,
                 stripe_bytes=1 * MB,
+                controller=ctl,
             ) as st:
                 gen_s = teragen(st, args.records, n_shards=4, write_mode=wgen)
                 t = terasort(
@@ -52,6 +55,7 @@ def main() -> None:
                     memory_budget_bytes=args.budget_mb * MB,
                 )
                 results[label] = t
+                reports[label] = ctl.report()
                 print(f"{label:28s} {gen_s:8.3f} {t.map_s:8.3f} {t.reduce_s:10.3f} "
                       f"{t.mem_hit_rate:9.2f} {t.spill_files:7d}")
 
@@ -63,6 +67,20 @@ def main() -> None:
           f"peak buffers {tls.peak_buffer_bytes / MB:.1f} MiB, "
           f"{tls.shuffle_mbps:.1f} MB/s aggregate shuffle")
     print("output validated: globally ordered ✓")
+
+    rep = reports["two-level (tiered)"]
+    print("\nadaptive I/O controller (two-level run):")
+    print(f"  admission: {rep['admits']} promoted / {rep['bypasses']} bypassed "
+          f"(scan-class runs ghost-gated), {rep['flush_drops']} spill blocks flush-dropped")
+    print(f"  readahead depths: {rep['readahead']}"
+          + (f"; trajectory {[(c, dep) for _, c, dep in rep['readahead_trajectory'][-6:]]}"
+             if rep['readahead_trajectory'] else ""))
+    print(f"  flush lanes now {rep['flush_lanes']}"
+          + (f", trajectory {[n for _, n in rep['lane_trajectory'][-8:]]}"
+             if rep['lane_trajectory'] else ""))
+    print(f"  model: nu={rep['nu_mbps']:.0f} q={rep['q_read_mbps']:.0f} MB/s; "
+          f"measured f={rep['measured_f']:.3f} vs target f={rep['target_f']:.3f}; "
+          f"predicted read {rep['predicted_read_mbps']:.0f} MB/s")
 
 
 if __name__ == "__main__":

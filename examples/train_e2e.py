@@ -15,7 +15,7 @@ import tempfile
 import time
 
 from repro.configs.base import ArchConfig
-from repro.core import TwoLevelStore
+from repro.core import IOController, TwoLevelStore
 from repro.launch.train import run_training
 from repro.runtime.failure import FailureInjector
 
@@ -74,7 +74,9 @@ def main() -> None:
                   f"{tokens_seen / max(dt, 1e-9):,.0f} tok/s")
 
     with tempfile.TemporaryDirectory() as d:
-        with TwoLevelStore(d + "/pfs", mem_capacity_bytes=512 * 2**20, block_bytes=4 * 2**20) as store:
+        ctl = IOController()  # adaptive I/O control plane (DESIGN.md §10)
+        with TwoLevelStore(d + "/pfs", mem_capacity_bytes=512 * 2**20, block_bytes=4 * 2**20,
+                           controller=ctl) as store:
             res = run_training(
                 cfg,
                 store,
@@ -116,6 +118,27 @@ def main() -> None:
                   f"({ss['mem_hits']/max(mem_total,1):.1%}); "
                   f"{ss['range_reads']} ranged reads, "
                   f"{ss['range_bytes']/2**20:.1f} MiB ranged")
+
+            rep = ctl.report()
+            print("\nadaptive I/O controller (online Eq. 1-7 model):")
+            print(f"  tier rates (EWMA):  nu={rep['nu_mbps']:.0f} MB/s mem, "
+                  f"q_read={rep['q_read_mbps']:.0f} / q_write={rep['q_write_mbps']:.0f} MB/s PFS")
+            print(f"  admission:          {rep['admits']} promoted, {rep['bypasses']} bypassed, "
+                  f"{rep['flush_drops']} flush-dropped "
+                  f"(per class: "
+                  + ", ".join(f"{c}={cs['admits']}/{cs['bypasses']}"
+                              for c, cs in rep['classes'].items()) + ")")
+            traj = rep['readahead_trajectory']
+            depths = {c: d for c, d in rep['readahead'].items()}
+            print(f"  readahead depths:   {depths}"
+                  + (f"; trajectory {[(c, dep) for _, c, dep in traj[-6:]]}" if traj else ""))
+            print(f"  flush lanes:        {rep['flush_lanes']} now"
+                  + (f"; trajectory {[n for _, n in rep['lane_trajectory'][-8:]]}"
+                     if rep['lane_trajectory'] else ""))
+            print(f"  in-memory fraction: measured f={rep['measured_f']:.3f} vs "
+                  f"plan target f={rep['target_f']:.3f} "
+                  f"(Eq. 7 demand needs f>={rep['f_required_for_demand']:.3f}; "
+                  f"predicted read {rep['predicted_read_mbps']:.0f} MB/s)")
 
 
 if __name__ == "__main__":

@@ -57,6 +57,7 @@ from typing import Callable, Iterator
 
 import numpy as np
 
+from repro.core.sched import StreamClass
 from repro.core.store import ReadMode, TwoLevelStore, WriteMode
 
 MB = 2**20
@@ -86,7 +87,10 @@ class ShuffleConfig:
     spill_mode: WriteMode = WriteMode.ASYNC_WRITEBACK
     output_mode: WriteMode | None = None  # None = store default
     read_mode: ReadMode | None = None  # None = store default
-    merge_readahead_blocks: int = 1  # per-run PFS readahead while merging
+    # Per-run PFS readahead while merging: None defers to the store (its
+    # static default, or the adaptive controller's per-stream depth when
+    # one is attached); an int pins it.
+    merge_readahead_blocks: int | None = 1
     sample_records: int = 2048  # splitter sample size per input shard
     prefix: str = "shuffle"  # spill namespace inside the store
     cleanup_spills: bool = True
@@ -214,6 +218,11 @@ class ShuffleEngine:
         self._lock = threading.Lock()
         # reducer -> [(run file name, byte length)] — each a key-sorted run
         self._runs: dict[int, list[tuple[str, int]]] = {r: [] for r in range(cfg.n_reducers)}
+        # Stream intent for the adaptive controller: spill runs are written
+        # once and read exactly once by their reducer — ghost-gated
+        # admission + deep sequential readahead, and flushed spill blocks
+        # may be dropped from the memory tier under contention.
+        store.hint_stream(cfg.prefix + "/spill/", StreamClass.SEQ_ONCE)
 
     # ------------------------------------------------------------- phases
 
@@ -224,6 +233,22 @@ class ShuffleEngine:
         ``out_name(r)`` names reducer ``r``'s output file; ``reducer``
         optionally transforms each reducer's sorted stream (group-by).
         """
+        cfg = self.cfg
+        for name in inputs:
+            # Mapper input shards are one sequential scan each — they must
+            # not evict anyone's re-read working set on the way through.
+            # Cleared in the finally below: the scan is over when the run
+            # ends, and per-file hints must not accumulate across jobs on a
+            # long-lived store (classify() walks the hint table).
+            self.store.hint_stream(name, StreamClass.SEQ_ONCE)
+        try:
+            return self._run_impl(inputs, out_name, reducer)
+        finally:
+            for name in inputs:
+                self.store.hint_stream(name, None)
+
+    def _run_impl(self, inputs: list[str], out_name: Callable[[int], str],
+                  reducer: Reducer | None) -> ShuffleStats:
         cfg = self.cfg
         t0 = time.perf_counter()
         splitters = self._sample_splitters(inputs)
@@ -476,6 +501,10 @@ class ShuffleEngine:
             active = [r for r in readers if not r.exhausted]
 
     def _reduce_one(self, r: int, out: str, reducer: Reducer | None) -> None:
+        # Output-stream intent is the *client's* declaration (it owns the
+        # naming and knows whether downstream re-reads) — e.g. terasort
+        # hints its output prefix SEQ_ONCE; the engine registers nothing
+        # per-file here, so hints cannot accumulate across jobs.
         cfg = self.cfg
         with self._lock:
             runs = sorted(self._runs[r])

@@ -29,6 +29,7 @@ from concurrent.futures import ThreadPoolExecutor
 import numpy as np
 
 from repro.apps.shuffle import ShuffleConfig, ShuffleEngine, ShuffleStats, fold_keys
+from repro.core.sched import StreamClass
 from repro.core.store import ReadMode, TwoLevelStore, WriteMode
 
 RECORD = 100  # bytes per record (TeraSort convention)
@@ -143,6 +144,10 @@ def terasort(
         prefix="terasort/shuffle",
     )
     engine = ShuffleEngine(store, cfg)
+    # Output shards are streamed once by the merge and scanned once by
+    # TeraValidate — declare the whole prefix read-once (one bounded hint;
+    # a genuine later re-reader still promotes via the ghost list).
+    store.hint_stream("terasort/out_", StreamClass.SEQ_ONCE)
     stats: ShuffleStats = engine.run(
         [_shard_name(i) for i in range(n_shards)], _out_name
     )

@@ -12,6 +12,7 @@ Public surface:
 
 from repro.core.cluster import ClusterSpec, paper_average_cluster, palmetto_cluster, tpu_v5e_pod
 from repro.core.layout import BlockLayout, StripeLayout, TwoLevelLayout, paper_layout
+from repro.core.sched import ControllerConfig, IOController, StreamClass
 from repro.core.store import (
     AppendHandle,
     EvictionPolicy,
@@ -35,13 +36,16 @@ __all__ = [
     "BlockNotFound",
     "CapacityExceeded",
     "ClusterSpec",
+    "ControllerConfig",
     "EvictionPolicy",
     "FlushError",
+    "IOController",
     "crc32_chunked",
     "IntegrityError",
     "MemoryTier",
     "PFSTier",
     "ReadMode",
+    "StreamClass",
     "StripeLayout",
     "TwoLevelLayout",
     "TwoLevelStore",

@@ -110,6 +110,44 @@ def tls_read(spec: ClusterSpec, f: float, n: int | None = None) -> float:
 
 
 # ---------------------------------------------------------------------------
+# Eq. 7 over *measured* rates — the online form the IOController runs on
+# ---------------------------------------------------------------------------
+
+
+def blend_read_mbps(nu: float, q: float, f: float) -> float:
+    """Eq. 7 with measured tier rates instead of a ClusterSpec calibration.
+
+    ``nu`` is the observed memory-tier read rate, ``q`` the observed PFS
+    read rate (both MB/s), ``f`` the in-memory fraction.  This is the form
+    ``core/sched.IOController`` evaluates online: the EWMA estimates stand
+    in for the paper's Table 2 constants.
+    """
+    if nu <= 0 or q <= 0:
+        raise ValueError("tier rates must be positive")
+    if not 0.0 <= f <= 1.0:
+        raise ValueError(f"f must be in [0, 1], got {f}")
+    return 1.0 / (f / nu + (1.0 - f) / q)
+
+
+def f_for_read_mbps(nu: float, q: float, target: float) -> float:
+    """Invert Eq. 7: the in-memory fraction needed to sustain ``target`` MB/s.
+
+    Clamped to [0, 1]: a target at or below the PFS rate needs no memory
+    residency; a target at or above the memory rate needs everything hot
+    (and is unreachable beyond ``nu``).  For ``nu == q`` the blend is flat,
+    so any f works — 0 is returned (cheapest).
+    """
+    if nu <= 0 or q <= 0 or target <= 0:
+        raise ValueError("rates must be positive")
+    if target <= q or nu == q:
+        return 0.0
+    if target >= nu:
+        return 1.0
+    # 1/target = f/nu + (1-f)/q  =>  f = (1/q - 1/target) / (1/q - 1/nu)
+    return (1.0 / q - 1.0 / target) / (1.0 / q - 1.0 / nu)
+
+
+# ---------------------------------------------------------------------------
 # Aggregate curves (Fig. 5) and crossover analysis (Section 4.5)
 # ---------------------------------------------------------------------------
 

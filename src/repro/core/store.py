@@ -60,6 +60,16 @@ Appendable spill handles (DESIGN.md §9) — the shuffle-engine surface:
   read-modify-write), only the in-handle partial tail waits in RAM.
   Re-opening an existing file resumes at its end: at most the old
   partial tail block is fetched once; all earlier blocks stay put.
+
+Adaptive control plane (DESIGN.md §10) — optional, off by default:
+
+* Constructed with an :class:`~repro.core.sched.IOController`, the store
+  delegates three hot-path decisions to the online Eq. 1-7 model:
+  promote-on-read admission (ghost-list scan resistance per stream
+  class), per-stream readahead depth in ``get_buffered``, and write-back
+  flush-lane concurrency.  Clients declare access patterns with
+  ``hint_stream(prefix, StreamClass)``.  Without a controller every
+  decision is the static knob — bit-for-bit the pre-controller store.
 """
 
 from __future__ import annotations
@@ -75,6 +85,7 @@ from concurrent.futures import ThreadPoolExecutor
 from typing import Iterable, Iterator
 
 from repro.core.layout import BlockLayout
+from repro.core.sched import IOController, StreamClass
 from repro.core.tiers import (
     BlockNotFound,
     CapacityExceeded,
@@ -127,6 +138,17 @@ class _BlockMeta:
     crc: int
     dirty: bool = False  # pending async write-back
     freq: int = 0  # LFU counter
+    # Memory-tier CRC is verified once per residency: the first hit checks
+    # the resident bytes against the block CRC, later hits are zero-copy
+    # with no checksum pass (the tier stores immutable bytes objects — a
+    # re-put or re-promotion installs a fresh meta, resetting this).
+    verified: bool = False
+    # True when the current residency came from a *read* promotion (tiered
+    # miss) rather than a write.  Eviction feedback uses it: for a
+    # read-once-class block only read-proven residency earns a ghost-list
+    # entry — a written-then-evicted spill block's first read is expected,
+    # not proof of reuse.
+    promoted: bool = False
 
 
 @dataclasses.dataclass
@@ -329,6 +351,7 @@ class TwoLevelStore:
         io_workers: int | None = None,
         flush_workers: int = 2,
         readahead_blocks: int = 2,
+        controller: IOController | None = None,
     ) -> None:
         self.layout = BlockLayout(block_bytes)
         self.mem = MemoryTier(mem_capacity_bytes)
@@ -380,6 +403,42 @@ class TwoLevelStore:
         for t in self._flushers:
             t.start()
         self._closed = False
+
+        # Adaptive control plane (DESIGN.md §10) — strictly optional: with
+        # no controller every decision below falls back to the static knob.
+        self.controller = controller
+        self._stream_hints: dict[str, StreamClass] = {}
+        self._hint_items: tuple[tuple[str, StreamClass], ...] = ()
+        if controller is not None:
+            try:
+                controller.bind(self)
+            except BaseException:
+                # Failed bind (e.g. controller already owned by another
+                # store): tear down the threads this half-built store
+                # started before re-raising.
+                self._closed = True
+                for _ in self._flushers:
+                    self._flush_q.put(None)
+                self._pool.shutdown(wait=False)
+                self.pfs.close()
+                raise
+
+    def hint_stream(self, prefix: str, cls: StreamClass | None) -> None:
+        """Declare the access pattern of every file under ``prefix``.
+
+        Lightweight client intent for the adaptive controller (admission /
+        readahead / flush scheduling differentiate stream classes instead
+        of guessing).  Safe to call on any store: without a controller the
+        hint is recorded and ignored.  ``None`` clears the hint.
+        """
+        with self._meta:
+            if cls is None:
+                self._stream_hints.pop(prefix, None)
+            else:
+                self._stream_hints[prefix] = cls
+            # Immutable snapshot: the controller classifies against this
+            # tuple lock-free on hot paths.
+            self._hint_items = tuple(self._stream_hints.items())
 
     # ------------------------------------------------------------------ util
 
@@ -483,8 +542,14 @@ class TwoLevelStore:
                 self._flush_now(victim, meta)
             self.mem.delete(victim)
         with self._meta:
-            self._blocks.pop(victim, None)
+            popped = self._blocks.pop(victim, None)
             self.stats.evictions += 1
+        if self.controller is not None:
+            # Ghost-list feedback: a re-read of an evicted key soon after
+            # proves reuse and re-promotes on sight.
+            self.controller.note_eviction(
+                victim, read_promoted=popped.promoted if popped else False
+            )
 
     def _cache_block(self, meta: _BlockMeta, chunk) -> None:
         """Insert a block into the memory tier, evicting until it fits."""
@@ -668,21 +733,49 @@ class TwoLevelStore:
                 self._blocks[bkey] = meta
         elif mode is WriteMode.WRITE_THROUGH:
             # Paper mode (c): dual write — memory insert now, PFS in flight.
+            # The controller may veto the memory insert (write-burst /
+            # read-once streams under capacity contention write straight
+            # to the PFS tier instead of evicting the re-read working set).
             meta = _BlockMeta(key=bkey, length=len(chunk), crc=0)
-            try:
-                self._cache_block(meta, chunk)
-            except CapacityExceeded:
-                # Oversubscribed memory tier (all victims claimed by
-                # concurrent evictions, or block larger than capacity):
-                # the PFS copy below is the durable one — serve this block
-                # cold rather than failing the write.
+            cache = self.controller is None or self.controller.cache_on_write(
+                bkey.rsplit(":", 1)[0]
+            )
+            if cache:
+                try:
+                    self._cache_block(meta, chunk)
+                except CapacityExceeded:
+                    # Oversubscribed memory tier (all victims claimed by
+                    # concurrent evictions, or block larger than capacity):
+                    # the PFS copy below is the durable one — serve this
+                    # block cold rather than failing the write.
+                    with self._block_lock(bkey):
+                        self.mem.delete(bkey)
+            else:
+                # In-place overwrite of a previously resident version must
+                # still invalidate the stale memory copy.
                 with self._block_lock(bkey):
                     self.mem.delete(bkey)
             with self._meta:
                 self._blocks[bkey] = meta
+                if not cache:
+                    self._resident.pop(bkey, None)
             futures.append(self._pool.submit(self._pfs_put, bkey, chunk, meta))
         elif mode is WriteMode.ASYNC_WRITEBACK:
             meta = _BlockMeta(key=bkey, length=len(chunk), crc=crc32_chunked(chunk))
+            if self.controller is not None and not self.controller.cache_on_write(
+                bkey.rsplit(":", 1)[0]
+            ):
+                # Contended tier + a class nobody re-reads: skip the memory
+                # copy entirely and degrade to a pooled write-through (the
+                # same durable path the CapacityExceeded fallback takes).
+                with self._block_lock(bkey):
+                    self.mem.delete(bkey)
+                with self._meta:
+                    self._blocks[bkey] = meta
+                    self._dirty.discard(bkey)
+                    self._resident.pop(bkey, None)
+                futures.append(self._pool.submit(self._pfs_put, bkey, chunk, meta))
+                return
             meta.dirty = True
             try:
                 self._cache_block(meta, chunk)
@@ -727,7 +820,14 @@ class TwoLevelStore:
                 self._flush_q.task_done()
                 return
             try:
-                self._claim_and_flush(bkey)
+                if self.controller is not None:
+                    # Adaptive write-back concurrency: all lanes drain the
+                    # queue, but at most ``flush_gate.limit`` run a PFS
+                    # flush at once (the controller resizes it each tick).
+                    with self.controller.flush_gate:
+                        self._claim_and_flush(bkey)
+                else:
+                    self._claim_and_flush(bkey)
             except Exception as exc:  # pragma: no cover - defensive
                 with self._meta:
                     self._flush_errors.append(exc)
@@ -750,6 +850,21 @@ class TwoLevelStore:
                 meta = self._blocks.get(bkey)
             if claimed and meta is not None and meta.dirty:
                 self._flush_now(bkey, meta)
+                if (
+                    self.controller is not None
+                    and not meta.dirty  # flush actually landed
+                    and self.controller.drop_after_flush(bkey)
+                ):
+                    # Flush-and-drop: a spill/burst block's clean memory
+                    # copy has ~zero re-read value under contention — free
+                    # the space before the evictor has to.  The meta stays
+                    # (it describes the PFS copy), so the once-per-residency
+                    # CRC flag must reset: a future re-promotion is a new
+                    # residency whose first hit must verify again.
+                    meta.verified = False
+                    self.mem.delete(bkey)
+                    with self._meta:
+                        self._resident.pop(bkey, None)
 
     def _flush_now(self, bkey: str, meta: _BlockMeta) -> None:
         """Write one dirty block down to the PFS tier (caller holds block lock)."""
@@ -833,9 +948,13 @@ class TwoLevelStore:
 
         A memory-tier hit serves a zero-copy sub-block view; a miss reads
         only the overlapping PFS stripe units (each staged unit's CRC is
-        still verified).  The range is clamped to the file size.  Partial
-        blocks are *not* promoted into the memory tier — promotion happens
-        only when the range happens to cover a whole block.
+        still verified).  The range is clamped to the file size.  On a
+        static store, partial blocks are *not* promoted into the memory
+        tier — promotion happens only when the range happens to cover a
+        whole block.  With an adaptive controller attached there is one
+        exception: a reuse-class/latency-class stream running below its
+        planned in-memory fraction fetches and promotes the whole covering
+        block on a sub-block miss (see ``IOController.promote_range_miss``).
         """
         mode = mode or self.read_mode
         if offset < 0 or size < 0:
@@ -886,7 +1005,15 @@ class TwoLevelStore:
         mode = mode or self.read_mode
         if offset < 0 or (length is not None and length < 0):
             raise ValueError("offset/length must be non-negative")
-        ra = self.readahead_blocks if readahead is None else max(0, readahead)
+        # Readahead depth: an explicit argument wins; otherwise the
+        # controller's per-stream depth (re-queried as the stream advances,
+        # so one long scan deepens/shrinks with live conditions); otherwise
+        # the static knob.
+        adaptive = readahead is None and self.controller is not None
+        if adaptive:
+            ra = self.controller.readahead(name, self.readahead_blocks)
+        else:
+            ra = self.readahead_blocks if readahead is None else max(0, readahead)
         flock = self._acquire_file(name, write=False)
         try:
             fmeta = self._file_meta_or_cold(name)
@@ -909,7 +1036,9 @@ class TwoLevelStore:
                 nxt += 1
             while pending:
                 data = memoryview(pending.popleft().result())
-                if nxt <= last:
+                if adaptive:
+                    ra = self.controller.readahead(name, self.readahead_blocks)
+                while nxt <= last and len(pending) <= ra:
                     pending.append(submit(nxt))
                     nxt += 1
                 for off in range(0, len(data), self.app_buffer_bytes):
@@ -966,17 +1095,33 @@ class TwoLevelStore:
                     self.stats.mem_hits += 1
                     if meta is not None:
                         self._touch_locked(meta)
-                # The block CRC covers the whole block, so verify it over the
-                # resident bytes (stat-free peek — the caller only consumes
-                # the slice) exactly like the full-block hit path does.
-                blob = self.mem.peek(bkey)
-                if meta is not None and blob is not None and crc32_chunked(blob) != meta.crc:
-                    with self._meta:
-                        self.stats.integrity_failures += 1
-                    raise IntegrityError(f"memory-tier CRC mismatch for {bkey}")
+                # The block CRC covers the whole block, so the first hit of
+                # a residency verifies the resident bytes (stat-free peek —
+                # the caller only consumes the slice) exactly like the
+                # full-block hit path; later hits skip the pass.
+                if meta is not None and not meta.verified:
+                    blob = self.mem.peek(bkey)
+                    if blob is not None:
+                        if crc32_chunked(blob) != meta.crc:
+                            with self._meta:
+                                self.stats.integrity_failures += 1
+                            raise IntegrityError(f"memory-tier CRC mismatch for {bkey}")
+                        # Only a real pass may mark the residency verified —
+                        # a concurrent drop can make peek() return None.
+                        meta.verified = True
                 return view
         if mode is ReadMode.MEMORY_ONLY:
             raise BlockNotFound(bkey)
+        if (
+            mode is ReadMode.TIERED
+            and self.cache_on_read
+            and self.controller is not None
+            and self.controller.promote_range_miss(name)
+        ):
+            # Reuse-class stream below its planned residency: fetch the
+            # whole covering block (promoting it) and serve the slice — the
+            # next ranged read over this block is a memory-tier hit.
+            return self._read_block(name, idx, mode)[lo:hi]
         with self._meta:
             self.stats.mem_misses += 1
         buf = bytearray(hi - lo)
@@ -1002,10 +1147,12 @@ class TwoLevelStore:
                     self.stats.mem_hits += 1
                     if meta is not None:
                         self._touch_locked(meta)
-                if meta is not None and crc32_chunked(view) != meta.crc:
-                    with self._meta:
-                        self.stats.integrity_failures += 1
-                    raise IntegrityError(f"memory-tier CRC mismatch for {bkey}")
+                if meta is not None and not meta.verified:
+                    if crc32_chunked(view) != meta.crc:
+                        with self._meta:
+                            self.stats.integrity_failures += 1
+                        raise IntegrityError(f"memory-tier CRC mismatch for {bkey}")
+                    meta.verified = True
                 return view
         if mode is ReadMode.MEMORY_ONLY:
             raise BlockNotFound(bkey)
@@ -1028,11 +1175,16 @@ class TwoLevelStore:
             with self._meta:
                 self.stats.integrity_failures += 1
             raise IntegrityError(f"PFS CRC mismatch for {bkey}")
-        if mode is ReadMode.TIERED and self.cache_on_read:
+        if (
+            mode is ReadMode.TIERED
+            and self.cache_on_read
+            and (self.controller is None or self.controller.admit(name, bkey))
+        ):
             new_meta = meta or _BlockMeta(key=bkey, length=len(data), crc=crc)
             try:
                 self._cache_block(new_meta, data)
                 with self._meta:
+                    new_meta.promoted = True  # residency earned by a read
                     self._blocks[bkey] = new_meta
                     self.stats.promotions += 1
             except CapacityExceeded:
@@ -1128,12 +1280,27 @@ class TwoLevelStore:
         return removed
 
     def resident_fraction(self, name: str | None = None) -> float:
-        """The paper's ``f``: fraction of bytes resident in the memory tier."""
+        """The paper's ``f``: fraction of bytes resident in the memory tier.
+
+        For a named file the denominator is the *file size* — an evicted
+        block lowers the fraction even though eviction also dropped its
+        block-table entry.  With no name, the fraction is over all
+        currently tracked blocks.
+        """
+        if name is not None:
+            with self._meta:
+                fmeta = self._files.get(name)
+            if fmeta is None or fmeta.size == 0:
+                return 0.0
+            bb = self.layout.block_size
+            hot = 0
+            for i in range(fmeta.n_blocks):
+                if self.mem.contains(self._bkey(name, i)):
+                    hot += min(bb, fmeta.size - i * bb)
+            return hot / fmeta.size
         with self._meta:
             total = hot = 0
             for bkey, meta in self._blocks.items():
-                if name is not None and not bkey.startswith(name + ":"):
-                    continue
                 total += meta.length
                 if self.mem.contains(bkey):
                     hot += meta.length

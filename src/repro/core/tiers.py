@@ -123,15 +123,30 @@ class TierStats:
     write_ops: int = 0
     read_seconds: float = 0.0
     write_seconds: float = 0.0
-    # Wall-clock span of the read/write op stream: first op start .. last op
-    # end.  With concurrent ops the per-op seconds above sum *busy* time
-    # across threads (they overcount wall time), so aggregate throughput —
-    # the quantity the paper's Section 4 model predicts — must be computed
-    # over the span instead.
+    # Wall-clock span of the *current burst* of the read/write op stream:
+    # first op start .. last op end.  With concurrent ops the per-op seconds
+    # above sum *busy* time across threads (they overcount wall time), so
+    # aggregate throughput — the quantity the paper's Section 4 model
+    # predicts — must be computed over spans instead.
     read_span_start: float = 0.0
     read_span_end: float = 0.0
     write_span_start: float = 0.0
     write_span_end: float = 0.0
+    # Idle-gap handling: an op starting more than ``idle_gap_s`` after the
+    # previous burst's end closes that burst — its wall span is banked into
+    # ``*_busy_seconds`` and a fresh span opens.  ``aggregate_*_mbps``
+    # divides by busy span time only, so a bursty stream separated by long
+    # idle stretches (a loader between epochs, a flush lane between burst
+    # checkpoints) is not undercounted by the dead air between bursts.
+    idle_gap_s: float = 0.5
+    read_busy_seconds: float = 0.0  # closed read bursts (excludes current span)
+    write_busy_seconds: float = 0.0
+    read_bursts: int = 0  # closed bursts; current open span adds one more
+    write_bursts: int = 0
+    # Buffer-pool ledger (PFSTier stripe-assembly buffers): how often a
+    # pooled buffer was reused vs freshly allocated.
+    buf_allocs: int = 0
+    buf_reuses: int = 0
 
     def record_read(self, nbytes: int, seconds: float, end: float | None = None) -> None:
         end = time.perf_counter() if end is None else end
@@ -139,6 +154,13 @@ class TierStats:
         self.bytes_read += nbytes
         self.read_ops += 1
         self.read_seconds += seconds
+        if self.read_span_start and start > self.read_span_end + self.idle_gap_s:
+            # New burst: bank the finished span, start fresh at this op.
+            self.read_busy_seconds += self.read_span_end - self.read_span_start
+            self.read_bursts += 1
+            self.read_span_start = start
+            self.read_span_end = end
+            return
         if not self.read_span_start or start < self.read_span_start:
             self.read_span_start = start
         if end > self.read_span_end:
@@ -150,10 +172,22 @@ class TierStats:
         self.bytes_written += nbytes
         self.write_ops += 1
         self.write_seconds += seconds
+        if self.write_span_start and start > self.write_span_end + self.idle_gap_s:
+            self.write_busy_seconds += self.write_span_end - self.write_span_start
+            self.write_bursts += 1
+            self.write_span_start = start
+            self.write_span_end = end
+            return
         if not self.write_span_start or start < self.write_span_start:
             self.write_span_start = start
         if end > self.write_span_end:
             self.write_span_end = end
+
+    def record_buffer(self, reused: bool) -> None:
+        if reused:
+            self.buf_reuses += 1
+        else:
+            self.buf_allocs += 1
 
     def read_mbps(self) -> float:
         return self.bytes_read / 2**20 / self.read_seconds if self.read_seconds else 0.0
@@ -161,13 +195,66 @@ class TierStats:
     def write_mbps(self) -> float:
         return self.bytes_written / 2**20 / self.write_seconds if self.write_seconds else 0.0
 
+    def read_busy_span(self) -> float:
+        """Total busy wall time of the read stream: closed bursts + open span."""
+        return self.read_busy_seconds + max(0.0, self.read_span_end - self.read_span_start)
+
+    def write_busy_span(self) -> float:
+        return self.write_busy_seconds + max(0.0, self.write_span_end - self.write_span_start)
+
     def aggregate_read_mbps(self) -> float:
-        span = self.read_span_end - self.read_span_start
+        span = self.read_busy_span()
         return self.bytes_read / 2**20 / span if span > 0 else 0.0
 
     def aggregate_write_mbps(self) -> float:
-        span = self.write_span_end - self.write_span_start
+        span = self.write_busy_span()
         return self.bytes_written / 2**20 / span if span > 0 else 0.0
+
+    def buffer_reuse_rate(self) -> float:
+        total = self.buf_allocs + self.buf_reuses
+        return self.buf_reuses / total if total else 0.0
+
+
+class _BufferPool:
+    """Size-bucketed freelist of ``bytearray`` scratch buffers.
+
+    The PFS tier's boundary-unit staging and whole-object ``get`` paths
+    need a transient buffer per call; on the merge/readahead hot path that
+    was a fresh ``bytearray`` per block read.  Stripe geometry makes the
+    size population tiny (stripe size + a few tail lengths), so an
+    exact-size bucket freelist gets near-perfect reuse.  Buffers are
+    returned dirty — every consumer fully overwrites the bytes it reads
+    before using them (``readinto`` raises on a short read).
+    """
+
+    def __init__(self, stats: TierStats, max_per_size: int = 8, max_total_bytes: int = 64 * 2**20):
+        self._lock = threading.Lock()
+        self._free: dict[int, list[bytearray]] = {}
+        self._held = 0
+        self.max_per_size = max_per_size
+        self.max_total_bytes = max_total_bytes
+        self.stats = stats
+
+    def acquire(self, n: int) -> bytearray:
+        with self._lock:
+            bucket = self._free.get(n)
+            if bucket:
+                buf = bucket.pop()
+                self._held -= n
+                self.stats.record_buffer(reused=True)
+                return buf
+            self.stats.record_buffer(reused=False)
+        return bytearray(n)
+
+    def release(self, buf: bytearray) -> None:
+        n = len(buf)
+        if n == 0:
+            return
+        with self._lock:
+            bucket = self._free.setdefault(n, [])
+            if len(bucket) < self.max_per_size and self._held + n <= self.max_total_bytes:
+                bucket.append(buf)
+                self._held += n
 
 
 class MemoryTier:
@@ -317,6 +404,7 @@ class PFSTier:
         self._key_locks = [threading.RLock() for _ in range(self._N_KEY_LOCKS)]
         self._stats_lock = threading.Lock()
         self.stats = TierStats()
+        self._buf_pool = _BufferPool(self.stats)
         for s in range(n_servers):
             os.makedirs(self._server_dir(s), exist_ok=True)
 
@@ -479,11 +567,17 @@ class PFSTier:
                 else:
                     # Boundary unit: CRC covers the whole unit, so stage it
                     # once, verify, then copy only the overlapping slice.
-                    stage = bytearray(uln)
-                    self._read_unit_into(key, unit, uln, memoryview(stage), crcs[unit])
-                    lo = max(offset - uoff, 0)
-                    hi = min(end - uoff, uln)
-                    out[uoff + lo - offset : uoff + hi - offset] = stage[lo:hi]
+                    # The staging buffer comes from the tier's pool — ranged
+                    # merge/readahead streams hit this path per block, and a
+                    # fresh bytearray each time is pure allocator churn.
+                    stage = self._buf_pool.acquire(uln)
+                    try:
+                        self._read_unit_into(key, unit, uln, memoryview(stage), crcs[unit])
+                        lo = max(offset - uoff, 0)
+                        hi = min(end - uoff, uln)
+                        out[uoff + lo - offset : uoff + hi - offset] = stage[lo:hi]
+                    finally:
+                        self._buf_pool.release(stage)
 
             units = [u for u in self._iter_units(total) if u[1] + u[2] > offset and u[1] < end]
             self._map_units(read_unit, units)
@@ -504,9 +598,12 @@ class PFSTier:
         with self._key_lock(key):
             total, _ = self._read_manifest(key)
             end = total if length is None else min(total, offset + length)
-            out = bytearray(max(0, end - offset))
-            self.readinto(key, out, offset, length)
-        return bytes(out)
+            out = self._buf_pool.acquire(max(0, end - offset))
+            try:
+                self.readinto(key, out, offset, length)
+                return bytes(out)
+            finally:
+                self._buf_pool.release(out)
 
     def delete(self, key: str) -> bool:
         with self._key_lock(key):

@@ -41,6 +41,7 @@ from collections import OrderedDict
 
 import numpy as np
 
+from repro.core.sched import StreamClass
 from repro.core.store import ReadMode, TwoLevelStore, WriteMode
 
 
@@ -66,6 +67,10 @@ class SyntheticCorpus:
         self.tokens_per_shard = tokens_per_shard
         self.seed = seed
         self.prefix = prefix
+        # Stream intent for the adaptive controller: corpus shards are read
+        # sequentially and re-read every epoch — the class whose Eq. 7
+        # caching value is highest (DESIGN.md §10).
+        store.hint_stream(prefix, StreamClass.SEQ_REUSE)
 
     def shard_name(self, i: int) -> str:
         return f"{self.prefix}_{i:05d}"

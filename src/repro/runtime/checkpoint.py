@@ -47,6 +47,7 @@ from typing import Any
 import jax
 import numpy as np
 
+from repro.core.sched import StreamClass
 from repro.core.store import ReadMode, TwoLevelStore, WriteMode
 
 PyTree = Any
@@ -126,6 +127,11 @@ class CheckpointManager:
         self.mode = mode
         self.keep_last = keep_last
         self.chunk_bytes = chunk_bytes
+        # Stream intent for the adaptive controller: checkpoints are write
+        # bursts that are read back only on restore — under capacity
+        # contention their write-through skips the memory tier instead of
+        # evicting the training working set (DESIGN.md §10).
+        store.hint_stream(f"ckpt/{tag}/", StreamClass.WRITE_BURST)
         # One background lane: saves serialize+put off the critical path but
         # still land in submission order (COMMIT order == save order).
         self._bg = ThreadPoolExecutor(max_workers=1, thread_name_prefix="ckpt-save")

@@ -39,6 +39,15 @@ Semantics:
   empty (the capacity buffer always exists; ``cold_len=0`` masks it).
 * ``host_views()`` returns the flushed history as numpy views;
   ``rebuild_hot_from_cold()`` is the fault-tolerance path.
+* Optional third level: constructed with a ``store=`` (a
+  :class:`~repro.core.store.TwoLevelStore`), every *completed* cold page
+  is also persisted into the store (async write-back) under
+  ``<store_prefix>/<name>/page_NNNNNN`` — the host tier declares itself
+  to the adaptive I/O controller as a **latency-sensitive** stream
+  (``StreamClass.LATENCY``: always admitted, never flush-dropped,
+  minimum readahead), and ``restore_cold_from_store()`` rebuilds the
+  history up to the last persisted page after *host* DRAM loss — one
+  more rung of the paper's re-read-from-the-durable-tier story.
 
 The host tier is stored in the cache dtype (bf16 via ``ml_dtypes``), not
 hard-coded float32 — half the ``host_bytes`` of the seed layout.  The
@@ -66,6 +75,8 @@ class TieredKVStats:
     pages_staged: int = 0
     bytes_written_through: int = 0  # device->host write-through traffic
     d2h_flushes: int = 0  # batched sync points (seed path: one per token)
+    pages_persisted: int = 0  # completed pages written into the store tier
+    bytes_persisted: int = 0
 
     def hot_fraction(self) -> float:
         """The paper's f = hot / (hot + cold) over all attends so far."""
@@ -90,6 +101,9 @@ class TieredKVCache:
         max_len: int,
         dtype=jnp.bfloat16,
         page: int | None = None,
+        store=None,
+        store_prefix: str = "serving/kv",
+        name: str = "kv0",
     ):
         if window <= 0 or max_len < window:
             raise ValueError("need 0 < window <= max_len")
@@ -121,6 +135,77 @@ class TieredKVCache:
         self._flushed = 0  # tokens durably on the host tier
         self.length = 0
         self.stats = TieredKVStats()
+        # Optional store-backed third level (TwoLevelStore), with the host
+        # tier declared latency-sensitive to the adaptive I/O controller.
+        self._store = store
+        self._store_dir = f"{store_prefix}/{name}"
+        self._persisted_pages = 0
+        if store is not None:
+            from repro.core.sched import StreamClass
+
+            store.hint_stream(store_prefix + "/", StreamClass.LATENCY)
+
+    # ------------------------------------------------------- store offload
+
+    def _page_file(self, p: int) -> str:
+        return f"{self._store_dir}/page_{p:06d}"
+
+    def _persist_pages(self) -> None:
+        """Write newly completed (immutable) cold pages into the store —
+        each exactly once, k bytes then v bytes, async write-back."""
+        from repro.core.store import WriteMode
+
+        full = self._flushed // self.page
+        for p in range(self._persisted_pages, full):
+            lo, hi = p * self.page, (p + 1) * self.page
+            blob = (
+                np.ascontiguousarray(self.cold_k[:, :, lo:hi, :]).tobytes()
+                + np.ascontiguousarray(self.cold_v[:, :, lo:hi, :]).tobytes()
+            )
+            self._store.put(self._page_file(p), blob, mode=WriteMode.ASYNC_WRITEBACK)
+            self.stats.pages_persisted += 1
+            self.stats.bytes_persisted += len(blob)
+        self._persisted_pages = full
+
+    def restore_cold_from_store(self, rebuild_hot: bool = True) -> int:
+        """Host-DRAM loss recovery: refill the cold history from the store.
+
+        Restores every persisted page in order (the durable prefix — tokens
+        past the last completed page were never persisted, exactly like any
+        commit-on-boundary checkpoint), resets the cache's logical state
+        *to that prefix* (length included: with the host tier gone, tokens
+        past the boundary are unrecoverable even if a stale hot ring still
+        holds them), and by default rebuilds the hot ring.  Returns the
+        restored length in tokens.
+        """
+        if self._store is None:
+            raise RuntimeError("no store attached to restore from")
+        per = self.batch * self.kv * self.page * self.dim * self.cold_k.dtype.itemsize
+        shape = (self.batch, self.kv, self.page, self.dim)
+        max_pages = self.max_len // self.page
+        p = 0
+        # Clamped at this cache's cold capacity: a store written by a
+        # longer-history cache (or a name collision) must not walk the
+        # restore past max_len and fail mid-copy.
+        while p < max_pages and self._store.exists(self._page_file(p)):
+            blob = self._store.get(self._page_file(p))
+            lo, hi = p * self.page, (p + 1) * self.page
+            self.cold_k[:, :, lo:hi, :] = np.frombuffer(
+                blob[:per], dtype=self.cold_k.dtype
+            ).reshape(shape)
+            self.cold_v[:, :, lo:hi, :] = np.frombuffer(
+                blob[per:], dtype=self.cold_v.dtype
+            ).reshape(shape)
+            p += 1
+        n = p * self.page
+        self._persisted_pages = p
+        self._pending_k, self._pending_v = [], []
+        self._flushed = n
+        self.length = n
+        self._staged_pages = 0  # staging buffer contents presumed stale
+        if rebuild_hot and n:
+            self.rebuild_hot_from_cold()
+        return n
 
     # ------------------------------------------------------------- append
 
@@ -199,6 +284,8 @@ class TieredKVCache:
         self._flushed = self.length
         self.stats.d2h_flushes += 1
         self.stats.bytes_written_through += 2 * ks.size * ks.dtype.itemsize
+        if self._store is not None:
+            self._persist_pages()
 
     def _ensure_capacity(self, tokens: int) -> None:
         if tokens <= self._cap:

@@ -1,0 +1,57 @@
+"""crc32_combine property tests: the zero-extra-pass integrity algebra.
+
+The store's whole-block CRCs are produced by combining per-stripe CRCs
+that were folded *during* transfer (DESIGN.md §4) — correctness of
+``crc32_combine`` is what makes that legal.  Property: for any split of
+any byte string, ``crc32_combine(crc(A), crc(B), len(B)) == crc32(A+B)``.
+"""
+
+import zlib
+
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis (pip install .[test])")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.tiers import crc32_chunked, crc32_combine  # noqa: E402
+
+
+@settings(max_examples=200, deadline=None)
+@given(data=st.binary(min_size=0, max_size=4096), cut=st.integers(min_value=0, max_value=4096))
+def test_combine_matches_whole_crc_over_random_splits(data, cut):
+    cut = min(cut, len(data))
+    a, b = data[:cut], data[cut:]
+    assert crc32_combine(zlib.crc32(a), zlib.crc32(b), len(b)) == zlib.crc32(data)
+
+
+@settings(max_examples=100, deadline=None)
+@given(data=st.binary(min_size=0, max_size=2048))
+def test_combine_with_empty_sides(data):
+    crc = zlib.crc32(data)
+    assert crc32_combine(zlib.crc32(b""), crc, len(data)) == crc  # empty left
+    assert crc32_combine(crc, zlib.crc32(b""), 0) == crc  # empty right
+
+
+@settings(max_examples=100, deadline=None)
+@given(
+    parts=st.lists(st.binary(min_size=0, max_size=512), min_size=1, max_size=6),
+)
+def test_combine_folds_left_over_many_chunks(parts):
+    """Multi-chunk case: combining pairwise left-to-right equals the CRC of
+    the concatenation — the exact reduction the PFS tier runs over stripe
+    units (including zero-length middles)."""
+    whole = b"".join(parts)
+    crc = 0
+    for p in parts:
+        crc = crc32_combine(crc, zlib.crc32(p), len(p))
+    assert crc == zlib.crc32(whole)
+
+
+@settings(max_examples=100, deadline=None)
+@given(
+    data=st.binary(min_size=0, max_size=4096),
+    chunk=st.integers(min_value=1, max_value=512),
+)
+def test_crc32_chunked_equals_zlib(data, chunk):
+    """The incremental fold used on the transfer path is plain CRC32."""
+    assert crc32_chunked(data, chunk_bytes=chunk) == zlib.crc32(data)

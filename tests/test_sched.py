@@ -1,0 +1,366 @@
+"""Adaptive I/O control plane (core/sched.py + store integration, DESIGN.md §10)."""
+
+import os
+import threading
+import time
+
+import pytest
+
+from repro.core import (
+    ControllerConfig,
+    IOController,
+    ReadMode,
+    StreamClass,
+    TwoLevelStore,
+    WriteMode,
+)
+from repro.core.iomodel import blend_read_mbps, f_for_read_mbps
+from repro.core.sched import AdaptiveGate
+
+MB = 2**20
+
+
+def make(tmp_path, sub="pfs", **kw):
+    kw.setdefault("mem_capacity_bytes", 8 * MB)
+    kw.setdefault("block_bytes", 1 * MB)
+    kw.setdefault("stripe_bytes", 256 * 1024)
+    kw.setdefault("n_pfs_servers", 2)
+    return TwoLevelStore(str(tmp_path / sub), **kw)
+
+
+def adaptive(tmp_path, sub="pfs", cfg=None, **kw):
+    ctl = IOController(cfg or ControllerConfig(tick_interval_s=0.0, plan_interval_s=0.0))
+    return make(tmp_path, sub=sub, controller=ctl, **kw), ctl
+
+
+class TestModelInversion:
+    def test_f_for_read_mbps_roundtrips_blend(self):
+        nu, q = 6267.0, 446.0  # the paper's ν and a Fig. 5 q_ofs
+        for f in (0.0, 0.2, 0.5, 0.8, 1.0):
+            assert f_for_read_mbps(nu, q, blend_read_mbps(nu, q, f)) == pytest.approx(f, abs=1e-9)
+
+    def test_inversion_clamps(self):
+        assert f_for_read_mbps(6000, 400, 100) == 0.0  # below PFS rate: free
+        assert f_for_read_mbps(6000, 400, 9000) == 1.0  # above RAM rate: all hot
+        assert f_for_read_mbps(500, 500, 400) == 0.0  # flat blend: cheapest f
+
+    def test_blend_validates(self):
+        with pytest.raises(ValueError):
+            blend_read_mbps(0, 400, 0.5)
+        with pytest.raises(ValueError):
+            blend_read_mbps(6000, 400, 1.5)
+
+
+class TestScanResistance:
+    def test_scan_does_not_evict_reuse_working_set(self, tmp_path):
+        st, ctl = adaptive(tmp_path)
+        with st:
+            st.hint_stream("hot/", StreamClass.SEQ_REUSE)
+            st.hint_stream("scan/", StreamClass.SEQ_ONCE)
+            hot = {f"hot/f{i}": os.urandom(2 * MB) for i in range(3)}
+            for k, v in hot.items():
+                st.put(k, v)  # write-through: resident
+            for i in range(8):
+                st.put(f"scan/s{i}", os.urandom(2 * MB), mode=WriteMode.PFS_BYPASS)
+            for i in range(8):  # 16 MB scan through an 8 MB tier
+                for _ in st.get_buffered(f"scan/s{i}"):
+                    pass
+            for k in hot:
+                assert st.resident_fraction(k) == 1.0, "scan evicted the hot set"
+            rep = ctl.report()
+            assert rep["classes"]["seq_once"]["bypasses"] == 16
+            assert rep["classes"]["seq_once"]["admits"] == 0
+
+    def test_static_store_scan_does_evict(self, tmp_path):
+        """Control: without a controller the same scan thrashes the tier."""
+        with make(tmp_path) as st:
+            hot = {f"hot/f{i}": os.urandom(2 * MB) for i in range(3)}
+            for k, v in hot.items():
+                st.put(k, v)
+            for i in range(8):
+                st.put(f"scan/s{i}", os.urandom(2 * MB), mode=WriteMode.PFS_BYPASS)
+            for i in range(8):
+                for _ in st.get_buffered(f"scan/s{i}"):
+                    pass
+            assert sum(st.resident_fraction(k) for k in hot) < 3.0
+
+    def test_ghost_readmit_promotes_on_reref(self, tmp_path):
+        st, ctl = adaptive(tmp_path)
+        with st:
+            st.hint_stream("scan/", StreamClass.SEQ_ONCE)
+            st.put("scan/s", os.urandom(2 * MB), mode=WriteMode.PFS_BYPASS)
+            st.get("scan/s")  # first touch: bypassed, ghost-recorded
+            assert st.resident_fraction("scan/s") == 0.0
+            st.get("scan/s")  # re-reference disproves read-once: admitted
+            assert st.resident_fraction("scan/s") == 1.0
+            assert ctl.report()["classes"]["seq_once"]["readmits"] == 2
+
+    def test_evicted_key_readmits_via_ghost(self, tmp_path):
+        st, ctl = adaptive(tmp_path, mem_capacity_bytes=2 * MB)
+        with st:
+            st.hint_stream("scan/", StreamClass.SEQ_ONCE)
+            st.put("scan/a", os.urandom(1 * MB), mode=WriteMode.PFS_BYPASS)
+            st.get("scan/a")
+            st.get("scan/a")  # readmitted (resident now)
+            assert st.resident_fraction("scan/a") == 1.0
+            # force eviction of a's block
+            st.put("other/b", os.urandom(2 * MB))
+            assert st.resident_fraction("scan/a") == 0.0
+            st.get("scan/a")  # evicted key is in the ghost list: promote
+            assert st.resident_fraction("scan/a") == 1.0
+
+
+class TestWriteAdmission:
+    def _pressurize(self, st, ctl):
+        """Fill the tier so free fraction < threshold, then tick."""
+        st.put("hot/fill0", os.urandom(4 * MB))
+        st.put("hot/fill1", os.urandom(3 * MB))
+        ctl.maybe_tick()
+        ctl.maybe_tick()  # second tick computes deltas + pressure
+        assert ctl.memory_pressure
+
+    def test_write_burst_bypasses_memory_under_pressure(self, tmp_path):
+        st, ctl = adaptive(tmp_path)
+        with st:
+            st.hint_stream("hot/", StreamClass.SEQ_REUSE)
+            st.hint_stream("ckpt/", StreamClass.WRITE_BURST)
+            self._pressurize(st, ctl)
+            st.put("ckpt/c0", os.urandom(2 * MB), mode=WriteMode.WRITE_THROUGH)
+            assert st.resident_fraction("ckpt/c0") == 0.0  # went straight to PFS
+            assert st.resident_fraction("hot/fill0") == 1.0  # working set intact
+            assert st.get("ckpt/c0", mode=ReadMode.PFS_BYPASS)  # durable
+            assert ctl.report()["classes"]["write_burst"]["bypassed_writes"] > 0
+
+    def test_write_burst_cached_when_uncontended(self, tmp_path):
+        st, ctl = adaptive(tmp_path, mem_capacity_bytes=32 * MB)
+        with st:
+            st.hint_stream("ckpt/", StreamClass.WRITE_BURST)
+            st.put("ckpt/c0", os.urandom(2 * MB), mode=WriteMode.WRITE_THROUGH)
+            assert st.resident_fraction("ckpt/c0") == 1.0  # capacity is free: keep it
+
+    def test_async_spill_bypasses_memory_under_pressure(self, tmp_path):
+        st, ctl = adaptive(tmp_path)
+        with st:
+            st.hint_stream("hot/", StreamClass.SEQ_REUSE)
+            st.hint_stream("shuffle/spill/", StreamClass.SEQ_ONCE)
+            self._pressurize(st, ctl)
+            data = os.urandom(2 * MB)
+            st.put("shuffle/spill/r0", data, mode=WriteMode.ASYNC_WRITEBACK)
+            st.drain()
+            assert st.resident_fraction("shuffle/spill/r0") == 0.0  # never cached
+            assert st.resident_fraction("hot/fill0") == 1.0
+            assert st.get("shuffle/spill/r0") == data  # still whole on PFS
+            assert ctl.report()["classes"]["seq_once"]["bypassed_writes"] > 0
+
+    def test_spill_cached_before_pressure_dropped_at_flush(self, tmp_path):
+        """A spill block cached while the tier was free is flushed-and-
+        dropped once contention arrives before its flush runs."""
+        st, ctl = adaptive(tmp_path, flush_workers=1)
+        with st:
+            st.hint_stream("hot/", StreamClass.SEQ_REUSE)
+            st.hint_stream("shuffle/spill/", StreamClass.SEQ_ONCE)
+            data = os.urandom(2 * MB)
+            with ctl.flush_gate:  # hold the only flush lane
+                st.put("shuffle/spill/r0", data, mode=WriteMode.ASYNC_WRITEBACK)
+                assert st.resident_fraction("shuffle/spill/r0") == 1.0  # no pressure yet
+                assert st.get("shuffle/spill/r0") == data  # hit: marks CRC verified
+                assert all(
+                    st._blocks[f"shuffle/spill/r0:{i:06d}"].verified for i in range(2)
+                )
+                st.put("hot/fill0", os.urandom(4 * MB + 512 * 1024))
+                ctl.maybe_tick()
+                ctl.maybe_tick()
+                assert ctl.memory_pressure
+            st.drain()  # lane released: flush runs under pressure -> drop
+            assert st.resident_fraction("shuffle/spill/r0") == 0.0
+            # The drop ended that residency: the kept meta must demand a
+            # fresh first-hit CRC pass when the block is ever re-promoted.
+            assert not any(
+                st._blocks[f"shuffle/spill/r0:{i:06d}"].verified for i in range(2)
+            )
+            assert st.resident_fraction("hot/fill0") == 1.0
+            assert st.get("shuffle/spill/r0") == data
+            assert ctl.report()["flush_drops"] > 0
+
+    def test_async_writeback_keeps_copy_without_pressure(self, tmp_path):
+        st, ctl = adaptive(tmp_path, mem_capacity_bytes=32 * MB)
+        with st:
+            st.hint_stream("shuffle/spill/", StreamClass.SEQ_ONCE)
+            st.put("shuffle/spill/r0", os.urandom(2 * MB), mode=WriteMode.ASYNC_WRITEBACK)
+            st.drain()
+            assert st.resident_fraction("shuffle/spill/r0") == 1.0
+
+
+class TestRangePromotion:
+    def test_reuse_ranged_miss_promotes_covering_block(self, tmp_path):
+        """A sub-block ranged miss on a reuse-class stream fetches and
+        promotes the whole covering block (the static store never does)."""
+        st, ctl = adaptive(tmp_path)
+        with st:
+            st.hint_stream("corpus/", StreamClass.SEQ_REUSE)
+            data = os.urandom(2 * MB)
+            st.put("corpus/shard", data, mode=WriteMode.PFS_BYPASS)  # cold
+            assert st.get_range("corpus/shard", 100, 1000) == data[100:1100]
+            assert st.resident_fraction("corpus/shard") >= 0.5
+            h0 = st.stats.mem_hits
+            assert st.get_range("corpus/shard", 2000, 1000) == data[2000:3000]
+            assert st.stats.mem_hits == h0 + 1  # now a memory-tier hit
+
+    def test_scan_ranged_miss_stays_partial(self, tmp_path):
+        st, ctl = adaptive(tmp_path)
+        with st:
+            st.hint_stream("scan/", StreamClass.SEQ_ONCE)
+            data = os.urandom(2 * MB)
+            st.put("scan/s", data, mode=WriteMode.PFS_BYPASS)
+            before = st.pfs.stats.bytes_read
+            assert st.get_range("scan/s", 100, 1000) == data[100:1100]
+            assert st.resident_fraction("scan/s") == 0.0
+            assert st.pfs.stats.bytes_read - before < MB  # no whole-block fetch
+
+
+class TestReadahead:
+    def test_latency_class_stays_at_floor(self, tmp_path):
+        st, ctl = adaptive(tmp_path)
+        with st:
+            st.hint_stream("serving/", StreamClass.LATENCY)
+            assert ctl.readahead("serving/kv/page_000001", 2) == ctl.cfg.min_readahead
+
+    def test_depth_deepens_when_pool_idle_and_shrinks_under_pressure(self, tmp_path):
+        cfg = ControllerConfig(tick_interval_s=0.0, plan_interval_s=0.0, max_readahead=6)
+        st, ctl = adaptive(tmp_path, cfg=cfg)
+        with st:
+            st.hint_stream("scan/", StreamClass.SEQ_ONCE)
+            st.put("scan/s", os.urandom(4 * MB), mode=WriteMode.PFS_BYPASS)
+            for _ in range(12):
+                for _ in st.get_buffered("scan/s"):
+                    pass
+                time.sleep(0.002)
+            depth = ctl.report()["readahead"]["seq_once"]
+            assert ctl.cfg.min_readahead <= depth <= cfg.max_readahead
+            assert len(ctl.readahead_trajectory) >= 1  # it moved, visibly
+            # memory pressure + saturated pool shrink the reuse-class depth
+            ctl.memory_pressure = True
+            ctl._retune_readahead()
+            ctl._retune_readahead()
+            assert ctl.report()["readahead"]["seq_reuse"] <= st.readahead_blocks + 2
+
+    def test_explicit_readahead_argument_wins(self, tmp_path):
+        st, ctl = adaptive(tmp_path)
+        with st:
+            st.hint_stream("scan/", StreamClass.SEQ_ONCE)
+            data = os.urandom(3 * MB)
+            st.put("scan/s", data, mode=WriteMode.PFS_BYPASS)
+            got = b"".join(bytes(c) for c in st.get_buffered("scan/s", readahead=0))
+            assert got == data
+
+
+class TestFlushLanes:
+    def test_adaptive_gate_limits_and_resizes(self):
+        gate = AdaptiveGate(limit=1)
+        active, peak = [], []
+        lock = threading.Lock()
+
+        def work():
+            with gate:
+                with lock:
+                    active.append(1)
+                    peak.append(len(active))
+                time.sleep(0.01)
+                with lock:
+                    active.pop()
+
+        ts = [threading.Thread(target=work) for _ in range(6)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+        assert max(peak) == 1
+        gate.set_limit(4)
+        peak.clear()
+        ts = [threading.Thread(target=work) for _ in range(8)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+        assert 1 <= max(peak) <= 4
+
+    def test_flush_lane_trajectory_recorded(self, tmp_path):
+        st, ctl = adaptive(tmp_path, flush_workers=4, mem_capacity_bytes=64 * MB)
+        with st:
+            for i in range(10):
+                st.put(f"w/f{i}", os.urandom(1 * MB), mode=WriteMode.ASYNC_WRITEBACK)
+            st.drain()
+            rep = ctl.report()
+            assert 1 <= rep["flush_lanes"] <= 4
+            assert st.get("w/f0", mode=ReadMode.PFS_BYPASS)
+
+
+class TestEstimatorAndReport:
+    def test_ewma_rates_update_from_traffic(self, tmp_path):
+        st, ctl = adaptive(tmp_path)
+        with st:
+            st.put("f", os.urandom(4 * MB))
+            st.get("f")
+            ctl.maybe_tick()
+            st.get("f", mode=ReadMode.PFS_BYPASS)
+            st.get("f")
+            ctl.maybe_tick()
+            rep = ctl.report()
+            assert rep["nu_mbps"] > 0 and rep["q_read_mbps"] > 0 and rep["q_write_mbps"] > 0
+            assert rep["ticks"] >= 2
+
+    def test_plan_targets_prioritize_reuse_over_scan(self, tmp_path):
+        st, ctl = adaptive(tmp_path)
+        with st:
+            st.hint_stream("hot/", StreamClass.SEQ_REUSE)
+            st.hint_stream("scan/", StreamClass.SEQ_ONCE)
+            st.put("hot/a", os.urandom(6 * MB))
+            for i in range(8):
+                st.put(f"scan/s{i}", os.urandom(2 * MB), mode=WriteMode.PFS_BYPASS)
+                st.get(f"scan/s{i}")
+            ctl.maybe_tick()
+            ctl._replan()
+            rep = ctl.report()
+            reuse, scan = rep["classes"]["seq_reuse"], rep["classes"]["seq_once"]
+            assert reuse["target_f"] == pytest.approx(1.0)
+            assert scan["target_f"] < reuse["target_f"]
+            assert reuse["measured_f"] == pytest.approx(1.0)
+            assert 0.0 <= rep["target_f"] <= 1.0
+            assert 0.0 <= rep["measured_f"] <= 1.0
+            assert 0.0 <= rep["f_required_for_demand"] <= 1.0
+            assert rep["predicted_read_mbps"] > 0
+
+    def test_controller_cannot_bind_twice(self, tmp_path):
+        st, ctl = adaptive(tmp_path)
+        with st:
+            with pytest.raises(RuntimeError):
+                TwoLevelStore(str(tmp_path / "pfs2"), controller=ctl)
+
+    def test_hints_are_inert_without_controller(self, tmp_path):
+        with make(tmp_path) as st:
+            st.hint_stream("a/", StreamClass.SEQ_ONCE)
+            data = os.urandom(2 * MB)
+            st.put("a/f", data, mode=WriteMode.PFS_BYPASS)
+            assert st.get("a/f") == data
+            assert st.resident_fraction("a/f") == 1.0  # static promote-on-read
+            st.hint_stream("a/", None)  # clearing is fine too
+
+
+class TestGhostProvenance:
+    def test_written_then_evicted_scan_block_earns_no_ghost_entry(self, tmp_path):
+        """A spill block whose residency came from its *write* must not be
+        promoted by its one expected read after eviction — only
+        read-earned residency proves reuse."""
+        st, ctl = adaptive(tmp_path, mem_capacity_bytes=2 * MB, flush_workers=1)
+        with st:
+            st.hint_stream("shuffle/spill/", StreamClass.SEQ_ONCE)
+            data = os.urandom(1 * MB)
+            st.put("shuffle/spill/r0", data, mode=WriteMode.ASYNC_WRITEBACK)
+            st.drain()
+            st.put("other/b", os.urandom(2 * MB))  # evicts the write-cached spill
+            assert st.resident_fraction("shuffle/spill/r0") == 0.0
+            assert st.get("shuffle/spill/r0") == data  # the one expected read
+            assert st.resident_fraction("shuffle/spill/r0") == 0.0  # NOT promoted
+            # ...but a second read is genuine reuse and promotes.
+            assert st.get("shuffle/spill/r0") == data
+            assert st.resident_fraction("shuffle/spill/r0") == 1.0

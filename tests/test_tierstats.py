@@ -1,0 +1,102 @@
+"""TierStats burst accounting + the PFS tier's pooled stripe buffers."""
+
+import os
+
+from repro.core.tiers import PFSTier, TierStats, _BufferPool
+
+MB = 2**20
+
+
+class TestIdleGapSpans:
+    def test_single_burst_unchanged(self):
+        s = TierStats()
+        s.record_read(10 * MB, 0.5, end=100.5)
+        s.record_read(10 * MB, 0.5, end=101.0)
+        # one continuous burst: span 100.0 .. 101.0
+        assert s.read_busy_span() == 1.0
+        assert s.aggregate_read_mbps() == 20.0
+        assert s.read_bursts == 0  # still open
+
+    def test_idle_gap_opens_new_burst(self):
+        s = TierStats(idle_gap_s=0.5)
+        s.record_read(10 * MB, 1.0, end=101.0)  # burst 1: 100..101
+        s.record_read(10 * MB, 1.0, end=202.0)  # burst 2 after a 100 s idle
+        assert s.read_bursts == 1
+        assert s.read_busy_span() == 2.0
+        # without gap handling this stream would read as 20 MB over 102 s
+        assert s.aggregate_read_mbps() == 10.0
+
+    def test_bursty_write_stream_not_undercounted(self):
+        s = TierStats(idle_gap_s=0.5)
+        for burst in range(4):
+            t0 = 100.0 + burst * 60.0
+            for i in range(3):
+                s.record_write(4 * MB, 0.1, end=t0 + 0.1 * (i + 1))
+        assert s.write_bursts == 3
+        assert abs(s.write_busy_span() - 4 * 0.3) < 1e-9
+        assert abs(s.aggregate_write_mbps() - 48 / 1.2) < 1e-6
+
+    def test_concurrent_overlapping_ops_extend_one_span(self):
+        s = TierStats(idle_gap_s=0.5)
+        # two overlapping ops recorded out of order (thread interleaving)
+        s.record_read(MB, 0.4, end=100.4)
+        s.record_read(MB, 0.7, end=100.8)  # starts at 100.1, inside the span
+        assert s.read_bursts == 0
+        assert abs(s.read_busy_span() - 0.8) < 1e-9
+
+    def test_sub_gap_pause_does_not_split(self):
+        s = TierStats(idle_gap_s=0.5)
+        s.record_read(MB, 0.1, end=100.1)
+        s.record_read(MB, 0.1, end=100.5)  # 0.3 s pause < gap: same burst
+        assert s.read_bursts == 0
+        assert abs(s.read_busy_span() - 0.5) < 1e-9
+
+
+class TestBufferPool:
+    def test_reuse_and_counters(self):
+        stats = TierStats()
+        pool = _BufferPool(stats)
+        a = pool.acquire(1024)
+        pool.release(a)
+        b = pool.acquire(1024)
+        assert b is a  # same object came back
+        assert stats.buf_allocs == 1 and stats.buf_reuses == 1
+        assert stats.buffer_reuse_rate() == 0.5
+
+    def test_size_buckets_are_exact(self):
+        pool = _BufferPool(TierStats())
+        a = pool.acquire(1024)
+        pool.release(a)
+        c = pool.acquire(2048)
+        assert len(c) == 2048 and c is not a
+
+    def test_bounded_retention(self):
+        stats = TierStats()
+        pool = _BufferPool(stats, max_per_size=2, max_total_bytes=10 * MB)
+        bufs = [pool.acquire(1024) for _ in range(5)]
+        for b in bufs:
+            pool.release(b)
+        assert pool._held == 2 * 1024  # only two kept per size bucket
+
+    def test_pfs_ranged_reads_reuse_staging_buffers(self, tmp_path):
+        """The merge/readahead hot path: repeated boundary-unit reads must
+        recycle their staging buffers, not allocate fresh ones."""
+        pfs = PFSTier(str(tmp_path / "pfs"), n_servers=2, stripe_bytes=64 * 1024)
+        data = os.urandom(512 * 1024)
+        pfs.put("k", data)
+        for off in range(1000, 300_000, 37_000):  # misaligned: boundary units
+            out = bytearray(5000)
+            pfs.readinto("k", out, offset=off, length=5000)
+            assert bytes(out) == data[off : off + 5000]
+        assert pfs.stats.buf_reuses > 0
+        assert pfs.stats.buffer_reuse_rate() > 0.5
+        pfs.close()
+
+    def test_pfs_get_roundtrip_through_pool(self, tmp_path):
+        pfs = PFSTier(str(tmp_path / "pfs"), n_servers=2, stripe_bytes=64 * 1024)
+        data = os.urandom(200 * 1024)
+        pfs.put("k", data)
+        for _ in range(3):
+            assert pfs.get("k") == data
+        assert pfs.stats.buf_reuses >= 2
+        pfs.close()
