@@ -57,6 +57,12 @@ GATED: dict[str, str] = {
     # other wall-clock gates)
     "mixed.hot_retained_adaptive": "higher",
     "mixed.model_within_tol": "higher",
+    # distributed two-level store: binary verdicts only (the raw >=2x
+    # scaling and >=1.3x locality ratios are wall-clock quantities,
+    # hard-asserted in multihost_scaling's own CI step)
+    "multihost.scaling_ok": "higher",
+    "multihost.locality_ok": "higher",
+    "multihost.takeover_ok": "higher",
 }
 
 

@@ -36,6 +36,7 @@ def main() -> None:
         fig6_mountain,
         fig7_terasort,
         mixed_scaling,
+        multihost_scaling,
         parallel_scaling,
         roofline,
         serve_scaling,
@@ -53,6 +54,7 @@ def main() -> None:
         ("tscale", train_io_scaling),
         ("terascale", terasort_scaling),
         ("mixed", mixed_scaling),
+        ("multihost", multihost_scaling),
         ("roofline", roofline),
     ]
     if args.only:

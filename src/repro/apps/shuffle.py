@@ -249,36 +249,104 @@ class ShuffleEngine:
 
     def _run_impl(self, inputs: list[str], out_name: Callable[[int], str],
                   reducer: Reducer | None) -> ShuffleStats:
-        cfg = self.cfg
+        splitters = self.sample(inputs)
+        self.map_phase(inputs, splitters)
+        self.reduce_phase(out_name, reducer)
+        return self.stats
+
+    def sample(self, inputs: list[str]) -> np.ndarray:
+        """Phase 1: sample input keys → the global splitter vector.
+
+        In a distributed run, one host samples and every host maps with
+        the *same* splitters (they define the reducer partitioning, so
+        they must be global) — publish them however the job coordinates,
+        e.g. a small store file.
+        """
         t0 = time.perf_counter()
         splitters = self._sample_splitters(inputs)
-        self.stats.sample_s = time.perf_counter() - t0
+        self.stats.sample_s += time.perf_counter() - t0
+        return splitters
 
+    def map_phase(self, inputs: list[str], splitters: np.ndarray,
+                  mapper_base: int = 0) -> None:
+        """Phase 2: map/spill ``inputs`` into per-reducer run files.
+
+        ``mapper_base`` offsets the mapper index baked into run-file names
+        — in a multi-host job each host maps its own input subset with a
+        disjoint index range (host ``h`` of ``H`` passes ``h * len(all) //
+        H`` or any non-overlapping base) so spill names never collide in
+        the shared namespace.
+        """
+        cfg = self.cfg
         t0 = time.perf_counter()
         workers = max(1, cfg.workers)
         if workers > 1 and len(inputs) > 1:
             with ThreadPoolExecutor(max_workers=workers, thread_name_prefix="shuffle-map") as ex:
-                list(ex.map(lambda mi: self._map_one(*mi, splitters), enumerate(inputs)))
-        else:
-            for m, name in enumerate(inputs):
-                self._map_one(m, name, splitters)
-        self.stats.spill_s = time.perf_counter() - t0
-
-        t0 = time.perf_counter()
-        if workers > 1 and cfg.n_reducers > 1:
-            with ThreadPoolExecutor(max_workers=workers, thread_name_prefix="shuffle-red") as ex:
                 list(
                     ex.map(
-                        lambda r: self._reduce_one(r, out_name(r), reducer),
-                        range(cfg.n_reducers),
+                        lambda mi: self._map_one(mapper_base + mi[0], mi[1], splitters),
+                        enumerate(inputs),
                     )
                 )
         else:
-            for r in range(cfg.n_reducers):
+            for m, name in enumerate(inputs):
+                self._map_one(mapper_base + m, name, splitters)
+        self.stats.spill_s += time.perf_counter() - t0
+
+    def reduce_phase(self, out_name: Callable[[int], str],
+                     reducer: Reducer | None = None,
+                     reducers: list[int] | None = None) -> None:
+        """Phase 3: k-way-merge run files into output shards.
+
+        ``reducers`` restricts this engine to a subset of reducer indexes
+        — the multi-host path: :func:`place_reducers` assigns each reducer
+        to the host whose memory shard holds the most of its run bytes
+        hot, and each host calls ``reduce_phase(..., reducers=mine)``
+        after :meth:`discover_runs`.
+        """
+        cfg = self.cfg
+        todo = sorted(set(range(cfg.n_reducers) if reducers is None else reducers))
+        for r in todo:
+            if not 0 <= r < cfg.n_reducers:
+                raise ValueError(f"reducer index {r} outside 0..{cfg.n_reducers - 1}")
+        t0 = time.perf_counter()
+        workers = max(1, cfg.workers)
+        if workers > 1 and len(todo) > 1:
+            with ThreadPoolExecutor(max_workers=workers, thread_name_prefix="shuffle-red") as ex:
+                list(ex.map(lambda r: self._reduce_one(r, out_name(r), reducer), todo))
+        else:
+            for r in todo:
                 self._reduce_one(r, out_name(r), reducer)
-        self.stats.merge_s = time.perf_counter() - t0
+        self.stats.merge_s += time.perf_counter() - t0
         self.stats.peak_buffer_bytes = self._ledger.peak
-        return self.stats
+
+    def discover_runs(self) -> int:
+        """Rebuild the run registry from the store's file listing.
+
+        The registry (`reducer → [(run name, length)]`) is engine-local
+        state; an engine that did not run the map phase — a reducer host
+        in a distributed job, or a restarted process resuming after the
+        spills were written — recovers it from the shared namespace by
+        the run-name pattern ``{prefix}/spill/m*-*-r{r:03d}``.  Returns
+        the number of run files found.
+        """
+        cfg = self.cfg
+        spill_prefix = f"{cfg.prefix}/spill/m"
+        found = 0
+        with self._lock:
+            self._runs = {r: [] for r in range(cfg.n_reducers)}
+            for name in self.store.list_files():
+                if not name.startswith(spill_prefix):
+                    continue
+                tail = name.rsplit("-r", 1)
+                if len(tail) != 2 or not tail[1].isdigit():
+                    continue
+                r = int(tail[1])
+                if not 0 <= r < cfg.n_reducers:
+                    continue
+                self._runs[r].append((name, self.store.file_size(name)))
+                found += 1
+        return found
 
     # ------------------------------------------------------------ sampling
 
@@ -543,3 +611,61 @@ class ShuffleEngine:
             with self._lock:
                 self._runs[r] = []
                 self.stats.spills_deleted += len(runs)
+
+
+def place_reducers(
+    n_reducers: int,
+    n_hosts: int,
+    hot_bytes: dict[int, dict[str, int]],
+    host_ids: list[int] | None = None,
+    prefix: str = "shuffle",
+) -> list[int]:
+    """Assign reducers to hosts where their run bytes are already hot.
+
+    ``hot_bytes`` is the distributed store's gossip view
+    (``DistributedStore.cluster_hot_bytes()``).  A reducer's affinity to a
+    host is the sum of hot bytes over that host's run files matching
+    ``{prefix}/spill/m*-*-r{r:03d}`` — with async-writeback spills the
+    mapper host still holds its runs in its memory shard, so the reducer
+    lands where most of its merge input needs no peer or PFS transfer
+    (the shuffle analogue of delay scheduling).  Greedy by descending
+    affinity under a ``ceil(n_reducers / n_hosts)`` balance cap; reducers
+    with no hot runs fill the least-loaded hosts.  Returns ``owners[r]`` =
+    host index, for ``reduce_phase(..., reducers=[r for r in ... if
+    owners[r] == me])``.
+    """
+    if n_hosts <= 0:
+        raise ValueError("n_hosts must be positive")
+    ids = list(range(n_hosts)) if host_ids is None else list(host_ids)
+    if len(ids) != n_hosts:
+        raise ValueError(f"host_ids has {len(ids)} entries for n_hosts={n_hosts}")
+    spill_prefix = f"{prefix}/spill/m"
+    affinity = np.zeros((n_reducers, n_hosts), dtype=np.int64)
+    for h, hid in enumerate(ids):
+        for name, nbytes in hot_bytes.get(hid, {}).items():
+            if not name.startswith(spill_prefix):
+                continue
+            tail = name.rsplit("-r", 1)
+            if len(tail) != 2 or not tail[1].isdigit():
+                continue
+            r = int(tail[1])
+            if 0 <= r < n_reducers:
+                affinity[r, h] += int(nbytes)
+    cap = -(-n_reducers // n_hosts)  # ceil
+    edges = sorted(
+        ((-int(affinity[r, h]), r, h) for r in range(n_reducers) for h in range(n_hosts)),
+    )
+    owners = [-1] * n_reducers
+    load = [0] * n_hosts
+    for neg, r, h in edges:
+        if neg == 0:
+            break
+        if owners[r] == -1 and load[h] < cap:
+            owners[r] = h
+            load[h] += 1
+    for r in range(n_reducers):
+        if owners[r] == -1:
+            h = min(range(n_hosts), key=lambda i: (load[i], i))
+            owners[r] = h
+            load[h] += 1
+    return owners

@@ -7,10 +7,21 @@ Public surface:
 * :mod:`repro.core.layout`    — block <-> stripe layout mapping (Fig. 3).
 * :mod:`repro.core.tiers`     — MemoryTier (Tachyon) / PFSTier (OrangeFS).
 * :mod:`repro.core.store`     — TwoLevelStore with the 3+3 I/O modes (Fig. 4).
+* :mod:`repro.core.dstore`    — DistributedStore: per-host shards, leases, peers.
 * :mod:`repro.core.simulator` — storage mountain + TeraSort phase models.
 """
 
 from repro.core.cluster import ClusterSpec, paper_average_cluster, palmetto_cluster, tpu_v5e_pod
+from repro.core.dstore import (
+    DistributedStore,
+    DStoreStats,
+    GossipBoard,
+    HostRegistry,
+    LeaseLost,
+    LeaseTable,
+    NotOwner,
+    PeerUnreachable,
+)
 from repro.core.layout import BlockLayout, StripeLayout, TwoLevelLayout, paper_layout
 from repro.core.sched import ControllerConfig, IOController, StreamClass
 from repro.core.store import (
@@ -37,9 +48,17 @@ __all__ = [
     "CapacityExceeded",
     "ClusterSpec",
     "ControllerConfig",
+    "DStoreStats",
+    "DistributedStore",
     "EvictionPolicy",
     "FlushError",
+    "GossipBoard",
+    "HostRegistry",
     "IOController",
+    "LeaseLost",
+    "LeaseTable",
+    "NotOwner",
+    "PeerUnreachable",
     "crc32_chunked",
     "IntegrityError",
     "MemoryTier",

@@ -75,11 +75,29 @@ class ClusterSpec:
         return self.n_data * min(self.nic_mbps, self.data_disk_write_mbps)
 
     def with_nodes(self, n_compute: int | None = None, n_data: int | None = None) -> "ClusterSpec":
-        return dataclasses.replace(
+        spec = dataclasses.replace(
             self,
             n_compute=self.n_compute if n_compute is None else n_compute,
             n_data=self.n_data if n_data is None else n_data,
         )
+        # dataclasses.replace() goes through __init__ (and so __post_init__)
+        # today, but the derived spec's validity is this method's contract —
+        # keep the check explicit so a future unfrozen/slots refactor that
+        # mutates in place cannot silently hand out a spec with zero nodes.
+        spec.__post_init__()
+        return spec
+
+    def per_host_spec(self) -> "ClusterSpec":
+        """One host shard's view of this cluster: a single compute node over
+        its fair share of the data servers (at least one).
+
+        This is the calibration a per-host memory shard of the distributed
+        two-level store plans against (DESIGN.md §11): node count scales the
+        aggregate model (Eqs. 1-7) by N, while each shard's admission /
+        readahead decisions see only its own slice of the PFS pool.
+        """
+        share = max(1, round(self.n_data / self.n_compute))
+        return self.with_nodes(n_compute=1, n_data=share)
 
 
 def paper_average_cluster(

@@ -1,0 +1,1002 @@
+"""Distributed two-level store: per-host memory shards, one PFS namespace.
+
+DESIGN.md §11.  The paper's architecture is N compute nodes whose local
+memory tiers (Tachyon) sit over M shared data servers (OrangeFS) — the
+aggregate read rate scales as N·ν while bytes are memory-resident
+(Section 4, Eqs. 1-7).  :class:`DistributedStore` turns the single-process
+:class:`~repro.core.store.TwoLevelStore` into that cluster: every host
+runs one store (its *memory-tier shard*) over the **same** PFS root, and
+three mechanisms coordinate them:
+
+* **Lease-based metadata ownership.**  Each logical file has exactly one
+  owner host.  Ownership is a per-file lease under the shared namespace
+  (``_dstore/leases/``) bound to the owner's heartbeat epoch
+  (``_dstore/hosts/``): the lease is valid while its owner's heartbeat
+  file is unexpired *and* still carries the epoch the lease was claimed
+  under.  A crashed owner stops heartbeating; once its heartbeat expires,
+  any host may **take over** the file (exclusive sidecar lock + atomic
+  rename), bump nothing on the PFS data path — the durable copy was
+  always there — and serve bit-identical bytes.  A stale owner that lost
+  its lease is **fenced**: its next write re-validates the lease and
+  raises :class:`LeaseLost` instead of double-writing (double-owner
+  rejection).
+* **Peer block reads for hot bytes.**  A non-owner reads a file's blocks
+  from the owner's memory tier over a local socket transport when they
+  are hot there (one request per block; the owner answers from
+  ``TwoLevelStore.peek_block`` — zero-copy resident bytes plus the block
+  CRC it already holds).  The CRC is *carried with the transfer*, not
+  recomputed on either side of the wire (DESIGN.md §4's no-extra-pass
+  discipline extends across hosts).  Blocks the owner does not have hot
+  are read from the PFS tier directly (``PFS_BYPASS`` — the paper's read
+  mode (e)), never promoted into the non-owner's shard: residency belongs
+  to the owner.
+* **Writes route through the owner.**  A ``put`` on a non-owner forwards
+  the bytes to the owner, whose store runs its normal write mode — so
+  async write-back coalescing and the adaptive flush lanes (DESIGN.md
+  §10) stay per-owner, and two hosts can never interleave writes to one
+  file's blocks.
+
+**Controller federation.**  Each host periodically publishes its live
+(ν, q, f, per-class footprint) estimates — from its
+:class:`~repro.core.sched.IOController` when one is attached — to the
+gossip board (``_dstore/gossip/``), and ingests peers' into its
+controller (``IOController.note_peer``).  Placement planners consume the
+same board: :func:`repro.data.pipeline.plan_shard_placement` and
+:func:`repro.apps.shuffle.place_reducers` assign shards/reducers to the
+hosts whose shards already hold their bytes hot, which is what makes the
+multihost benchmark's locality phase beat random placement.
+
+Fault injection reuses :class:`repro.runtime.failure.FailureInjector`:
+pass one to :class:`DistributedStore` and every public data-plane op
+counts as a step — a configured step raises ``SimulatedFailure`` mid-op,
+which the takeover tests turn into a hard process death.
+
+All coordination state lives under ``<pfs_root>/_dstore/`` — the PFS
+tree *is* the one shared namespace, exactly as the paper's OrangeFS
+deployment is the only thing its Tachyon instances share.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import socket
+import struct
+import threading
+import time
+
+from repro.core.store import ReadMode, TwoLevelStore, WriteMode
+from repro.core.tiers import BlockNotFound, TierError
+
+__all__ = [
+    "DistributedStore",
+    "HostRegistry",
+    "LeaseTable",
+    "LeaseInfo",
+    "GossipBoard",
+    "LeaseLost",
+    "NotOwner",
+    "PeerUnreachable",
+    "DStoreStats",
+]
+
+
+class LeaseLost(TierError):
+    """A host acted as owner of a file whose lease it no longer holds."""
+
+
+class NotOwner(TierError):
+    """The operation requires ownership this host does not have and
+    cannot take over (the current owner is still live)."""
+
+
+class PeerUnreachable(TierError):
+    """The owner host did not answer on the peer transport."""
+
+
+def _safe(name: str) -> str:
+    # Same convention as PFSTier._safe: store names never organically
+    # contain "__" or "@", so the mapping is invertible.
+    return name.replace(os.sep, "__").replace(":", "@")
+
+
+def _atomic_write(path: str, payload: dict) -> None:
+    tmp = f"{path}.tmp.{os.getpid()}.{threading.get_ident()}"
+    with open(tmp, "w") as fh:
+        json.dump(payload, fh)
+    os.replace(tmp, path)  # atomic: readers see old or new, never partial
+
+
+def _read_json(path: str) -> dict | None:
+    try:
+        with open(path) as fh:
+            return json.load(fh)
+    except (FileNotFoundError, json.JSONDecodeError):
+        # A decode error means we raced a non-atomic writer from a foreign
+        # build; treat as absent — every writer here is atomic-rename.
+        return None
+
+
+# --------------------------------------------------------------------- hosts
+
+
+class HostRegistry:
+    """Heartbeat files: one JSON per host under ``_dstore/hosts/``.
+
+    A host's liveness record is ``{host, addr, epoch, expires}``; a renew
+    thread refreshes ``expires`` every ``ttl/3``.  ``epoch`` increases
+    across incarnations of the same host id, which is what binds leases to
+    *this* run of the owner: a restarted owner has a new epoch, so every
+    lease claimed under the old one is immediately invalid (its memory
+    tier is empty anyway — the durable copies are on the PFS tier).
+    """
+
+    def __init__(self, root: str, host_id: int, ttl_s: float = 5.0) -> None:
+        self.dir = os.path.join(root, "_dstore", "hosts")
+        os.makedirs(self.dir, exist_ok=True)
+        self.host_id = host_id
+        self.ttl_s = ttl_s
+        prev = _read_json(self._path(host_id))
+        self.epoch = int(prev["epoch"]) + 1 if prev else 1
+        self.addr: str = ""
+        self._stop = threading.Event()
+        self._thread: threading.Thread | None = None
+        self._renew_hooks: list = []  # callables run on every renew tick
+
+    def _path(self, host_id: int) -> str:
+        return os.path.join(self.dir, f"h{host_id:04d}.json")
+
+    def publish(self, addr: str) -> None:
+        self.addr = addr
+        self.renew()
+
+    def renew(self) -> None:
+        _atomic_write(
+            self._path(self.host_id),
+            {
+                "host": self.host_id,
+                "addr": self.addr,
+                "epoch": self.epoch,
+                "expires": time.time() + self.ttl_s,
+            },
+        )
+
+    def start(self) -> None:
+        def loop() -> None:
+            while not self._stop.wait(self.ttl_s / 3.0):
+                self.renew()
+                for hook in list(self._renew_hooks):
+                    try:
+                        hook()
+                    except Exception:
+                        pass  # gossip is best-effort; the heartbeat must live
+
+        self._thread = threading.Thread(target=loop, daemon=True, name="dstore-heartbeat")
+        self._thread.start()
+
+    def stop(self) -> None:
+        """Stop heartbeating (tests use this to simulate a silent host)."""
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=5)
+            self._thread = None
+
+    def lookup(self, host_id: int) -> dict | None:
+        return _read_json(self._path(host_id))
+
+    def live(self, host_id: int, now: float | None = None) -> dict | None:
+        """The host's record if its heartbeat is unexpired, else ``None``."""
+        rec = self.lookup(host_id)
+        if rec is None:
+            return None
+        return rec if (now or time.time()) < rec.get("expires", 0.0) else None
+
+    def hosts(self) -> list[dict]:
+        out = []
+        for fn in sorted(os.listdir(self.dir)):
+            if fn.endswith(".json"):
+                rec = _read_json(os.path.join(self.dir, fn))
+                if rec is not None:
+                    out.append(rec)
+        return out
+
+
+# -------------------------------------------------------------------- leases
+
+
+@dataclasses.dataclass(frozen=True)
+class LeaseInfo:
+    name: str
+    owner: int
+    epoch: int  # the owner's heartbeat epoch at claim time
+
+
+class LeaseTable:
+    """Per-file ownership leases under the shared namespace.
+
+    A lease file ``_dstore/leases/<safe>.lease`` holds ``{owner, epoch}``.
+    Validity is derived, not stored: the lease stands while its owner's
+    heartbeat is live *and* carries the claimed epoch — so one heartbeat
+    renewal keeps every lease a host holds alive (no per-file renewal
+    traffic), and one missed expiry invalidates them all at once.
+
+    * **Claim** (unowned file) — exclusive create via ``os.link`` of a
+      unique temp file onto the lease path: exactly one concurrent
+      claimant wins, the rest see ``FileExistsError``.
+    * **Takeover** (dead owner) — guarded by an exclusive sidecar
+      ``.lock`` (O_CREAT|O_EXCL); inside it the taker re-validates that
+      the lease is actually orphaned, then atomically replaces it.  A
+      lock left by a taker that died mid-takeover is broken after
+      ``ttl``.
+    * **Fencing** — ``check(name)`` re-reads the lease; an owner whose
+      lease was taken over (or whose own heartbeat lapsed) gets
+      :class:`LeaseLost` before any bytes move (double-owner rejection).
+    """
+
+    def __init__(self, root: str, registry: HostRegistry) -> None:
+        self.dir = os.path.join(root, "_dstore", "leases")
+        os.makedirs(self.dir, exist_ok=True)
+        self.registry = registry
+
+    def _path(self, name: str) -> str:
+        return os.path.join(self.dir, _safe(name) + ".lease")
+
+    def read(self, name: str) -> LeaseInfo | None:
+        rec = _read_json(self._path(name))
+        if rec is None:
+            return None
+        return LeaseInfo(name=name, owner=int(rec["owner"]), epoch=int(rec["epoch"]))
+
+    def valid(self, info: LeaseInfo | None, now: float | None = None) -> bool:
+        """A lease stands iff its owner heartbeats with the claimed epoch."""
+        if info is None:
+            return False
+        rec = self.registry.live(info.owner, now)
+        return rec is not None and int(rec.get("epoch", -1)) == info.epoch
+
+    def claim(self, name: str) -> LeaseInfo:
+        """Claim an unowned (or orphaned) file for this host.
+
+        Returns the resulting lease — which may name *another* host if it
+        won a concurrent claim; callers must check ``owner``.
+        """
+        path = self._path(name)
+        me = LeaseInfo(name=name, owner=self.registry.host_id, epoch=self.registry.epoch)
+        existing = self.read(name)
+        if existing is not None and self.valid(existing):
+            return existing
+        if existing is None:
+            tmp = f"{path}.claim.{me.owner}.{os.getpid()}"
+            _atomic_write(tmp, {"owner": me.owner, "epoch": me.epoch})
+            try:
+                os.link(tmp, path)  # exclusive: exactly one claimant wins
+                return me
+            except FileExistsError:
+                won = self.read(name)
+                return won if won is not None else self.claim(name)
+            finally:
+                os.unlink(tmp)
+        return self._takeover(name, existing)
+
+    def _takeover(self, name: str, stale: LeaseInfo) -> LeaseInfo:
+        """Replace an orphaned lease under the exclusive sidecar lock."""
+        path = self._path(name)
+        lock = path + ".lock"
+        try:
+            fd = os.open(lock, os.O_CREAT | os.O_EXCL | os.O_WRONLY)
+            os.close(fd)
+        except FileExistsError:
+            # Another taker is mid-takeover.  Break its lock only if it is
+            # older than the heartbeat ttl (the taker died inside).
+            try:
+                age = time.time() - os.path.getmtime(lock)
+            except FileNotFoundError:
+                return self.claim(name)
+            if age <= self.registry.ttl_s:
+                won = self.read(name)
+                return won if won is not None else self.claim(name)
+            try:
+                os.unlink(lock)
+            except FileNotFoundError:
+                pass
+            return self.claim(name)
+        try:
+            current = self.read(name)
+            if current is not None and (current != stale or self.valid(current)):
+                return current  # someone else already took it over / owner revived
+            me = LeaseInfo(name=name, owner=self.registry.host_id, epoch=self.registry.epoch)
+            _atomic_write(path, {"owner": me.owner, "epoch": me.epoch})
+            return me
+        finally:
+            try:
+                os.unlink(lock)
+            except FileNotFoundError:
+                pass
+
+    def check(self, name: str) -> None:
+        """Fencing: raise :class:`LeaseLost` unless this host validly owns
+        ``name`` right now (the double-owner rejection point)."""
+        info = self.read(name)
+        if (
+            info is None
+            or info.owner != self.registry.host_id
+            or info.epoch != self.registry.epoch
+            or not self.valid(info)
+        ):
+            raise LeaseLost(
+                f"host {self.registry.host_id} no longer owns {name!r} "
+                f"(lease: {info})"
+            )
+
+    def release(self, name: str) -> None:
+        """Drop this host's lease (no-op if not held)."""
+        info = self.read(name)
+        if info is not None and info.owner == self.registry.host_id:
+            try:
+                os.unlink(self._path(name))
+            except FileNotFoundError:
+                pass
+
+    def owned(self) -> list[str]:
+        out = []
+        for fn in os.listdir(self.dir):
+            if not fn.endswith(".lease"):
+                continue
+            rec = _read_json(os.path.join(self.dir, fn))
+            if rec is not None and int(rec["owner"]) == self.registry.host_id:
+                out.append(fn[: -len(".lease")].replace("@", ":").replace("__", os.sep))
+        return out
+
+
+# -------------------------------------------------------------------- gossip
+
+
+class GossipBoard:
+    """Per-host estimate files under ``_dstore/gossip/`` — the federation
+    plane.  Each host publishes ``{host, time, nu, q, f, classes, hot}``
+    (controller estimates when an :class:`IOController` is attached, tier
+    ledgers otherwise); peers read the board to plan capacity per host and
+    to place work where bytes are already hot (``hot`` maps owned file →
+    resident bytes, top-``hot_limit`` by residency)."""
+
+    def __init__(self, root: str, host_id: int, hot_limit: int = 256) -> None:
+        self.dir = os.path.join(root, "_dstore", "gossip")
+        os.makedirs(self.dir, exist_ok=True)
+        self.host_id = host_id
+        self.hot_limit = hot_limit
+
+    def publish(self, payload: dict) -> None:
+        hot = payload.get("hot")
+        if hot and len(hot) > self.hot_limit:
+            top = sorted(hot.items(), key=lambda kv: (-kv[1], kv[0]))[: self.hot_limit]
+            payload = dict(payload, hot=dict(top))
+        _atomic_write(
+            os.path.join(self.dir, f"h{self.host_id:04d}.json"),
+            dict(payload, host=self.host_id, time=time.time()),
+        )
+
+    def peers(self, include_self: bool = False) -> dict[int, dict]:
+        out: dict[int, dict] = {}
+        for fn in sorted(os.listdir(self.dir)):
+            if not fn.endswith(".json"):
+                continue
+            rec = _read_json(os.path.join(self.dir, fn))
+            if rec is None:
+                continue
+            host = int(rec.get("host", -1))
+            if host >= 0 and (include_self or host != self.host_id):
+                out[host] = rec
+        return out
+
+    def hot_bytes(self) -> dict[int, dict[str, int]]:
+        """host -> {file name -> hot (memory-resident) bytes} over the board."""
+        return {
+            host: {str(k): int(v) for k, v in rec.get("hot", {}).items()}
+            for host, rec in self.peers(include_self=True).items()
+        }
+
+
+# ----------------------------------------------------------- peer transport
+
+
+def _recv_exact(sock: socket.socket, n: int) -> bytes:
+    buf = bytearray(n)
+    view = memoryview(buf)
+    pos = 0
+    while pos < n:
+        got = sock.recv_into(view[pos:], n - pos)
+        if not got:
+            raise ConnectionError("peer closed mid-message")
+        pos += got
+    return bytes(buf)
+
+
+def _send_msg(sock: socket.socket, header: dict, payload=b"") -> None:
+    h = json.dumps(header).encode()
+    # Prefix and header in one segment: a 8-byte write followed by a small
+    # header write Nagle-stalls on the unacked first segment (~40 ms of
+    # delayed ACK per request on loopback).  The bulk payload goes out
+    # separately so it is never copied.
+    sock.sendall(struct.pack(">II", len(h), len(payload)) + h)
+    if len(payload):
+        sock.sendall(payload)
+
+
+def _recv_msg(sock: socket.socket) -> tuple[dict, bytes]:
+    hlen, plen = struct.unpack(">II", _recv_exact(sock, 8))
+    header = json.loads(_recv_exact(sock, hlen))
+    payload = _recv_exact(sock, plen) if plen else b""
+    return header, payload
+
+
+class _PeerServer:
+    """Block/metadata server for one host shard (loopback TCP).
+
+    Serves: ``read_block`` (hot bytes + carried CRC, or a miss), ``put``
+    (the forwarded-write path — runs the owner's write mode after a lease
+    fencing check), ``delete``, ``size``, ``ping``.  One thread per
+    connection; connections are long-lived (a peer keeps one open).
+    """
+
+    def __init__(self, dstore: "DistributedStore") -> None:
+        self._d = dstore
+        self._sock = socket.create_server(("127.0.0.1", 0))
+        self.addr = "{}:{}".format(*self._sock.getsockname())
+        self._stop = threading.Event()
+        self._accept = threading.Thread(target=self._accept_loop, daemon=True,
+                                        name="dstore-peer-accept")
+        self._accept.start()
+
+    def _accept_loop(self) -> None:
+        while not self._stop.is_set():
+            try:
+                conn, _ = self._sock.accept()
+            except OSError:
+                return  # socket closed
+            conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            threading.Thread(target=self._serve, args=(conn,), daemon=True,
+                             name="dstore-peer-conn").start()
+
+    def _serve(self, conn: socket.socket) -> None:
+        with conn:
+            while not self._stop.is_set():
+                try:
+                    header, payload = _recv_msg(conn)
+                except (ConnectionError, OSError, struct.error):
+                    return
+                try:
+                    resp, out = self._dispatch(header, payload)
+                except LeaseLost as exc:
+                    resp, out = {"ok": False, "err": "lease-lost", "msg": str(exc)}, b""
+                except (TierError, KeyError, ValueError) as exc:
+                    resp, out = {"ok": False, "err": type(exc).__name__, "msg": str(exc)}, b""
+                try:
+                    _send_msg(conn, resp, out)
+                except OSError:
+                    return
+
+    def _dispatch(self, header: dict, payload: bytes) -> tuple[dict, bytes]:
+        d = self._d
+        op = header.get("op")
+        if op == "ping":
+            return {"ok": True, "host": d.host_id}, b""
+        if op == "read_block":
+            hit = d.store.peek_block(header["name"], int(header["idx"]))
+            if hit is None:
+                return {"ok": True, "hot": False}, b""
+            blob, crc = hit
+            with d._stats_lock:
+                d.stats.peer_blocks_served += 1
+                d.stats.peer_bytes_served += len(blob)
+            return {"ok": True, "hot": True, "crc": crc}, blob
+        if op == "put":
+            name = header["name"]
+            d.leases.check(name)  # fencing: refuse if ownership moved
+            mode = WriteMode(header["mode"]) if header.get("mode") else None
+            d.store.put(name, payload, mode=mode)
+            with d._stats_lock:
+                d.stats.forwarded_puts_served += 1
+            return {"ok": True}, b""
+        if op == "delete":
+            name = header["name"]
+            d.leases.check(name)
+            found = d.store.delete(name)
+            d.leases.release(name)
+            d._owned.discard(name)
+            return {"ok": True, "found": found}, b""
+        if op == "size":
+            return {"ok": True, "size": d.store.file_size(header["name"])}, b""
+        return {"ok": False, "err": "bad-op", "msg": str(op)}, b""
+
+    def close(self) -> None:
+        self._stop.set()
+        try:
+            self._sock.close()
+        except OSError:
+            pass
+
+
+class _PeerClient:
+    """One persistent connection to a peer host (requests serialized)."""
+
+    def __init__(self, addr: str) -> None:
+        host, port = addr.rsplit(":", 1)
+        self.addr = addr
+        self._lock = threading.Lock()
+        try:
+            self._sock = socket.create_connection((host, int(port)), timeout=10.0)
+            self._sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        except OSError as exc:
+            raise PeerUnreachable(f"connect {addr}: {exc}") from exc
+
+    def request(self, header: dict, payload=b"") -> tuple[dict, bytes]:
+        with self._lock:
+            try:
+                _send_msg(self._sock, header, payload)
+                return _recv_msg(self._sock)
+            except (OSError, ConnectionError, struct.error) as exc:
+                try:
+                    self._sock.close()
+                finally:
+                    raise PeerUnreachable(f"request to {self.addr}: {exc}") from exc
+
+    def close(self) -> None:
+        try:
+            self._sock.close()
+        except OSError:
+            pass
+
+
+# --------------------------------------------------------------------- stats
+
+
+@dataclasses.dataclass
+class DStoreStats:
+    local_reads: int = 0
+    local_read_bytes: int = 0
+    peer_hot_blocks: int = 0  # blocks this host fetched from a peer's tier
+    peer_hot_bytes: int = 0
+    peer_cold_blocks: int = 0  # blocks read from the PFS tier directly
+    peer_cold_bytes: int = 0
+    peer_blocks_served: int = 0  # blocks this host served to others
+    peer_bytes_served: int = 0
+    forwarded_puts: int = 0  # writes this host routed to an owner
+    forwarded_puts_served: int = 0  # writes this host performed for others
+    lease_claims: int = 0
+    takeovers: int = 0
+    lease_lost: int = 0
+
+    def peer_hot_fraction(self) -> float:
+        """Of remotely-owned bytes this host read, the fraction served hot
+        from the owner's memory shard (vs cold from the PFS tier)."""
+        total = self.peer_hot_bytes + self.peer_cold_bytes
+        return self.peer_hot_bytes / total if total else 0.0
+
+
+# ----------------------------------------------------------------- the store
+
+
+class DistributedStore:
+    """One host shard of the distributed two-level store.
+
+    Wraps a local :class:`TwoLevelStore` (this host's memory tier + the
+    shared PFS tree) and routes every op by file ownership: owned files
+    use the full local data path; remote files read hot bytes from the
+    owner's shard (carried CRC, no wire re-verify) and cold bytes from
+    the PFS tier directly, and forward writes to the owner.  Files with
+    no (valid) lease are claimed on first write — or taken over on any
+    access once their owner's heartbeat expires.
+
+    Every host must be constructed with the same block/stripe geometry;
+    the first host records it in ``_dstore/config.json`` and later hosts
+    refuse to join with a mismatch (a peer-read block is only meaningful
+    if both sides agree what a block is).
+    """
+
+    def __init__(
+        self,
+        host_id: int,
+        pfs_root: str,
+        mem_capacity_bytes: int = 1 << 30,
+        lease_ttl_s: float = 5.0,
+        failure=None,  # runtime.failure.FailureInjector | None
+        controller=None,  # sched.IOController | None (bound to the local store)
+        gossip_hot_limit: int = 256,
+        auto_gossip: bool = True,
+        **store_kwargs,
+    ) -> None:
+        self.host_id = host_id
+        self.root = pfs_root
+        os.makedirs(os.path.join(pfs_root, "_dstore"), exist_ok=True)
+        self.store = TwoLevelStore(
+            pfs_root,
+            mem_capacity_bytes=mem_capacity_bytes,
+            controller=controller,
+            **store_kwargs,
+        )
+        self._check_config()
+        self.failure = failure
+        self._op = 0
+        self.stats = DStoreStats()
+        self._stats_lock = threading.Lock()
+        self._owned: set[str] = set()
+        self._owner_cache: dict[str, tuple[float, LeaseInfo | None]] = {}
+        self._owner_cache_ttl = min(0.25, lease_ttl_s / 4.0)
+        self._peers: dict[str, _PeerClient] = {}
+        self._peers_lock = threading.Lock()
+
+        self.registry = HostRegistry(pfs_root, host_id, ttl_s=lease_ttl_s)
+        self.leases = LeaseTable(pfs_root, self.registry)
+        self.gossip = GossipBoard(pfs_root, host_id, hot_limit=gossip_hot_limit)
+        self.server = _PeerServer(self)
+        self.registry.publish(self.server.addr)
+        if auto_gossip:
+            self.registry._renew_hooks.append(self.publish_gossip)
+        self.registry.start()
+        self._closed = False
+
+    # ------------------------------------------------------------ plumbing
+
+    def _check_config(self) -> None:
+        path = os.path.join(self.root, "_dstore", "config.json")
+        mine = {
+            "block_bytes": self.store.layout.block_size,
+            "n_pfs_servers": self.store.pfs.n_servers,
+            "stripe_bytes": self.store.pfs.stripe_bytes,
+        }
+        existing = _read_json(path)
+        if existing is None:
+            _atomic_write(path, mine)
+            existing = _read_json(path) or mine
+        if existing != mine:
+            self.store.close()
+            raise ValueError(
+                f"host geometry {mine} differs from the namespace's {existing} — "
+                "all shards of one distributed store must agree on block/stripe layout"
+            )
+
+    def _step(self) -> None:
+        """Fault-injection hook: each public data-plane op is one step."""
+        if self.failure is not None:
+            self._op += 1
+            self.failure.maybe_fail(self._op)
+
+    def owner_of(self, name: str, fresh: bool = False) -> LeaseInfo | None:
+        """The file's current lease (cached briefly; ``fresh`` forces a read)."""
+        now = time.monotonic()
+        if not fresh:
+            hit = self._owner_cache.get(name)
+            if hit is not None and now - hit[0] < self._owner_cache_ttl:
+                return hit[1]
+        info = self.leases.read(name)
+        self._owner_cache[name] = (now, info)
+        return info
+
+    def _peer(self, host_id: int) -> _PeerClient:
+        rec = self.registry.live(host_id)
+        if rec is None or not rec.get("addr"):
+            raise PeerUnreachable(f"host {host_id} has no live heartbeat")
+        addr = rec["addr"]
+        with self._peers_lock:
+            client = self._peers.get(addr)
+            if client is None:
+                client = self._peers[addr] = _PeerClient(addr)
+            return client
+
+    def _drop_peer(self, client: _PeerClient) -> None:
+        with self._peers_lock:
+            self._peers.pop(client.addr, None)
+        client.close()
+
+    def _ensure_owned(self, name: str) -> None:
+        """Claim/validate ownership of ``name`` for this host, taking over
+        an orphaned lease if its owner is gone.  Raises :class:`NotOwner`
+        if a *live* peer owns it."""
+        info = self.owner_of(name, fresh=True)
+        if info is not None and info.owner == self.host_id:
+            self.leases.check(name)  # also catches our own stale epoch
+            self._owned.add(name)
+            return
+        if info is not None and self.leases.valid(info):
+            raise NotOwner(f"{name!r} is owned by live host {info.owner}")
+        took_over = info is not None
+        won = self.leases.claim(name)
+        self._owner_cache[name] = (time.monotonic(), won)
+        if won.owner != self.host_id:
+            raise NotOwner(f"{name!r} was claimed concurrently by host {won.owner}")
+        self._owned.add(name)
+        with self._stats_lock:
+            self.stats.lease_claims += 1
+            if took_over:
+                self.stats.takeovers += 1
+        if took_over:
+            # The dead owner's bytes are durable only on the PFS tier from
+            # this host's view; adopt them into the block path so reads
+            # promote into the new owner's memory shard.
+            self.store.adopt_cold(name)
+
+    # ---------------------------------------------------------- write path
+
+    def put(self, name: str, data, mode: WriteMode | None = None) -> None:
+        """Write a file through its owner's flush lanes.
+
+        Owned (or unowned) files run the local store's write path; files
+        owned by a live peer are forwarded over the transport and written
+        by the owner under its own write mode and lease check.  A dead
+        owner's files are taken over first — the new owner's write then
+        supersedes whatever the dead shard never flushed (the durable
+        contract was always the PFS copy).
+        """
+        self._step()
+        info = self.owner_of(name, fresh=True)
+        if info is not None and info.owner != self.host_id and self.leases.valid(info):
+            if name in self._owned:
+                # Double-owner rejection: this host held the lease and lost
+                # it (crash takeover while it was silent).  Its first write
+                # afterwards must fail loudly — its unflushed shard state is
+                # superseded — rather than silently racing the new owner.
+                self._owned.discard(name)
+                with self._stats_lock:
+                    self.stats.lease_lost += 1
+                raise LeaseLost(
+                    f"host {self.host_id} lost the lease on {name!r} to "
+                    f"host {info.owner}"
+                )
+            self._forward_put(info, name, data, mode)
+            return
+        self._ensure_owned(name)
+        self.store.put(name, data, mode=mode)
+        try:
+            # Fencing check *after* the write too: if the lease moved while
+            # bytes were in flight the caller must learn its copy may be
+            # superseded.  (Check-then-write keeps the common path cheap.)
+            self.leases.check(name)
+        except LeaseLost:
+            with self._stats_lock:
+                self.stats.lease_lost += 1
+            raise
+
+    def _forward_put(self, info: LeaseInfo, name: str, data, mode: WriteMode | None) -> None:
+        client = self._peer(info.owner)
+        try:
+            header = {"op": "put", "name": name, "mode": mode.value if mode else None}
+            resp, _ = client.request(header, bytes(data))
+        except PeerUnreachable:
+            self._drop_peer(client)
+            # Owner died between the lease read and the send: retry via the
+            # takeover path if (and only if) its heartbeat has lapsed.
+            if self.leases.valid(self.owner_of(name, fresh=True)):
+                raise
+            self._ensure_owned(name)
+            self.store.put(name, data, mode=mode)
+            return
+        if not resp.get("ok"):
+            if resp.get("err") == "lease-lost":
+                with self._stats_lock:
+                    self.stats.lease_lost += 1
+                raise LeaseLost(resp.get("msg", name))
+            raise TierError(f"forwarded put of {name!r} failed: {resp}")
+        with self._stats_lock:
+            self.stats.forwarded_puts += 1
+
+    def delete(self, name: str) -> bool:
+        self._step()
+        info = self.owner_of(name, fresh=True)
+        if info is not None and info.owner != self.host_id and self.leases.valid(info):
+            client = self._peer(info.owner)
+            resp, _ = client.request({"op": "delete", "name": name})
+            if not resp.get("ok"):
+                raise TierError(f"forwarded delete of {name!r} failed: {resp}")
+            self._owner_cache.pop(name, None)
+            return bool(resp.get("found"))
+        self._ensure_owned(name)
+        found = self.store.delete(name)
+        self.leases.release(name)
+        self._owned.discard(name)
+        self._owner_cache.pop(name, None)
+        return found
+
+    # ----------------------------------------------------------- read path
+
+    def get(self, name: str) -> bytes:
+        """Read a whole file from the nearest copies.
+
+        Owner: the local tiered path (memory hit → ν, miss → PFS).
+        Non-owner with a live peer: per-block peer reads for bytes hot in
+        the owner's shard (CRC carried with each transfer), PFS-direct
+        for the rest — never promoting into this host's tier.
+        Orphaned file: take over the lease, then read locally (cold bytes
+        come off the PFS tier bit-identically — that is the takeover
+        correctness the multihost benchmark gates).
+        """
+        self._step()
+        info = self.owner_of(name)
+        if info is None or info.owner == self.host_id:
+            if info is None and not self.store.exists(name):
+                raise BlockNotFound(name)
+            data = self.store.get(name)
+            with self._stats_lock:
+                self.stats.local_reads += 1
+                self.stats.local_read_bytes += len(data)
+            return data
+        if self.leases.valid(info):
+            try:
+                return self._remote_get(info, name)
+            except PeerUnreachable:
+                pass  # live heartbeat but dead socket: fall through to cold
+            return self._cold_get(name)
+        # Orphaned: the owner's heartbeat lapsed — take the file over.
+        self._ensure_owned(name)
+        data = self.store.get(name)
+        with self._stats_lock:
+            self.stats.local_reads += 1
+            self.stats.local_read_bytes += len(data)
+        return data
+
+    def get_range(self, name: str, offset: int, size: int) -> bytes:
+        """Ranged read with the same routing as :meth:`get` (owner-local
+        ranged path; non-owners read the covering blocks hot-or-cold)."""
+        self._step()
+        info = self.owner_of(name)
+        if info is None or info.owner == self.host_id or not self.leases.valid(info):
+            if info is not None and info.owner != self.host_id:
+                self._ensure_owned(name)  # orphaned: takeover, then local
+            return self.store.get_range(name, offset, size)
+        total = self.file_size(name)
+        end = min(offset + size, total)
+        if end <= offset:
+            return b""
+        bb = self.store.layout.block_size
+        parts = []
+        for idx in range(offset // bb, (end - 1) // bb + 1):
+            blk = self._remote_block(info, name, idx, min(bb, total - idx * bb))
+            lo = max(offset, idx * bb) - idx * bb
+            hi = min(end, (idx + 1) * bb) - idx * bb
+            parts.append(blk[lo:hi])
+        return b"".join(parts)
+
+    def _remote_get(self, info: LeaseInfo, name: str) -> bytes:
+        total = self._remote_size(info, name)
+        bb = self.store.layout.block_size
+        n_blocks = (total + bb - 1) // bb
+        parts = [
+            self._remote_block(info, name, i, min(bb, total - i * bb))
+            for i in range(n_blocks)
+        ]
+        return b"".join(parts)
+
+    def _remote_block(self, info: LeaseInfo, name: str, idx: int, blen: int) -> bytes:
+        """One block of a remotely-owned file: owner's memory shard first
+        (hot bytes + carried CRC), the shared PFS tier second."""
+        client = self._peer(info.owner)
+        try:
+            resp, payload = client.request({"op": "read_block", "name": name, "idx": idx})
+        except PeerUnreachable:
+            self._drop_peer(client)
+            raise
+        if resp.get("ok") and resp.get("hot"):
+            # CRC carried with the transfer — recorded, not recomputed
+            # (no re-verify on the wire path; see DESIGN.md §11).
+            with self._stats_lock:
+                self.stats.peer_hot_blocks += 1
+                self.stats.peer_hot_bytes += len(payload)
+            return payload
+        data = self.store.get_range(
+            name, idx * self.store.layout.block_size, blen, mode=ReadMode.PFS_BYPASS
+        )
+        with self._stats_lock:
+            self.stats.peer_cold_blocks += 1
+            self.stats.peer_cold_bytes += len(data)
+        return data
+
+    def _remote_size(self, info: LeaseInfo, name: str) -> int:
+        client = self._peer(info.owner)
+        try:
+            resp, _ = client.request({"op": "size", "name": name})
+        except PeerUnreachable:
+            self._drop_peer(client)
+            raise
+        if not resp.get("ok"):
+            raise BlockNotFound(name)
+        return int(resp["size"])
+
+    def _cold_get(self, name: str) -> bytes:
+        """Whole-file read straight off the shared PFS tier (read mode (e)
+        — no promotion into this non-owner's shard)."""
+        data = self.store.get(name, mode=ReadMode.PFS_BYPASS)
+        with self._stats_lock:
+            self.stats.peer_cold_blocks += 1
+            self.stats.peer_cold_bytes += len(data)
+        return data
+
+    # -------------------------------------------------------------- manage
+
+    def claim(self, name: str) -> None:
+        """Explicitly take ownership of ``name`` (placement pre-claims files
+        on the host that will write/serve them)."""
+        self._step()
+        self._ensure_owned(name)
+
+    def exists(self, name: str) -> bool:
+        return self.store.exists(name)
+
+    def file_size(self, name: str) -> int:
+        info = self.owner_of(name)
+        if info is not None and info.owner != self.host_id and self.leases.valid(info):
+            try:
+                return self._remote_size(info, name)
+            except PeerUnreachable:
+                pass
+        return self.store.file_size(name)
+
+    def owned_files(self) -> list[str]:
+        return sorted(self._owned)
+
+    # ---------------------------------------------------------- federation
+
+    def publish_gossip(self) -> None:
+        """Publish this shard's estimates + hot map; ingest every peer's.
+
+        With a controller attached the payload is its
+        ``export_estimates()`` (live ν/q/f + per-class footprints) and
+        ingest feeds ``note_peer`` — the controller's capacity plan then
+        sees the whole federation.  Without one, tier ledgers stand in so
+        placement planners still get a hot map.
+        """
+        ctrl = self.store.controller
+        if ctrl is not None:
+            payload = ctrl.export_estimates()
+        else:
+            mem = self.store.mem.stats
+            pfs = self.store.pfs.stats
+            payload = {
+                "nu_mbps": mem.aggregate_read_mbps(),
+                "q_read_mbps": pfs.aggregate_read_mbps(),
+                "q_write_mbps": pfs.aggregate_write_mbps(),
+                "f": self.store.resident_fraction(),
+                "classes": {},
+            }
+        hot: dict[str, int] = {}
+        for name in list(self._owned):
+            try:
+                size = self.store.file_size(name)
+            except (BlockNotFound, TierError):
+                continue
+            resident = self.store.resident_fraction(name)
+            if resident > 0:
+                hot[name] = int(resident * size)
+        payload = dict(payload, hot=hot, addr=self.server.addr)
+        self.gossip.publish(payload)
+        if ctrl is not None:
+            for host, rec in self.gossip.peers().items():
+                ctrl.note_peer(host, rec)
+
+    def cluster_hot_bytes(self) -> dict[int, dict[str, int]]:
+        """host -> {file -> hot bytes} over the gossip board (placement input)."""
+        return self.gossip.hot_bytes()
+
+    # --------------------------------------------------------------- stats
+
+    def tier_stats(self) -> dict[str, dict]:
+        out = self.store.tier_stats()
+        out["dstore"] = dataclasses.asdict(self.stats)
+        return out
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        self.registry.stop()
+        self.server.close()
+        with self._peers_lock:
+            for client in self._peers.values():
+                client.close()
+            self._peers.clear()
+        self.store.close()
+
+    def __enter__(self) -> "DistributedStore":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

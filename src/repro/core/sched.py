@@ -201,6 +201,10 @@ class IOController:
         self.class_stats: dict[StreamClass, ClassStats] = {
             c: ClassStats() for c in StreamClass
         }
+        # Controller federation (DESIGN.md §11): peer host estimates ingested
+        # from the gossip plane — host id -> (ingest wall time, estimates
+        # dict as produced by export_estimates()).
+        self.peer_estimates: dict[object, tuple[float, dict]] = {}
         self._readahead: dict[StreamClass, int] = {}
         self.readahead_trajectory: deque[tuple[float, str, int]] = deque(
             maxlen=self.cfg.trajectory_len
@@ -513,6 +517,68 @@ class IOController:
         cls = self.classify(name)
         depth = self._readahead.get(cls)
         return default if depth is None else depth
+
+    # ---------------------------------------------------------- federation
+
+    def export_estimates(self) -> dict:
+        """This host's gossip payload: the live (ν, q, f) analogues plus the
+        per-class footprint the capacity plan is working against.
+
+        Hosts of a distributed store exchange these (DESIGN.md §11) so each
+        controller can plan capacity *per host* — Eq. 7 is per memory tier,
+        and the cluster aggregate is the sum of the per-host blends.
+        """
+        with self._lock:
+            classes = {
+                cls.value: {
+                    "footprint_bytes": cs.footprint_bytes,
+                    "resident_bytes": cs.resident_bytes,
+                    "target_f": cs.target_f,
+                }
+                for cls, cs in self.class_stats.items()
+                if cs.footprint_bytes
+            }
+        return {
+            "nu_mbps": self.nu_mbps,
+            "q_read_mbps": self.q_read_mbps,
+            "q_write_mbps": self.q_write_mbps,
+            "demand_read_mbps": self.demand_read_mbps,
+            "f": self.measured_f(),
+            "memory_pressure": self.memory_pressure,
+            "classes": classes,
+        }
+
+    def note_peer(self, host, estimates: dict) -> None:
+        """Ingest one peer host's gossiped estimates (latest wins)."""
+        with self._lock:
+            self.peer_estimates[host] = (time.perf_counter(), estimates)
+
+    def cluster_read_mbps(self, max_age_s: float = 30.0) -> float:
+        """Eq. 7 summed over this host and every fresh peer: the modeled
+        aggregate read rate of the whole distributed store — the paper's
+        N·ν limit when every shard's ``f`` is 1."""
+        total = self.predicted_read_mbps()
+        now = time.perf_counter()
+        with self._lock:
+            peers = list(self.peer_estimates.values())
+        for seen, est in peers:
+            if now - seen > max_age_s:
+                continue
+            nu = max(est.get("nu_mbps", 0.0), est.get("q_read_mbps", 0.0), 1e-9)
+            q = max(est.get("q_read_mbps", 0.0), 1e-9)
+            total += blend_read_mbps(nu, q, min(1.0, max(0.0, est.get("f", 0.0))))
+        return total
+
+    def cluster_report(self) -> dict:
+        """Per-host plan view over the federation: own + peer estimates and
+        the modeled aggregate (for placement planners and observability)."""
+        with self._lock:
+            peers = {str(h): dict(est) for h, (_, est) in self.peer_estimates.items()}
+        return {
+            "self": self.export_estimates(),
+            "peers": peers,
+            "cluster_read_mbps": round(self.cluster_read_mbps(), 1),
+        }
 
     # ------------------------------------------------------------- report
 

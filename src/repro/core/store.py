@@ -1279,6 +1279,45 @@ class TwoLevelStore:
             idx += 1
         return removed
 
+    def peek_block(self, name: str, idx: int) -> tuple[bytes, int] | None:
+        """Resident bytes + block-table CRC of one *hot* block, or ``None``.
+
+        The peer-read surface of the distributed store (DESIGN.md §11): an
+        owner host serves hot blocks to non-owners straight from its memory
+        tier, with the CRC it already holds carried alongside the bytes —
+        neither side recomputes a checksum on the wire path (the CRC was
+        produced when the block entered the store and travels with it).
+        Returns ``None`` when the block is not memory-resident; the caller
+        then reads the cold copy from the shared PFS tier directly.
+        """
+        flock = self._acquire_file(name, write=False)
+        try:
+            bkey = self._bkey(name, idx)
+            blob = self.mem.peek(bkey)
+            meta = self._blocks.get(bkey)
+            if blob is None or meta is None:
+                return None
+            return blob, meta.crc
+        finally:
+            flock.release_read()
+
+    def adopt_cold(self, name: str) -> bool:
+        """Register a PFS-only file written by another store instance.
+
+        After adoption, tiered reads of the file run the per-block path
+        (promoting into the memory tier) instead of the no-promotion
+        whole-file cold reassembly.  Returns ``False`` when no PFS blocks
+        exist under ``name``; no data moves either way.
+        """
+        flock = self._acquire_file(name, write=False)
+        try:
+            self._file_meta_or_cold(name)
+        except BlockNotFound:
+            return False
+        finally:
+            flock.release_read()
+        return True
+
     def resident_fraction(self, name: str | None = None) -> float:
         """The paper's ``f``: fraction of bytes resident in the memory tier.
 

@@ -214,6 +214,55 @@ class TierStats:
         total = self.buf_allocs + self.buf_reuses
         return self.buf_reuses / total if total else 0.0
 
+    # -- serialization / cross-process aggregation ---------------------------
+
+    def to_dict(self) -> dict:
+        """Plain-dict snapshot (JSON-safe) for shipping across processes."""
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "TierStats":
+        """Inverse of :meth:`to_dict`.  Unknown keys are ignored so ledgers
+        serialized by a newer build still load (forward compatibility for
+        the gossip / multihost-benchmark path)."""
+        names = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in names})
+
+    def merge(self, other: "TierStats") -> "TierStats":
+        """Combine two ledgers from *concurrent* streams (e.g. one per host
+        shard) into a cluster-level ledger; returns a new ``TierStats``.
+
+        Counters (bytes, ops, busy seconds, closed bursts, buffer ledger)
+        sum.  The *open* spans union — min start to max end — because
+        concurrent hosts' in-flight bursts overlap in wall time; closed
+        bursts stay summed (conservative: treated as disjoint).  So
+        ``aggregate_read_mbps`` of a merge of hosts that ran strictly in
+        parallel reports total bytes over the shared wall window, which is
+        the paper's cluster aggregate (Section 4, N·ν when memory-resident).
+        """
+        out = TierStats(
+            bytes_read=self.bytes_read + other.bytes_read,
+            bytes_written=self.bytes_written + other.bytes_written,
+            read_ops=self.read_ops + other.read_ops,
+            write_ops=self.write_ops + other.write_ops,
+            read_seconds=self.read_seconds + other.read_seconds,
+            write_seconds=self.write_seconds + other.write_seconds,
+            idle_gap_s=self.idle_gap_s,
+            read_busy_seconds=self.read_busy_seconds + other.read_busy_seconds,
+            write_busy_seconds=self.write_busy_seconds + other.write_busy_seconds,
+            read_bursts=self.read_bursts + other.read_bursts,
+            write_bursts=self.write_bursts + other.write_bursts,
+            buf_allocs=self.buf_allocs + other.buf_allocs,
+            buf_reuses=self.buf_reuses + other.buf_reuses,
+        )
+        starts = [s for s in (self.read_span_start, other.read_span_start) if s]
+        out.read_span_start = min(starts) if starts else 0.0
+        out.read_span_end = max(self.read_span_end, other.read_span_end)
+        starts = [s for s in (self.write_span_start, other.write_span_start) if s]
+        out.write_span_start = min(starts) if starts else 0.0
+        out.write_span_end = max(self.write_span_end, other.write_span_end)
+        return out
+
 
 class _BufferPool:
     """Size-bucketed freelist of ``bytearray`` scratch buffers.

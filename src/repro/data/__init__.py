@@ -1,5 +1,10 @@
 """Training-data pipeline riding the two-level storage system."""
 
-from repro.data.pipeline import PipelineState, ShardedLoader, SyntheticCorpus
+from repro.data.pipeline import (
+    PipelineState,
+    ShardedLoader,
+    SyntheticCorpus,
+    plan_shard_placement,
+)
 
-__all__ = ["PipelineState", "ShardedLoader", "SyntheticCorpus"]
+__all__ = ["PipelineState", "ShardedLoader", "SyntheticCorpus", "plan_shard_placement"]

@@ -197,9 +197,24 @@ class ShardedLoader:
         state: PipelineState | None = None,
         slab_tokens: int = 2048,
         cache_slabs: int = 64,
+        shard_owner_map: dict[int, int] | list[int] | None = None,
     ) -> None:
         if global_batch % n_hosts:
             raise ValueError(f"global_batch={global_batch} not divisible by n_hosts={n_hosts}")
+        if shard_owner_map is not None:
+            owners = dict(enumerate(shard_owner_map)) if isinstance(
+                shard_owner_map, (list, tuple)
+            ) else dict(shard_owner_map)
+            if sorted(owners) != list(range(corpus.n_shards)):
+                raise ValueError(
+                    f"shard_owner_map must cover shards 0..{corpus.n_shards - 1}"
+                )
+            bad = {s: h for s, h in owners.items() if not 0 <= h < n_hosts}
+            if bad:
+                raise ValueError(f"shard_owner_map assigns out-of-range hosts: {bad}")
+            self.shard_owner_map: dict[int, int] | None = owners
+        else:
+            self.shard_owner_map = None
         self.corpus = corpus
         self.global_batch = global_batch
         self.local_batch = global_batch // n_hosts
@@ -228,16 +243,23 @@ class ShardedLoader:
     # ------------------------------------------------------------- locality
 
     def shard_owner(self, shard: int) -> int:
-        """Owner host of a shard: contiguous blocks of ``n_shards/n_hosts``.
+        """Owner host of a shard: the explicit ``shard_owner_map`` when one
+        was planned (:func:`plan_shard_placement` over the distributed
+        store's gossip board, DESIGN.md §11), else contiguous blocks of
+        ``n_shards/n_hosts``.
 
-        Matches the round-robin epoch order: with ``global_batch ==
-        n_shards``, host ``h``'s rows sit at batch positions
-        ``[h*local_batch, (h+1)*local_batch)`` → shard residues equal to
-        exactly the contiguous block this function assigns to ``h``, every
-        step.  (Divisibility alone is not enough: with ``global_batch >
-        n_shards`` a host's ``local_batch`` consecutive residues wrap
-        around all shards.)
+        Matches the round-robin epoch order either way: groups are walked
+        owner-by-owner, so with ``global_batch == n_shards`` host ``h``'s
+        rows at batch positions ``[h*local_batch, (h+1)*local_batch)`` draw
+        from exactly the shards this function assigns to ``h``, every step
+        — provided the placement gives each host ``n_shards/n_hosts``
+        shards (which :func:`plan_shard_placement` balances to).
+        (Divisibility alone is not enough: with ``global_batch > n_shards``
+        a host's ``local_batch`` consecutive residues wrap around all
+        shards.)
         """
+        if self.shard_owner_map is not None:
+            return self.shard_owner_map[shard]
         return min(shard * self.n_hosts // self.corpus.n_shards, self.n_hosts - 1)
 
     def _window_shard(self, w: int) -> int:
@@ -248,12 +270,16 @@ class ShardedLoader:
         """Global window order for one epoch: per-shard (hence per-owner)
         permutation, interleaved round-robin across shards.
 
-        Pure function of ``(corpus.seed, epoch)`` — independent of
-        ``n_hosts``/``host_id``, so elastic restarts and host-slice
-        reassembly stay exact while every permutation round walks the
-        shards in a fixed cycle (consecutive global rows hit consecutive
-        shards; each host's rows hit exactly its owned block when
-        ``global_batch == n_shards``).
+        Pure function of ``(corpus.seed, epoch)`` and the shard→owner map
+        — independent of ``host_id``, so elastic restarts and host-slice
+        reassembly stay exact (every host of one job must be built with
+        the same ``shard_owner_map``) while every permutation round walks
+        the shards in a fixed owner-grouped cycle (consecutive global rows
+        hit consecutive shards of consecutive owners; each host's rows hit
+        exactly its owned shards when ``global_batch == n_shards``).  With
+        the default contiguous ownership the owner-grouped cycle *is*
+        shard index order, so the stream is bit-identical to what it was
+        before owner maps existed.
         """
         if self._order_cache is not None and self._order_cache[0] == epoch:
             return self._order_cache[1]
@@ -262,10 +288,16 @@ class ShardedLoader:
         n_windows = total_tokens // span
         home = (np.arange(n_windows, dtype=np.int64) * span) // self.corpus.tokens_per_shard
         rng = np.random.default_rng((self.corpus.seed << 16) ^ epoch)
-        groups = []
+        # Permutations are drawn in shard index order (keeps the rng stream
+        # map-independent); only the *cycle* below follows the owner map.
+        perms = []
         for s in range(self.corpus.n_shards):
             g = np.flatnonzero(home == s)
-            groups.append(g[rng.permutation(len(g))])
+            perms.append(g[rng.permutation(len(g))])
+        cycle = sorted(
+            range(self.corpus.n_shards), key=lambda s: (self.shard_owner(s), s)
+        )
+        groups = [perms[s] for s in cycle]
         order = np.empty(n_windows, dtype=np.int64)
         pos = 0
         rnd = 0
@@ -428,3 +460,55 @@ class ShardedLoader:
     def restore(self, state: PipelineState) -> None:
         self.sync()
         self._state = PipelineState(**dataclasses.asdict(state))
+
+
+def plan_shard_placement(
+    shard_names: list[str],
+    n_hosts: int,
+    hot_bytes: dict[int, dict[str, int]],
+    host_ids: list[int] | None = None,
+) -> list[int]:
+    """Assign corpus shards to hosts where their bytes are already hot.
+
+    ``hot_bytes`` is the distributed store's gossip view
+    (``DistributedStore.cluster_hot_bytes()``: host → {file → resident
+    bytes}).  Greedy by descending affinity under a balance cap of
+    ``ceil(n_shards / n_hosts)`` shards per host — the cap is what lets
+    :class:`ShardedLoader`'s owner-grouped epoch cycle line each host's
+    batch rows up with its own shards; shards nobody holds hot fill the
+    least-loaded hosts in index order.  Deterministic for a given board.
+
+    Returns ``owners`` with ``owners[i]`` = host *index* (0..n_hosts-1) of
+    ``shard_names[i]`` — pass it straight to ``ShardedLoader(...,
+    shard_owner_map=owners)``.  ``host_ids`` maps index → gossip host id
+    when the two differ (defaults to ``0..n_hosts-1``).
+    """
+    if n_hosts <= 0:
+        raise ValueError("n_hosts must be positive")
+    ids = list(range(n_hosts)) if host_ids is None else list(host_ids)
+    if len(ids) != n_hosts:
+        raise ValueError(f"host_ids has {len(ids)} entries for n_hosts={n_hosts}")
+    n_shards = len(shard_names)
+    cap = -(-n_shards // n_hosts)  # ceil
+    # (hot bytes, shard, host index) — highest affinity first, index-order ties.
+    edges = sorted(
+        (
+            (-int(hot_bytes.get(hid, {}).get(shard_names[s], 0)), s, h)
+            for s in range(n_shards)
+            for h, hid in enumerate(ids)
+        ),
+    )
+    owners = [-1] * n_shards
+    load = [0] * n_hosts
+    for neg, s, h in edges:
+        if neg == 0:
+            break  # no hot bytes — leave for the balance fill below
+        if owners[s] == -1 and load[h] < cap:
+            owners[s] = h
+            load[h] += 1
+    for s in range(n_shards):
+        if owners[s] == -1:
+            h = min(range(n_hosts), key=lambda i: (load[i], i))
+            owners[s] = h
+            load[h] += 1
+    return owners

@@ -1,0 +1,61 @@
+"""ClusterSpec derivation: with_nodes revalidation + per-host shard views."""
+
+import dataclasses
+
+import pytest
+
+from repro.core.cluster import ClusterSpec, paper_average_cluster, tpu_v5e_pod
+
+
+class TestWithNodes:
+    def test_scales_node_counts_only(self):
+        spec = paper_average_cluster(n_compute=16)
+        out = spec.with_nodes(n_compute=4, n_data=2)
+        assert (out.n_compute, out.n_data) == (4, 2)
+        assert out.nic_mbps == spec.nic_mbps
+        assert out.ram_mbps == spec.ram_mbps
+        assert spec.n_compute == 16  # frozen input untouched
+
+    @pytest.mark.parametrize("kw", [{"n_compute": 0}, {"n_data": 0}, {"n_compute": -3}])
+    def test_rejects_nonpositive_counts(self, kw):
+        with pytest.raises(ValueError, match="positive"):
+            paper_average_cluster().with_nodes(**kw)
+
+    def test_revalidation_survives_unfrozen_refactor(self):
+        # with_nodes' contract is an explicit __post_init__ call, not a
+        # side effect of dataclasses.replace — an unfrozen copy of the
+        # spec class must still reject a zero-node derivation.
+        mutable = dataclasses.make_dataclass(
+            "MutableSpec",
+            [(f.name, f.type) for f in dataclasses.fields(ClusterSpec)],
+            namespace={
+                "__post_init__": ClusterSpec.__post_init__,
+                "with_nodes": ClusterSpec.with_nodes,
+            },
+        )
+        spec = mutable(**dataclasses.asdict(paper_average_cluster()))
+        with pytest.raises(ValueError, match="positive"):
+            spec.with_nodes(n_compute=0)
+
+
+class TestPerHostSpec:
+    def test_fair_share_of_data_servers(self):
+        spec = tpu_v5e_pod(n_hosts=64, n_storage=16)
+        per = spec.per_host_spec()
+        assert per.n_compute == 1
+        assert per.n_data == 1  # 16/64 rounds to 0 -> clamped to one server
+        spec = tpu_v5e_pod(n_hosts=4, n_storage=16)
+        assert spec.per_host_spec().n_data == 4
+
+    def test_aggregate_recomposes_from_shards(self):
+        # The paper's aggregate model scales by N; a per-host shard spec
+        # must carry 1/N of the PFS pool so the sum recomposes the cluster.
+        spec = tpu_v5e_pod(n_hosts=4, n_storage=16)
+        per = spec.per_host_spec()
+        assert per.pfs_aggregate_read_mbps * spec.n_compute == pytest.approx(
+            spec.pfs_aggregate_read_mbps
+        )
+
+    def test_per_host_spec_is_valid(self):
+        per = paper_average_cluster().per_host_spec()
+        assert per.n_compute == 1 and per.n_data >= 1

@@ -3,7 +3,12 @@
 import numpy as np
 import pytest
 
-from repro.data import PipelineState, ShardedLoader, SyntheticCorpus
+from repro.data import (
+    PipelineState,
+    ShardedLoader,
+    SyntheticCorpus,
+    plan_shard_placement,
+)
 
 
 @pytest.fixture()
@@ -171,3 +176,57 @@ class TestLocalityScheduling:
         # same shard residues either epoch (locality is epoch-invariant)
         for p in range(0, len(o0), 13):
             assert ld._window_shard(int(o0[p])) == ld._window_shard(int(o1[p]))
+
+
+class TestPlacementPlanning:
+    def test_prefers_hosts_with_hot_bytes(self):
+        names = [f"shard/{i}" for i in range(4)]
+        hot = {
+            0: {"shard/1": 100, "shard/2": 5},
+            1: {"shard/0": 80, "shard/3": 60},
+        }
+        assert plan_shard_placement(names, 2, hot) == [1, 0, 0, 1]
+
+    def test_balance_cap_forces_spread(self):
+        # one host hot on everything still takes only ceil(n/hosts) shards
+        names = [f"s{i}" for i in range(4)]
+        hot = {0: {n: 10 * (i + 1) for i, n in enumerate(names)}, 1: {}}
+        owners = plan_shard_placement(names, 2, hot)
+        assert owners == [1, 1, 0, 0]  # keeps its two hottest, spills the rest
+
+    def test_cold_shards_fill_least_loaded_deterministically(self):
+        owners = plan_shard_placement([f"s{i}" for i in range(6)], 3, {})
+        assert owners == [0, 1, 2, 0, 1, 2]
+
+    def test_host_ids_map_gossip_ids_to_indexes(self):
+        hot = {7: {"a": 1}, 9: {"b": 1}}
+        assert plan_shard_placement(["a", "b"], 2, hot, host_ids=[7, 9]) == [0, 1]
+
+    def test_planned_map_feeds_loader_locality(self, corpus):
+        # a planned (non-contiguous) placement still gives every host
+        # batch rows drawn only from its own shards, every step
+        owners = [1, 0, 1, 0]
+        for h in range(2):
+            ld = ShardedLoader(corpus, 4, 64, host_id=h, n_hosts=2,
+                               prefetch_depth=0, shard_owner_map=owners)
+            assert [ld.shard_owner(s) for s in range(4)] == owners
+            for _ in range(4):
+                next(ld)
+            assert ld.stats.remote_windows == 0
+
+    def test_default_map_unchanged_by_refactor(self, corpus):
+        # no map -> bit-identical epoch order to the contiguous default
+        base = ShardedLoader(corpus, 4, 64, prefetch_depth=0)
+        mapped = ShardedLoader(corpus, 4, 64, prefetch_depth=0,
+                               shard_owner_map=[0, 0, 0, 0])
+        np.testing.assert_array_equal(base._epoch_order(0), mapped._epoch_order(0))
+
+    @pytest.mark.parametrize("bad", [[0, 0, 0], [0, 0, 0, 0, 0], {0: 0, 1: 0, 2: 0, 5: 0}])
+    def test_rejects_incomplete_owner_map(self, corpus, bad):
+        with pytest.raises(ValueError, match="cover shards"):
+            ShardedLoader(corpus, 4, 64, prefetch_depth=0, shard_owner_map=bad)
+
+    def test_rejects_out_of_range_hosts(self, corpus):
+        with pytest.raises(ValueError, match="out-of-range"):
+            ShardedLoader(corpus, 4, 64, n_hosts=2, prefetch_depth=0,
+                          shard_owner_map=[0, 1, 2, 0])

@@ -12,7 +12,7 @@ from repro.apps.groupby import (
 )
 from repro.apps.groupby import RECORD as GREC
 from repro.apps.groupby import _shard_name as _gshard
-from repro.apps.shuffle import ShuffleConfig, ShuffleEngine, fold_keys
+from repro.apps.shuffle import ShuffleConfig, ShuffleEngine, fold_keys, place_reducers
 from repro.apps.terasort import KEY, RECORD, teragen, terasort, teravalidate
 from repro.core import ReadMode, TwoLevelStore, WriteMode
 
@@ -256,3 +256,86 @@ def test_config_validation(tmp_path, bad_cfg):
     with make(tmp_path) as st:
         with pytest.raises(ValueError):
             ShuffleEngine(st, ShuffleConfig(**bad_cfg))
+
+
+class TestDistributedPhases:
+    """Phase API for multi-host jobs: disjoint map bases, run discovery,
+    reducer subsets, and gossip-driven reducer placement (DESIGN.md §11)."""
+
+    def _parts(self, seed, n):
+        rng = np.random.default_rng(seed)
+        return [rng.integers(0, 256, size=(n, RECORD), dtype=np.uint8) for _ in range(2)]
+
+    def test_two_engines_one_namespace(self, tmp_path):
+        # host A maps its inputs, host B discovers the runs and reduces a
+        # subset; the union of outputs is the single-engine answer
+        parts = self._parts(23, 3_000)
+        with make(tmp_path, mem_capacity_bytes=2 * MB) as st:
+            for i, p in enumerate(parts):
+                put_records(st, f"in/{i}", p)
+            mapper = engine(st, n_reducers=4, budget=256 * KB)
+            splitters = mapper.sample(["in/0", "in/1"])
+            mapper.map_phase(["in/0"], splitters, mapper_base=0)
+            mapper.map_phase(["in/1"], splitters, mapper_base=1)
+
+            red = engine(st, n_reducers=4, budget=256 * KB)
+            assert red.discover_runs() > 0
+            red.reduce_phase(lambda r: f"out/{r}", reducers=[0, 1])
+            red.reduce_phase(lambda r: f"out/{r}", reducers=[3, 2])  # any order
+            got = read_outputs(st, 4)
+            np.testing.assert_array_equal(got, sorted_expected(parts))
+
+    def test_disjoint_mapper_bases_never_collide(self, tmp_path):
+        parts = self._parts(29, 1_000)
+        with make(tmp_path) as st:
+            for i, p in enumerate(parts):
+                put_records(st, f"in/{i}", p)
+            eng = engine(st, n_reducers=2, budget=128 * KB)
+            splitters = eng.sample(["in/0", "in/1"])
+            eng.map_phase(["in/0"], splitters, mapper_base=0)
+            before = {n for n in st.list_files() if "/spill/" in n}
+            eng.map_phase(["in/1"], splitters, mapper_base=1)
+            after = {n for n in st.list_files() if "/spill/" in n}
+            assert before < after  # second host's runs are all new names
+
+    def test_reduce_phase_rejects_bad_subset(self, tmp_path):
+        with make(tmp_path) as st:
+            eng = engine(st, n_reducers=2)
+            with pytest.raises(ValueError, match="reducer index"):
+                eng.reduce_phase(lambda r: f"out/{r}", reducers=[2])
+
+    def test_discover_runs_matches_registry(self, tmp_path):
+        (part,) = self._parts(31, 2_000)[:1]
+        with make(tmp_path) as st:
+            put_records(st, "in/0", part)
+            a = engine(st, n_reducers=3, budget=128 * KB)
+            a.map_phase(["in/0"], a.sample(["in/0"]))
+            b = engine(st, n_reducers=3, budget=128 * KB)
+            assert b.discover_runs() == sum(len(v) for v in a._runs.values())
+            assert {r: sorted(v) for r, v in b._runs.items()} == {
+                r: sorted(v) for r, v in a._runs.items()
+            }
+
+
+class TestReducerPlacement:
+    def test_reducers_land_on_their_run_bytes(self):
+        hot = {
+            1: {"shuffle/spill/m000-0000-r000": 500, "shuffle/spill/m000-0000-r002": 400},
+            2: {"shuffle/spill/m001-0000-r001": 300, "shuffle/spill/m001-0000-r003": 200},
+        }
+        owners = place_reducers(4, 2, hot, host_ids=[1, 2])
+        assert owners == [0, 1, 0, 1]
+
+    def test_balance_cap_and_cold_fill(self):
+        hot = {0: {f"shuffle/spill/m000-0000-r{r:03d}": 10 + r for r in range(4)}}
+        owners = place_reducers(4, 2, hot)
+        assert owners.count(0) == 2 and owners.count(1) == 2
+        assert owners[3] == 0 and owners[2] == 0  # keeps its hottest two
+
+    def test_foreign_names_ignored(self):
+        hot = {0: {"train/ckpt-r001": 10**9, "other/spill/m0-r001": 10**9}}
+        assert place_reducers(2, 2, hot) == [0, 1]  # no affinity parsed
+
+    def test_custom_prefix(self):
+        hot = {0: {"job7/spill/m000-0000-r001": 64}}
+        assert place_reducers(2, 2, hot, prefix="job7") == [1, 0]

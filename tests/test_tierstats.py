@@ -100,3 +100,59 @@ class TestBufferPool:
             assert pfs.get("k") == data
         assert pfs.stats.buf_reuses >= 2
         pfs.close()
+
+
+class TestSerializeAndMerge:
+    def test_dict_round_trip(self):
+        s = TierStats(idle_gap_s=0.5)
+        s.record_read(10 * MB, 0.5, end=100.5)
+        s.record_write(4 * MB, 0.2, end=100.7)
+        s.record_read(10 * MB, 1.0, end=202.0)  # closes the first read burst
+        d = s.to_dict()
+        assert isinstance(d, dict) and d["bytes_read"] == 20 * MB
+        import json
+
+        clone = TierStats.from_dict(json.loads(json.dumps(d)))  # JSON-safe
+        assert clone == s
+        assert clone.aggregate_read_mbps() == s.aggregate_read_mbps()
+
+    def test_from_dict_ignores_unknown_keys(self):
+        d = TierStats().to_dict()
+        d["a_future_field"] = 42
+        clone = TierStats.from_dict(d)
+        assert clone == TierStats()
+
+    def test_merge_concurrent_hosts_unions_open_spans(self):
+        # Two host shards reading strictly in parallel over 100.0 .. 101.0:
+        # cluster aggregate = total bytes over the shared wall window.
+        a = TierStats()
+        a.record_read(10 * MB, 1.0, end=101.0)
+        b = TierStats()
+        b.record_read(30 * MB, 0.5, end=101.0)  # starts 100.5, inside a's span
+        m = a.merge(b)
+        assert m.bytes_read == 40 * MB
+        assert m.read_ops == 2
+        assert m.read_busy_span() == 1.0
+        assert m.aggregate_read_mbps() == 40.0  # N-host aggregate, not a mean
+
+    def test_merge_sums_closed_bursts_and_counters(self):
+        a = TierStats(idle_gap_s=0.5)
+        a.record_read(MB, 1.0, end=101.0)
+        a.record_read(MB, 1.0, end=301.0)  # closes burst 1 (1.0 s banked)
+        b = TierStats(idle_gap_s=0.5)
+        b.record_write(2 * MB, 0.25, end=50.25)
+        b.buf_allocs, b.buf_reuses = 3, 7
+        m = a.merge(b)
+        assert m.read_bursts == 1 and m.read_busy_seconds == 1.0
+        assert m.bytes_written == 2 * MB and m.write_ops == 1
+        assert (m.buf_allocs, m.buf_reuses) == (3, 7)
+        # merge is out-of-place: inputs untouched
+        assert a.buf_allocs == 0 and b.read_ops == 0
+
+    def test_merge_with_empty_is_identity_on_counters(self):
+        a = TierStats()
+        a.record_read(5 * MB, 0.5, end=10.5)
+        m = a.merge(TierStats())
+        assert m.bytes_read == a.bytes_read
+        assert m.read_span_start == a.read_span_start
+        assert m.read_span_end == a.read_span_end
