@@ -31,6 +31,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (
+        chaos_soak,
         fig1_tiers,
         fig5_crossover,
         fig6_mountain,
@@ -55,6 +56,7 @@ def main() -> None:
         ("terascale", terasort_scaling),
         ("mixed", mixed_scaling),
         ("multihost", multihost_scaling),
+        ("chaos", chaos_soak),
         ("roofline", roofline),
     ]
     if args.only:

@@ -46,10 +46,30 @@ same board: :func:`repro.data.pipeline.plan_shard_placement` and
 hosts whose shards already hold their bytes hot, which is what makes the
 multihost benchmark's locality phase beat random placement.
 
-Fault injection reuses :class:`repro.runtime.failure.FailureInjector`:
-pass one to :class:`DistributedStore` and every public data-plane op
-counts as a step — a configured step raises ``SimulatedFailure`` mid-op,
-which the takeover tests turn into a hard process death.
+**Resilience layer (DESIGN.md §12).**  Peer RPCs run under a
+:class:`~repro.core.resilience.RetryPolicy` (bounded exponential backoff
++ seeded jitter + per-request deadline; reads retry freely, forwarded
+puts re-resolve the owner lease before every retry so fencing still
+rejects double-owners) behind a per-peer
+:class:`~repro.core.resilience.CircuitBreaker`.  An open circuit
+degrades gracefully: reads fall back to the ``PFS_BYPASS`` cold path,
+writes fall back to claim-or-forward-to-next-live-owner — the client
+stack never sees :class:`PeerUnreachable` for bytes the shared PFS tier
+still holds.  A background **reclamation thread** watches the host
+registry for expired heartbeats and proactively takes over the dead
+host's leases (rate-limited, hottest-by-gossip first, optionally
+pre-warming the hottest bytes into the new owner's shard) so readers no
+longer pay takeover latency inline.
+
+Fault injection: the step-counted
+:class:`repro.runtime.failure.FailureInjector` still fires on public
+data-plane ops, and a site-addressable
+:class:`repro.runtime.failure.ChaosInjector` can be attached to fire
+named faults — connection drop, request delay/jitter, torn PFS stripe
+write, heartbeat pause, lease-file corruption, mid-takeover crash — at
+hooks threaded through the peer transport, the lease table, the host
+registry, and the PFS tier.  Without an injector every hook is a
+``None``-check: zero cost.
 
 All coordination state lives under ``<pfs_root>/_dstore/`` — the PFS
 tree *is* the one shared namespace, exactly as the paper's OrangeFS
@@ -66,6 +86,7 @@ import struct
 import threading
 import time
 
+from repro.core.resilience import CircuitBreaker, CircuitOpen, RetryPolicy
 from repro.core.store import ReadMode, TwoLevelStore, WriteMode
 from repro.core.tiers import BlockNotFound, TierError
 
@@ -132,11 +153,12 @@ class HostRegistry:
     tier is empty anyway — the durable copies are on the PFS tier).
     """
 
-    def __init__(self, root: str, host_id: int, ttl_s: float = 5.0) -> None:
+    def __init__(self, root: str, host_id: int, ttl_s: float = 5.0, chaos=None) -> None:
         self.dir = os.path.join(root, "_dstore", "hosts")
         os.makedirs(self.dir, exist_ok=True)
         self.host_id = host_id
         self.ttl_s = ttl_s
+        self._chaos = chaos
         prev = _read_json(self._path(host_id))
         self.epoch = int(prev["epoch"]) + 1 if prev else 1
         self.addr: str = ""
@@ -152,6 +174,13 @@ class HostRegistry:
         self.renew()
 
     def renew(self) -> None:
+        if self._chaos is not None:
+            # Chaos site "registry.renew": a heartbeat_pause fault skips
+            # this renew tick — ``count`` consecutive firings emulate a
+            # partitioned host whose heartbeat lapses while it still runs.
+            spec = self._chaos.at("registry.renew", host=self.host_id)
+            if spec is not None and spec.kind == "heartbeat_pause":
+                return
         _atomic_write(
             self._path(self.host_id),
             {
@@ -234,13 +263,26 @@ class LeaseTable:
       :class:`LeaseLost` before any bytes move (double-owner rejection).
     """
 
-    def __init__(self, root: str, registry: HostRegistry) -> None:
+    def __init__(self, root: str, registry: HostRegistry, chaos=None) -> None:
         self.dir = os.path.join(root, "_dstore", "leases")
         os.makedirs(self.dir, exist_ok=True)
         self.registry = registry
+        self._chaos = chaos
 
     def _path(self, name: str) -> str:
         return os.path.join(self.dir, _safe(name) + ".lease")
+
+    def _chaos_lease_written(self, path: str) -> None:
+        """Chaos site "lease.write": a ``corrupt`` fault scribbles garbage
+        over the lease file just written.  ``_read_json`` treats a decode
+        error as an absent lease, so the system self-heals by re-claiming
+        — which is exactly the property the fault exists to prove."""
+        if self._chaos is None:
+            return
+        spec = self._chaos.at("lease.write", path=path)
+        if spec is not None and spec.kind == "corrupt":
+            with open(path, "w") as fh:
+                fh.write("{torn-lease")
 
     def read(self, name: str) -> LeaseInfo | None:
         rec = _read_json(self._path(name))
@@ -271,12 +313,25 @@ class LeaseTable:
             _atomic_write(tmp, {"owner": me.owner, "epoch": me.epoch})
             try:
                 os.link(tmp, path)  # exclusive: exactly one claimant wins
+                self._chaos_lease_written(path)
                 return me
             except FileExistsError:
                 won = self.read(name)
-                return won if won is not None else self.claim(name)
+                if won is None:
+                    # The lease path exists but holds garbage (a corrupted
+                    # or torn write): break it and re-claim.  Atomic-rename
+                    # writers never leave partials, so unreadable == dead.
+                    try:
+                        os.unlink(path)
+                    except FileNotFoundError:
+                        pass
+                    return self.claim(name)
+                return won
             finally:
-                os.unlink(tmp)
+                try:
+                    os.unlink(tmp)
+                except FileNotFoundError:
+                    pass  # a recursive re-claim already reaped the same tmp
         return self._takeover(name, existing)
 
     def _takeover(self, name: str, stale: LeaseInfo) -> LeaseInfo:
@@ -301,12 +356,19 @@ class LeaseTable:
             except FileNotFoundError:
                 pass
             return self.claim(name)
+        if self._chaos is not None:
+            # Chaos site "lease.takeover.locked" sits *outside* the
+            # try/finally below on purpose: a ``crash`` fault raises here
+            # and leaves the sidecar lock on disk — exactly the torn state
+            # the stale-lock breaking above exists to recover from.
+            self._chaos.at("lease.takeover.locked", name=name)
         try:
             current = self.read(name)
             if current is not None and (current != stale or self.valid(current)):
                 return current  # someone else already took it over / owner revived
             me = LeaseInfo(name=name, owner=self.registry.host_id, epoch=self.registry.epoch)
             _atomic_write(path, {"owner": me.owner, "epoch": me.epoch})
+            self._chaos_lease_written(path)
             return me
         finally:
             try:
@@ -439,11 +501,16 @@ class _PeerServer:
     connection; connections are long-lived (a peer keeps one open).
     """
 
-    def __init__(self, dstore: "DistributedStore") -> None:
+    def __init__(self, dstore: "DistributedStore", port: int = 0) -> None:
         self._d = dstore
-        self._sock = socket.create_server(("127.0.0.1", 0))
+        # Pinning ``port`` lets restart_peer_server() come back on the same
+        # addr — the restarted-peer scenario whose stale persistent sockets
+        # _PeerClient must detect and survive.
+        self._sock = socket.create_server(("127.0.0.1", port))
         self.addr = "{}:{}".format(*self._sock.getsockname())
         self._stop = threading.Event()
+        self._conns: set[socket.socket] = set()
+        self._conns_lock = threading.Lock()
         self._accept = threading.Thread(target=self._accept_loop, daemon=True,
                                         name="dstore-peer-accept")
         self._accept.start()
@@ -455,26 +522,45 @@ class _PeerServer:
             except OSError:
                 return  # socket closed
             conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            # Accepted sockets must carry SO_REUSEADDR too, or their
+            # lingering close states block a same-port server restart.
+            conn.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+            with self._conns_lock:
+                self._conns.add(conn)
             threading.Thread(target=self._serve, args=(conn,), daemon=True,
                              name="dstore-peer-conn").start()
 
     def _serve(self, conn: socket.socket) -> None:
-        with conn:
-            while not self._stop.is_set():
-                try:
-                    header, payload = _recv_msg(conn)
-                except (ConnectionError, OSError, struct.error):
-                    return
-                try:
-                    resp, out = self._dispatch(header, payload)
-                except LeaseLost as exc:
-                    resp, out = {"ok": False, "err": "lease-lost", "msg": str(exc)}, b""
-                except (TierError, KeyError, ValueError) as exc:
-                    resp, out = {"ok": False, "err": type(exc).__name__, "msg": str(exc)}, b""
-                try:
-                    _send_msg(conn, resp, out)
-                except OSError:
-                    return
+        try:
+            with conn:
+                while not self._stop.is_set():
+                    try:
+                        header, payload = _recv_msg(conn)
+                    except (ConnectionError, OSError, struct.error):
+                        return
+                    chaos = self._d.chaos
+                    if chaos is not None:
+                        # Chaos site "peer.serve": a drop here closes the
+                        # connection after the request was received — the
+                        # client cannot tell whether the op was applied
+                        # (the classic ambiguous-failure window that makes
+                        # non-idempotent retries need owner re-resolve).
+                        spec = chaos.at("peer.serve", op=header.get("op"))
+                        if spec is not None and spec.kind in ("drop", "error"):
+                            return
+                    try:
+                        resp, out = self._dispatch(header, payload)
+                    except LeaseLost as exc:
+                        resp, out = {"ok": False, "err": "lease-lost", "msg": str(exc)}, b""
+                    except (TierError, KeyError, ValueError) as exc:
+                        resp, out = {"ok": False, "err": type(exc).__name__, "msg": str(exc)}, b""
+                    try:
+                        _send_msg(conn, resp, out)
+                    except OSError:
+                        return
+        finally:
+            with self._conns_lock:
+                self._conns.discard(conn)
 
     def _dispatch(self, header: dict, payload: bytes) -> tuple[dict, bytes]:
         d = self._d
@@ -511,35 +597,100 @@ class _PeerServer:
 
     def close(self) -> None:
         self._stop.set()
+        # shutdown() wakes the thread blocked in accept(); close() alone
+        # leaves the in-flight syscall holding the kernel socket open, so
+        # the port would stay in LISTEN and block a same-port restart.
+        try:
+            self._sock.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
         try:
             self._sock.close()
         except OSError:
             pass
+        self._accept.join(timeout=5)
+        # Close accepted connections too: blocked _serve threads wake with
+        # a socket error, and peers holding persistent connections see a
+        # reset on their next send — which is what a restarted host looks
+        # like from the outside.
+        with self._conns_lock:
+            conns, self._conns = list(self._conns), set()
+        for conn in conns:
+            try:
+                conn.close()
+            except OSError:
+                pass
 
 
 class _PeerClient:
-    """One persistent connection to a peer host (requests serialized)."""
+    """One persistent connection to a peer host (requests serialized).
 
-    def __init__(self, addr: str) -> None:
-        host, port = addr.rsplit(":", 1)
+    A peer that restarted at the same addr (or a transport blip) leaves
+    this side holding a dead socket that only fails on the next send.
+    ``request`` detects that first failure, reconnects **once**, and —
+    only for idempotent requests — resends; a non-idempotent request
+    (forwarded put) is never blindly resent because the first copy may
+    already have been applied, so the failure surfaces as
+    :class:`PeerUnreachable` for the owner-re-resolving retry layer.
+    """
+
+    def __init__(self, addr: str, chaos=None) -> None:
         self.addr = addr
+        self._chaos = chaos
         self._lock = threading.Lock()
-        try:
-            self._sock = socket.create_connection((host, int(port)), timeout=10.0)
-            self._sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
-        except OSError as exc:
-            raise PeerUnreachable(f"connect {addr}: {exc}") from exc
+        self.reconnects = 0  # successful reconnect-and-resend recoveries
+        self._sock = self._connect()
 
-    def request(self, header: dict, payload=b"") -> tuple[dict, bytes]:
+    def _connect(self) -> socket.socket:
+        host, port = self.addr.rsplit(":", 1)
+        if self._chaos is not None:
+            # Chaos site "peer.connect": drop/error refuses the dial
+            # (delay specs have already slept inside ``at``).
+            spec = self._chaos.at("peer.connect", addr=self.addr)
+            if spec is not None and spec.kind in ("drop", "error"):
+                raise PeerUnreachable(f"connect {self.addr}: injected {spec.kind}")
+        try:
+            sock = socket.create_connection((host, int(port)), timeout=10.0)
+            sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            return sock
+        except OSError as exc:
+            raise PeerUnreachable(f"connect {self.addr}: {exc}") from exc
+
+    def request(self, header: dict, payload=b"", idempotent: bool = True) -> tuple[dict, bytes]:
         with self._lock:
+            if self._chaos is not None:
+                # Chaos site "peer.request": drop/error breaks the
+                # connection under this request, exactly like a peer that
+                # died mid-exchange (delay specs sleep inside ``at``).
+                spec = self._chaos.at("peer.request", addr=self.addr, op=header.get("op"))
+                if spec is not None and spec.kind in ("drop", "error"):
+                    try:
+                        self._sock.close()
+                    except OSError:
+                        pass
+                    raise PeerUnreachable(f"request to {self.addr}: injected {spec.kind}")
             try:
                 _send_msg(self._sock, header, payload)
                 return _recv_msg(self._sock)
             except (OSError, ConnectionError, struct.error) as exc:
                 try:
                     self._sock.close()
-                finally:
+                except OSError:
+                    pass
+                if not idempotent:
                     raise PeerUnreachable(f"request to {self.addr}: {exc}") from exc
+                try:
+                    self._sock = self._connect()
+                    _send_msg(self._sock, header, payload)
+                    resp = _recv_msg(self._sock)
+                except (OSError, ConnectionError, struct.error, PeerUnreachable) as exc2:
+                    try:
+                        self._sock.close()
+                    except OSError:
+                        pass
+                    raise PeerUnreachable(f"request to {self.addr}: {exc2}") from exc2
+                self.reconnects += 1
+                return resp
 
     def close(self) -> None:
         try:
@@ -566,6 +717,17 @@ class DStoreStats:
     lease_claims: int = 0
     takeovers: int = 0
     lease_lost: int = 0
+    # -- resilience layer (DESIGN.md §12) --
+    peer_retries: int = 0  # idempotent peer RPC attempts beyond the first
+    peer_reconnects: int = 0  # stale persistent sockets recovered in-place
+    circuit_short_circuits: int = 0  # requests refused by an open breaker
+    cold_fallback_reads: int = 0  # peer reads degraded to the PFS cold path
+    put_redirects: int = 0  # forwarded puts re-routed to a new owner
+    reclaim_ticks: int = 0
+    reclaimed_files: int = 0  # leases adopted by the background reclaimer
+    reclaim_warmed_bytes: int = 0  # bytes pre-warmed into this shard
+    reclaim_errors: int = 0
+    recovery_events: list = dataclasses.field(default_factory=list)
 
     def peer_hot_fraction(self) -> float:
         """Of remotely-owned bytes this host read, the fraction served hot
@@ -604,15 +766,25 @@ class DistributedStore:
         controller=None,  # sched.IOController | None (bound to the local store)
         gossip_hot_limit: int = 256,
         auto_gossip: bool = True,
+        chaos=None,  # runtime.failure.ChaosInjector | None
+        retry: RetryPolicy | None = None,  # schedule for idempotent peer reads
+        breaker_threshold: int = 3,
+        breaker_reset_s: float | None = None,  # default: lease_ttl/2
+        auto_reclaim: bool = True,
+        reclaim_interval_s: float | None = None,  # default: lease_ttl/2
+        reclaim_max_files: int = 8,  # leases adopted per tick (rate limit)
+        reclaim_warm_bytes: int = 64 << 20,  # pre-warm budget per tick
         **store_kwargs,
     ) -> None:
         self.host_id = host_id
         self.root = pfs_root
         os.makedirs(os.path.join(pfs_root, "_dstore"), exist_ok=True)
+        self.chaos = chaos
         self.store = TwoLevelStore(
             pfs_root,
             mem_capacity_bytes=mem_capacity_bytes,
             controller=controller,
+            chaos=chaos,
             **store_kwargs,
         )
         self._check_config()
@@ -625,15 +797,50 @@ class DistributedStore:
         self._owner_cache_ttl = min(0.25, lease_ttl_s / 4.0)
         self._peers: dict[str, _PeerClient] = {}
         self._peers_lock = threading.Lock()
+        # Resilience layer: read retries are free (idempotent); the
+        # forwarded-put schedule is sized so a dead owner's heartbeat
+        # expires *inside* the retry window — the final re-resolve then
+        # finds an orphaned lease and the write lands via takeover.
+        self._read_retry = retry or RetryPolicy(
+            max_attempts=3, base_delay_s=0.02, max_delay_s=0.25,
+            deadline_s=max(1.0, lease_ttl_s), seed=host_id,
+        )
+        self._fwd_retry = RetryPolicy(
+            max_attempts=64, base_delay_s=0.05, max_delay_s=0.5,
+            deadline_s=lease_ttl_s * 2.2, seed=host_id * 7 + 1,
+        )
+        self._breakers: dict[int, CircuitBreaker] = {}
+        self._breakers_lock = threading.Lock()
+        self._breaker_threshold = breaker_threshold
+        self._breaker_reset_s = (
+            breaker_reset_s if breaker_reset_s is not None else max(0.5, lease_ttl_s / 2.0)
+        )
+        # Serializes the claim/takeover slow path against the background
+        # reclaimer so one orphan is adopted (and counted) exactly once
+        # per host; the owner==self fast path stays lock-free.
+        self._claim_lock = threading.Lock()
 
-        self.registry = HostRegistry(pfs_root, host_id, ttl_s=lease_ttl_s)
-        self.leases = LeaseTable(pfs_root, self.registry)
+        self.registry = HostRegistry(pfs_root, host_id, ttl_s=lease_ttl_s, chaos=chaos)
+        self.leases = LeaseTable(pfs_root, self.registry, chaos=chaos)
         self.gossip = GossipBoard(pfs_root, host_id, hot_limit=gossip_hot_limit)
         self.server = _PeerServer(self)
         self.registry.publish(self.server.addr)
         if auto_gossip:
             self.registry._renew_hooks.append(self.publish_gossip)
         self.registry.start()
+        self.auto_reclaim = auto_reclaim
+        self.reclaim_interval_s = (
+            reclaim_interval_s if reclaim_interval_s is not None else max(0.25, lease_ttl_s / 2.0)
+        )
+        self.reclaim_max_files = reclaim_max_files
+        self.reclaim_warm_bytes = reclaim_warm_bytes
+        self._reclaim_stop = threading.Event()
+        self._reclaim_thread: threading.Thread | None = None
+        if auto_reclaim:
+            self._reclaim_thread = threading.Thread(
+                target=self._reclaim_loop, daemon=True, name="dstore-reclaim"
+            )
+            self._reclaim_thread.start()
         self._closed = False
 
     # ------------------------------------------------------------ plumbing
@@ -681,13 +888,65 @@ class DistributedStore:
         with self._peers_lock:
             client = self._peers.get(addr)
             if client is None:
-                client = self._peers[addr] = _PeerClient(addr)
+                client = self._peers[addr] = _PeerClient(addr, chaos=self.chaos)
             return client
 
     def _drop_peer(self, client: _PeerClient) -> None:
         with self._peers_lock:
             self._peers.pop(client.addr, None)
         client.close()
+
+    def _breaker(self, host_id: int) -> CircuitBreaker:
+        with self._breakers_lock:
+            br = self._breakers.get(host_id)
+            if br is None:
+                br = self._breakers[host_id] = CircuitBreaker(
+                    failure_threshold=self._breaker_threshold,
+                    reset_s=self._breaker_reset_s,
+                    name=f"peer-{host_id}",
+                )
+            return br
+
+    def _peer_request(
+        self, owner: int, header: dict, payload=b"", idempotent: bool = True
+    ) -> tuple[dict, bytes]:
+        """One peer RPC under the resilience layer: circuit breaker in
+        front, bounded retry behind (idempotent requests only).
+
+        Raises :class:`CircuitOpen` without touching the wire while the
+        peer's breaker is open, and :class:`PeerUnreachable` once the
+        retry schedule is spent — callers degrade (cold fallback for
+        reads, owner re-resolve for writes) rather than propagate.
+        """
+        br = self._breaker(owner)
+
+        def attempt(_i: int) -> tuple[dict, bytes]:
+            if not br.allow():
+                with self._stats_lock:
+                    self.stats.circuit_short_circuits += 1
+                raise CircuitOpen(f"peer {owner} circuit open")
+            client = self._peer(owner)  # PeerUnreachable if no live heartbeat
+            before = client.reconnects
+            try:
+                out = client.request(header, payload, idempotent=idempotent)
+            except PeerUnreachable:
+                self._drop_peer(client)
+                br.record_failure()
+                raise
+            if client.reconnects != before:
+                with self._stats_lock:
+                    self.stats.peer_reconnects += 1
+            br.record_success()
+            return out
+
+        if not idempotent:
+            return attempt(0)
+
+        def on_retry(_n: int, _exc: BaseException) -> None:
+            with self._stats_lock:
+                self.stats.peer_retries += 1
+
+        return self._read_retry.run(attempt, retry_on=(PeerUnreachable,), on_retry=on_retry)
 
     def _ensure_owned(self, name: str) -> None:
         """Claim/validate ownership of ``name`` for this host, taking over
@@ -700,21 +959,32 @@ class DistributedStore:
             return
         if info is not None and self.leases.valid(info):
             raise NotOwner(f"{name!r} is owned by live host {info.owner}")
-        took_over = info is not None
-        won = self.leases.claim(name)
-        self._owner_cache[name] = (time.monotonic(), won)
-        if won.owner != self.host_id:
-            raise NotOwner(f"{name!r} was claimed concurrently by host {won.owner}")
-        self._owned.add(name)
-        with self._stats_lock:
-            self.stats.lease_claims += 1
+        with self._claim_lock:
+            # Re-read under the lock: the background reclaimer (or another
+            # reader thread) may have just adopted this file for us — the
+            # takeover must be observed once, not re-run.
+            info = self.owner_of(name, fresh=True)
+            if info is not None and info.owner == self.host_id:
+                self.leases.check(name)
+                self._owned.add(name)
+                return
+            if info is not None and self.leases.valid(info):
+                raise NotOwner(f"{name!r} is owned by live host {info.owner}")
+            took_over = info is not None
+            won = self.leases.claim(name)
+            self._owner_cache[name] = (time.monotonic(), won)
+            if won.owner != self.host_id:
+                raise NotOwner(f"{name!r} was claimed concurrently by host {won.owner}")
+            self._owned.add(name)
+            with self._stats_lock:
+                self.stats.lease_claims += 1
+                if took_over:
+                    self.stats.takeovers += 1
             if took_over:
-                self.stats.takeovers += 1
-        if took_over:
-            # The dead owner's bytes are durable only on the PFS tier from
-            # this host's view; adopt them into the block path so reads
-            # promote into the new owner's memory shard.
-            self.store.adopt_cold(name)
+                # The dead owner's bytes are durable only on the PFS tier
+                # from this host's view; adopt them into the block path so
+                # reads promote into the new owner's memory shard.
+                self.store.adopt_cold(name)
 
     # ---------------------------------------------------------- write path
 
@@ -758,38 +1028,88 @@ class DistributedStore:
             raise
 
     def _forward_put(self, info: LeaseInfo, name: str, data, mode: WriteMode | None) -> None:
-        client = self._peer(info.owner)
-        try:
+        """Forward a write to the file's owner, surviving owner death.
+
+        Non-idempotent, so every retry is preceded by a **fresh owner
+        re-resolve** (never a blind resend — the first copy may have been
+        applied, and fencing must keep rejecting double-owners):
+
+        * owner still live and leased → back off and retry the same host
+          within the policy budget (sized so a dead owner's heartbeat
+          expires inside it);
+        * lease moved to another live host → redirect immediately;
+        * lease moved to *us* (the reclaimer adopted it) → write locally;
+        * lease orphaned → claim-or-takeover, then write locally.
+
+        The owner answering ``lease-lost`` is the same re-resolve trigger:
+        the server refused because ownership moved under the forwarder.
+        """
+        payload = bytes(data)
+        policy = self._fwd_retry
+        t0 = time.monotonic()
+        attempt = 0
+        while True:
             header = {"op": "put", "name": name, "mode": mode.value if mode else None}
-            resp, _ = client.request(header, bytes(data))
-        except PeerUnreachable:
-            self._drop_peer(client)
-            # Owner died between the lease read and the send: retry via the
-            # takeover path if (and only if) its heartbeat has lapsed.
-            if self.leases.valid(self.owner_of(name, fresh=True)):
-                raise
-            self._ensure_owned(name)
-            self.store.put(name, data, mode=mode)
-            return
-        if not resp.get("ok"):
-            if resp.get("err") == "lease-lost":
+            resp = None
+            try:
+                resp, _ = self._peer_request(info.owner, header, payload, idempotent=False)
+            except (PeerUnreachable, CircuitOpen):
+                pass
+            if resp is not None:
+                if resp.get("ok"):
+                    with self._stats_lock:
+                        self.stats.forwarded_puts += 1
+                    return
+                if resp.get("err") != "lease-lost":
+                    raise TierError(f"forwarded put of {name!r} failed: {resp}")
+            # Re-resolve before any retry (idempotency-aware schedule).
+            attempt += 1
+            with self._stats_lock:
+                self.stats.peer_retries += 1
+            fresh = self.owner_of(name, fresh=True)
+            if fresh is None or not self.leases.valid(fresh) or fresh.owner == self.host_id:
+                # Orphaned (owner died / lease corrupted) or already ours:
+                # claim-or-takeover, then run the local write path.
+                try:
+                    self._ensure_owned(name)
+                except NotOwner:
+                    fresh = self.owner_of(name, fresh=True)
+                    if fresh is None:
+                        raise
+                    # lost the claim race — fall through to redirect
+                else:
+                    self.store.put(name, data, mode=mode)
+                    return
+            if fresh.owner != info.owner:
+                info = fresh  # new owner: redirect with no backoff
                 with self._stats_lock:
-                    self.stats.lease_lost += 1
-                raise LeaseLost(resp.get("msg", name))
-            raise TierError(f"forwarded put of {name!r} failed: {resp}")
-        with self._stats_lock:
-            self.stats.forwarded_puts += 1
+                    self.stats.put_redirects += 1
+                continue
+            delay = policy.backoff(attempt)
+            if policy.give_up(attempt, t0, delay):
+                raise PeerUnreachable(
+                    f"forwarded put of {name!r} to live host {info.owner} "
+                    f"failed after {attempt} attempts"
+                )
+            time.sleep(delay)
 
     def delete(self, name: str) -> bool:
         self._step()
         info = self.owner_of(name, fresh=True)
         if info is not None and info.owner != self.host_id and self.leases.valid(info):
-            client = self._peer(info.owner)
-            resp, _ = client.request({"op": "delete", "name": name})
-            if not resp.get("ok"):
-                raise TierError(f"forwarded delete of {name!r} failed: {resp}")
-            self._owner_cache.pop(name, None)
-            return bool(resp.get("found"))
+            try:
+                resp, _ = self._peer_request(info.owner, {"op": "delete", "name": name})
+            except (PeerUnreachable, CircuitOpen):
+                # Owner died under the delete: if its lease lapsed, finish
+                # the delete as the new owner; a live-but-unreachable owner
+                # still surfaces (deletes must not silently half-apply).
+                if self.leases.valid(self.owner_of(name, fresh=True)):
+                    raise
+            else:
+                if not resp.get("ok"):
+                    raise TierError(f"forwarded delete of {name!r} failed: {resp}")
+                self._owner_cache.pop(name, None)
+                return bool(resp.get("found"))
         self._ensure_owned(name)
         found = self.store.delete(name)
         self.leases.release(name)
@@ -823,8 +1143,8 @@ class DistributedStore:
         if self.leases.valid(info):
             try:
                 return self._remote_get(info, name)
-            except PeerUnreachable:
-                pass  # live heartbeat but dead socket: fall through to cold
+            except (PeerUnreachable, CircuitOpen):
+                pass  # live heartbeat but dead transport: degrade to cold
             return self._cold_get(name)
         # Orphaned: the owner's heartbeat lapsed — take the file over.
         self._ensure_owned(name)
@@ -868,14 +1188,24 @@ class DistributedStore:
 
     def _remote_block(self, info: LeaseInfo, name: str, idx: int, blen: int) -> bytes:
         """One block of a remotely-owned file: owner's memory shard first
-        (hot bytes + carried CRC), the shared PFS tier second."""
-        client = self._peer(info.owner)
+        (hot bytes + carried CRC), the shared PFS tier second.
+
+        Reads are idempotent, so the peer RPC retries freely under the
+        read policy; once the schedule is spent (or the owner's circuit
+        is open) the block degrades to the ``PFS_BYPASS`` cold path — a
+        dead peer costs latency, never availability, because the durable
+        copy is on the shared tier.
+        """
+        resp: dict | None = None
+        payload = b""
         try:
-            resp, payload = client.request({"op": "read_block", "name": name, "idx": idx})
-        except PeerUnreachable:
-            self._drop_peer(client)
-            raise
-        if resp.get("ok") and resp.get("hot"):
+            resp, payload = self._peer_request(
+                info.owner, {"op": "read_block", "name": name, "idx": idx}
+            )
+        except (PeerUnreachable, CircuitOpen):
+            with self._stats_lock:
+                self.stats.cold_fallback_reads += 1
+        if resp is not None and resp.get("ok") and resp.get("hot"):
             # CRC carried with the transfer — recorded, not recomputed
             # (no re-verify on the wire path; see DESIGN.md §11).
             with self._stats_lock:
@@ -891,12 +1221,12 @@ class DistributedStore:
         return data
 
     def _remote_size(self, info: LeaseInfo, name: str) -> int:
-        client = self._peer(info.owner)
         try:
-            resp, _ = client.request({"op": "size", "name": name})
-        except PeerUnreachable:
-            self._drop_peer(client)
-            raise
+            resp, _ = self._peer_request(info.owner, {"op": "size", "name": name})
+        except (PeerUnreachable, CircuitOpen):
+            # Manifests live on the shared PFS tier: answer locally rather
+            # than fail the read because the owner is unreachable.
+            return self.store.file_size(name)
         if not resp.get("ok"):
             raise BlockNotFound(name)
         return int(resp["size"])
@@ -909,6 +1239,116 @@ class DistributedStore:
             self.stats.peer_cold_blocks += 1
             self.stats.peer_cold_bytes += len(data)
         return data
+
+    # --------------------------------------------------------- reclamation
+
+    def _reclaim_loop(self) -> None:
+        while not self._reclaim_stop.wait(self.reclaim_interval_s):
+            try:
+                self.reclaim_now()
+            except Exception:
+                with self._stats_lock:
+                    self.stats.reclaim_errors += 1
+
+    def reclaim_now(self) -> list[str]:
+        """One reclamation tick (the background thread runs this every
+        ``reclaim_interval_s``; tests and operators may call it directly).
+
+        Scans the host registry for expired heartbeats; for each lease
+        still naming a dead host, runs the normal takeover path
+        (``_ensure_owned`` + ``adopt_cold``) so readers find an owner
+        *before* they pay takeover latency inline.  Work is rate-limited
+        to ``reclaim_max_files`` per tick and ordered hottest-first by
+        the dead owner's last gossip report — the bytes most likely to be
+        read next recover first.  Within ``reclaim_warm_bytes`` the
+        adopted file is also pre-warmed (read through the local store,
+        promoting it into this host's memory shard), which is what turns
+        post-failure first reads from PFS-latency into memory-latency.
+
+        Returns the names adopted this tick.  Losing a claim race to
+        another live host is normal and silent — exactly one host wins
+        each lease.
+        """
+        with self._stats_lock:
+            self.stats.reclaim_ticks += 1
+        now = time.time()
+        dead: set[int] = set()
+        for rec in self.registry.hosts():
+            h = int(rec.get("host", -1))
+            if h >= 0 and h != self.host_id and now >= rec.get("expires", 0.0):
+                dead.add(h)
+        if not dead:
+            return []
+        orphans: list[tuple[str, int]] = []
+        for fn in os.listdir(self.leases.dir):
+            if not fn.endswith(".lease"):
+                continue
+            rec = _read_json(os.path.join(self.leases.dir, fn))
+            if rec is None:
+                continue  # corrupt lease: the access path re-claims it
+            owner = int(rec["owner"])
+            if owner not in dead:
+                continue
+            name = fn[: -len(".lease")].replace("@", ":").replace("__", os.sep)
+            info = LeaseInfo(name=name, owner=owner, epoch=int(rec["epoch"]))
+            if not self.leases.valid(info):
+                orphans.append((name, owner))
+        if not orphans:
+            return []
+        hot = self.gossip.hot_bytes()
+        orphans.sort(key=lambda it: (-hot.get(it[1], {}).get(it[0], 0), it[0]))
+        reclaimed: list[str] = []
+        warm_budget = self.reclaim_warm_bytes
+        for name, owner in orphans[: self.reclaim_max_files]:
+            t_start = time.monotonic()
+            try:
+                self._ensure_owned(name)
+            except (NotOwner, TierError):
+                continue  # raced: another live host adopted it
+            warmed = 0
+            if warm_budget > 0:
+                try:
+                    size = self.store.file_size(name)
+                    if size <= warm_budget:
+                        self.store.get(name)  # promotes into this shard
+                        warmed = size
+                        warm_budget -= size
+                except (BlockNotFound, TierError):
+                    pass  # durable copy unreadable right now: own it cold
+            reclaimed.append(name)
+            with self._stats_lock:
+                self.stats.reclaimed_files += 1
+                self.stats.reclaim_warmed_bytes += warmed
+                self.stats.recovery_events.append(
+                    {
+                        "name": name,
+                        "from_host": owner,
+                        "warm_bytes": warmed,
+                        "latency_s": time.monotonic() - t_start,
+                    }
+                )
+        return reclaimed
+
+    def restart_peer_server(self) -> None:
+        """Bounce the peer transport endpoint, keeping the same port and
+        this host's leases (a transport blip, not a process restart — the
+        registry epoch is unchanged).  Peers holding persistent sockets
+        see a reset on their next send; test hook for the stale-connection
+        recovery path."""
+        _, port = self.server.addr.rsplit(":", 1)
+        self.server.close()
+        deadline = time.monotonic() + 5.0
+        while True:
+            try:
+                self.server = _PeerServer(self, port=int(port))
+                break
+            except OSError:
+                # Old connection sockets can hold the port briefly while
+                # their close handshakes drain.
+                if time.monotonic() >= deadline:
+                    raise
+                time.sleep(0.05)
+        self.registry.publish(self.server.addr)
 
     # -------------------------------------------------------------- manage
 
@@ -926,7 +1366,7 @@ class DistributedStore:
         if info is not None and info.owner != self.host_id and self.leases.valid(info):
             try:
                 return self._remote_size(info, name)
-            except PeerUnreachable:
+            except (PeerUnreachable, CircuitOpen):
                 pass
         return self.store.file_size(name)
 
@@ -980,13 +1420,21 @@ class DistributedStore:
 
     def tier_stats(self) -> dict[str, dict]:
         out = self.store.tier_stats()
-        out["dstore"] = dataclasses.asdict(self.stats)
+        with self._stats_lock:
+            d = dataclasses.asdict(self.stats)
+        with self._breakers_lock:
+            d["circuit_states"] = {h: br.state for h, br in sorted(self._breakers.items())}
+        out["dstore"] = d
         return out
 
     def close(self) -> None:
         if self._closed:
             return
         self._closed = True
+        self._reclaim_stop.set()
+        if self._reclaim_thread is not None:
+            self._reclaim_thread.join(timeout=5)
+            self._reclaim_thread = None
         self.registry.stop()
         self.server.close()
         with self._peers_lock:

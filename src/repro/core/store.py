@@ -122,6 +122,7 @@ class StoreStats:
     evictions: int = 0
     async_flushes: int = 0
     flushes_coalesced: int = 0
+    flush_retries: int = 0  # failed write-back flushes requeued for retry
     integrity_failures: int = 0
     range_reads: int = 0
     range_bytes: int = 0
@@ -138,6 +139,7 @@ class _BlockMeta:
     crc: int
     dirty: bool = False  # pending async write-back
     freq: int = 0  # LFU counter
+    flush_attempts: int = 0  # consecutive failed write-back flushes
     # Memory-tier CRC is verified once per residency: the first hit checks
     # the resident bytes against the block CRC, later hits are zero-copy
     # with no checksum pass (the tier stores immutable bytes objects — a
@@ -332,6 +334,9 @@ class TwoLevelStore:
     """The integrated two-level storage system."""
 
     _N_BLOCK_LOCKS = 64
+    #: bounded write-back retry: a dirty block whose flush fails transiently
+    #: is requeued up to this many times before the error surfaces in drain()
+    FLUSH_MAX_ATTEMPTS = 4
 
     def __init__(
         self,
@@ -352,6 +357,7 @@ class TwoLevelStore:
         flush_workers: int = 2,
         readahead_blocks: int = 2,
         controller: IOController | None = None,
+        chaos=None,  # runtime.failure.ChaosInjector | None (threaded to the PFS tier)
     ) -> None:
         self.layout = BlockLayout(block_bytes)
         self.mem = MemoryTier(mem_capacity_bytes)
@@ -366,6 +372,7 @@ class TwoLevelStore:
             io_buffer_bytes=pfs_buffer_bytes,
             fsync=fsync,
             io_workers=self.io_workers,
+            chaos=chaos,
         )
         self.write_mode = write_mode
         self.read_mode = read_mode
@@ -550,6 +557,18 @@ class TwoLevelStore:
             self.controller.note_eviction(
                 victim, read_promoted=popped.promoted if popped else False
             )
+
+    def _quarantine_block(self, bkey: str) -> None:
+        """Drop a resident block whose bytes failed the CRC check against
+        the block table (a torn overwrite): unlike :meth:`_evict`, the copy
+        is *never* flushed down — it would overwrite the durable version
+        with bad bytes — just forgotten, so readers fall through to PFS."""
+        with self._block_lock(bkey):
+            with self._meta:
+                self._dirty.discard(bkey)
+                self._resident.pop(bkey, None)
+                self.stats.integrity_failures += 1
+            self.mem.delete(bkey)
 
     def _cache_block(self, meta: _BlockMeta, chunk) -> None:
         """Insert a block into the memory tier, evicting until it fits."""
@@ -849,7 +868,29 @@ class TwoLevelStore:
                 self._dirty.discard(bkey)
                 meta = self._blocks.get(bkey)
             if claimed and meta is not None and meta.dirty:
-                self._flush_now(bkey, meta)
+                try:
+                    self._flush_now(bkey, meta)
+                except Exception:
+                    # Transient PFS failure (torn stripe write, brief server
+                    # outage): the block is still hot + dirty — re-mark and
+                    # requeue a bounded number of times before surfacing the
+                    # error through drain().  A full queue just leaves the
+                    # key in _dirty, where drain() flushes it inline.
+                    with self._meta:
+                        meta.flush_attempts += 1
+                        retry = meta.flush_attempts < self.FLUSH_MAX_ATTEMPTS
+                        if retry:
+                            self._dirty.add(bkey)
+                            self.stats.flush_retries += 1
+                    if not retry:
+                        raise
+                    try:
+                        self._flush_q.put_nowait(bkey)
+                    except queue.Full:
+                        pass
+                    return
+                with self._meta:
+                    meta.flush_attempts = 0
                 if (
                     self.controller is not None
                     and not meta.dirty  # flush actually landed
@@ -1149,11 +1190,21 @@ class TwoLevelStore:
                         self._touch_locked(meta)
                 if meta is not None and not meta.verified:
                     if crc32_chunked(view) != meta.crc:
-                        with self._meta:
-                            self.stats.integrity_failures += 1
-                        raise IntegrityError(f"memory-tier CRC mismatch for {bkey}")
-                    meta.verified = True
-                return view
+                        if mode is ReadMode.MEMORY_ONLY:
+                            with self._meta:
+                                self.stats.integrity_failures += 1
+                            raise IntegrityError(f"memory-tier CRC mismatch for {bkey}")
+                        # Resident bytes no longer match the published block
+                        # CRC — e.g. an interrupted in-place overwrite died
+                        # between the table update and the recache.  The bad
+                        # copy must never be served or flushed: quarantine it
+                        # and fall through to the durable copy.
+                        self._quarantine_block(bkey)
+                        view = None
+                    else:
+                        meta.verified = True
+                if view is not None:
+                    return view
         if mode is ReadMode.MEMORY_ONLY:
             raise BlockNotFound(bkey)
         with self._meta:

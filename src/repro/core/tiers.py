@@ -436,9 +436,11 @@ class PFSTier:
         io_buffer_bytes: int = 4 * 2**20,
         fsync: bool = False,
         io_workers: int | None = None,
+        chaos=None,  # runtime.failure.ChaosInjector | None
     ) -> None:
         if n_servers <= 0 or stripe_bytes <= 0 or io_buffer_bytes <= 0:
             raise ValueError("n_servers, stripe_bytes, io_buffer_bytes must be positive")
+        self.chaos = chaos
         self.root = root
         self.n_servers = n_servers
         self.stripe_bytes = stripe_bytes
@@ -519,15 +521,31 @@ class PFSTier:
 
         def write_unit(u: tuple[int, int, int]) -> int:
             unit, off, ln = u
+            # Chaos site "pfs.write_unit": a torn/short stripe write lands
+            # only the first ``frac`` of the unit's bytes.  The CRC is still
+            # folded over the *intended* bytes — exactly what a real torn
+            # write produces: a manifest that convicts the short file on
+            # the next read (silent mode), or an immediate write error the
+            # flush pipeline retries (default).  Zero-cost without chaos.
+            cutoff = off + ln
+            torn = None
+            if self.chaos is not None:
+                spec = self.chaos.at("pfs.write_unit", key=key, unit=unit)
+                if spec is not None and spec.kind == "torn_write":
+                    torn = spec
+                    cutoff = off + max(0, int(ln * spec.frac))
             crc = 0
             with open(self._stripe_path(key, unit), "wb") as fh:
                 for b0 in range(off, off + ln, self.io_buffer_bytes):
                     chunk = mv[b0 : min(b0 + self.io_buffer_bytes, off + ln)]
                     crc = zlib.crc32(chunk, crc)
-                    fh.write(chunk)
+                    if b0 < cutoff:
+                        fh.write(chunk[: cutoff - b0])
                 if self.fsync:
                     fh.flush()
                     os.fsync(fh.fileno())
+            if torn is not None and not torn.silent:
+                raise IntegrityError(f"injected torn write on stripe unit {unit} of {key!r}")
             return crc
 
         with self._key_lock(key):

@@ -60,8 +60,12 @@ def serve_loop(cfg, batch: int, prompt_len: int, tokens: int, seed: int = 0):
 
 
 def tiered_serve(cfg, batch: int, prompt_len: int, tokens: int, window: int,
-                 page: int | None, seed: int = 0):
-    """Decode loop routed through the two-level KV cache (eager)."""
+                 page: int | None, seed: int = 0, store=None):
+    """Decode loop routed through the two-level KV cache (eager).
+
+    ``store`` adds the durable third level: completed cold KV pages
+    persist through the (possibly distributed) two-level store.
+    """
     cfg = dataclasses.replace(cfg, scan_layers=False)  # host cold tier can't ride a scan carry
     if cfg.attn_logit_softcap > 0:
         raise SystemExit("--kv-window: tiered KV does not support logit-softcap archs")
@@ -70,7 +74,7 @@ def tiered_serve(cfg, batch: int, prompt_len: int, tokens: int, window: int,
     rng = np.random.default_rng(seed)
     prompts = jnp.asarray(rng.integers(0, cfg.vocab, (batch, prompt_len)), jnp.int32)
     gen, prefill_s, decode_s, caches = tiered_serve_loop(
-        model, cfg, params, prompts, tokens, window=window, page=page
+        model, cfg, params, prompts, tokens, window=window, page=page, store=store
     )
     return gen, prefill_s, decode_s, tiered_cache_stats(caches)
 
@@ -86,17 +90,41 @@ def main() -> None:
                     help="route full-attention KV through the tiered cache (hot ring size)")
     ap.add_argument("--kv-page", type=int, default=0,
                     help="cold-tier staging page in tokens (default min(window, 512))")
+    ap.add_argument("--store-root", default="",
+                    help="persist cold KV pages through a two-level store at this root")
+    ap.add_argument("--distributed", action="store_true",
+                    help="with --store-root: join it as a DistributedStore host shard")
+    ap.add_argument("--host-id", type=int, default=1,
+                    help="host id for --distributed (unique per process)")
     args = ap.parse_args()
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
-    if args.kv_window > 0:
-        gen, prefill_s, decode_s, st = tiered_serve(
-            cfg, args.batch, args.prompt_len, args.tokens,
-            window=args.kv_window, page=args.kv_page or None,
-        )
-    else:
-        gen, prefill_s, decode_s = serve_loop(cfg, args.batch, args.prompt_len, args.tokens)
-        st = None
+    dstore = None
+    store = None
+    if args.store_root and args.kv_window > 0:
+        if args.distributed:
+            from repro.core.dstore import DistributedStore
+
+            dstore = DistributedStore(args.host_id, args.store_root)
+            store = dstore.store  # the KV pages ride this shard's write path
+        else:
+            from repro.core.store import TwoLevelStore
+
+            store = TwoLevelStore(args.store_root)
+    try:
+        if args.kv_window > 0:
+            gen, prefill_s, decode_s, st = tiered_serve(
+                cfg, args.batch, args.prompt_len, args.tokens,
+                window=args.kv_window, page=args.kv_page or None, store=store,
+            )
+        else:
+            gen, prefill_s, decode_s = serve_loop(cfg, args.batch, args.prompt_len, args.tokens)
+            st = None
+    finally:
+        if dstore is not None:
+            dstore.close()
+        elif store is not None:
+            store.close()
     print(f"prefill {args.batch}x{args.prompt_len}: {prefill_s:.3f}s "
           f"({args.batch*args.prompt_len/prefill_s:,.0f} tok/s)")
     print(f"decode {args.tokens} steps: {decode_s:.3f}s "

@@ -174,11 +174,18 @@ def make_serve_step(model, cfg: ArchConfig) -> Callable:
 
 
 def make_tiered_caches(
-    model, cfg: ArchConfig, batch: int, max_len: int, window: int, page: int | None, dtype=jnp.bfloat16
+    model, cfg: ArchConfig, batch: int, max_len: int, window: int, page: int | None,
+    dtype=jnp.bfloat16, store=None, store_prefix: str = "serving/kv",
 ) -> dict:
     """Caches for the two-level serving backend: every full-attention GQA
     layer gets a ``TieredKVCache`` (device hot ring + paged host cold tier);
     windowed/recurrent/MLA layers keep their standard O(window)/O(1) caches.
+
+    ``store`` (a :class:`~repro.core.store.TwoLevelStore`, e.g. one host
+    shard of a :class:`~repro.core.dstore.DistributedStore`) adds the
+    third level: completed cold pages persist under
+    ``<store_prefix>/prefix_<i>/`` so KV history survives host DRAM loss
+    (``restore_cold_from_store``).
 
     Requires an unrolled stack (``cfg.scan_layers=False``) — the cold tier
     is host state, which cannot ride a ``lax.scan`` carry.
@@ -195,6 +202,7 @@ def make_tiered_caches(
             caches[f"prefix_{i}"] = TieredKVCache(
                 batch, cfg.n_kv_heads, hd, window=window, max_len=max_len,
                 dtype=dtype, page=page,
+                store=store, store_prefix=store_prefix, name=f"prefix_{i}",
             )
         else:
             caches[f"prefix_{i}"] = make_layer_cache(spec, cfg, batch, max_len, dtype)
@@ -210,6 +218,8 @@ def tiered_serve_loop(
     window: int,
     page: int | None = None,
     dtype=jnp.bfloat16,
+    store=None,
+    store_prefix: str = "serving/kv",
 ) -> tuple[jax.Array, float, float, dict]:
     """Batched prefill + greedy decode routed through the two-level KV
     cache.  Runs eagerly (the cold tier is host memory; pages are staged
@@ -220,7 +230,10 @@ def tiered_serve_loop(
 
     batch, prompt_len = prompts.shape
     max_len = prompt_len + tokens + 1
-    caches = make_tiered_caches(model, cfg, batch, max_len, window, page, dtype)
+    caches = make_tiered_caches(
+        model, cfg, batch, max_len, window, page, dtype,
+        store=store, store_prefix=store_prefix,
+    )
 
     t0 = time.perf_counter()
     logits, caches = model.prefill(params, prompts, caches)

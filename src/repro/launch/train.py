@@ -183,10 +183,37 @@ def main() -> None:
     ap.add_argument("--store", default="/tmp/repro_store")
     ap.add_argument("--ckpt-mode", default="async", choices=["sync", "async", "memory_only"])
     ap.add_argument("--fail-at", type=int, nargs="*", default=[])
+    ap.add_argument("--distributed", action="store_true",
+                    help="join --store as a DistributedStore host shard (leases, peer "
+                         "reads, background reclamation)")
+    ap.add_argument("--host-id", type=int, default=1,
+                    help="host id for --distributed (unique per process)")
+    ap.add_argument("--lease-ttl", type=float, default=5.0,
+                    help="heartbeat/lease ttl seconds for --distributed")
+    ap.add_argument("--chaos", nargs="*", default=[], metavar="SITE:KIND[,k=v...]",
+                    help="arm chaos faults, e.g. peer.request:delay,prob=0.2,delay_s=0.05 "
+                         "(see repro.runtime.failure.ChaosInjector)")
+    ap.add_argument("--chaos-seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
-    with TwoLevelStore(args.store, mem_capacity_bytes=256 * 2**20, block_bytes=4 * 2**20) as store:
+    chaos = None
+    if args.chaos:
+        from repro.runtime.failure import ChaosInjector
+
+        chaos = ChaosInjector.from_specs(args.chaos, seed=args.chaos_seed)
+    store_kw = dict(mem_capacity_bytes=256 * 2**20, block_bytes=4 * 2**20)
+    dstore = None
+    if args.distributed:
+        from repro.core.dstore import DistributedStore
+
+        dstore = DistributedStore(
+            args.host_id, args.store, lease_ttl_s=args.lease_ttl, chaos=chaos, **store_kw
+        )
+        store = dstore.store  # training I/O runs this shard's local data path
+    else:
+        store = TwoLevelStore(args.store, chaos=chaos, **store_kw)
+    try:
         res = run_training(
             cfg,
             store,
@@ -197,6 +224,11 @@ def main() -> None:
             injector=FailureInjector(args.fail_at),
             on_step=lambda s, m: print(f"step {s:4d} loss {float(m['loss']):.4f}"),
         )
+    finally:
+        if dstore is not None:
+            dstore.close()
+        else:
+            store.close()
     print(
         f"done: {res.steps_run} steps run ({res.restarts} restarts), "
         f"final loss {res.losses[-1]:.4f}"
@@ -206,6 +238,16 @@ def main() -> None:
         f"ckpt {res.stalls['ckpt_stall_total_s']:.2f}s "
         f"(save critical path {res.stalls['ckpt_save_critical_s']:.2f}s)"
     )
+    if dstore is not None:
+        st = dstore.stats
+        print(
+            f"dstore[h{dstore.host_id}]: {st.lease_claims} leases "
+            f"({st.takeovers} takeovers, {st.reclaimed_files} reclaimed in "
+            f"{st.reclaim_ticks} ticks), {st.peer_retries} peer retries, "
+            f"{st.peer_reconnects} reconnects, {st.cold_fallback_reads} cold fallbacks"
+        )
+    if chaos is not None:
+        print(f"chaos: {chaos.fired_count()} faults fired ({len(chaos.history)} events)")
 
 
 if __name__ == "__main__":

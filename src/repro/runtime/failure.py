@@ -1,14 +1,31 @@
-"""Failure detection and injection for the resilient training driver.
+"""Failure detection and injection for the resilient data plane.
 
 At 1000+ nodes, node failure is routine: the driver must (1) notice —
 heartbeat timeout; (2) recover — restore the last committed two-level
 checkpoint (memory-tier hit = seconds; PFS fallback = read mode (f));
 (3) continue, possibly elastically on fewer hosts.  This module provides
-the detection/injection machinery; the loop lives in ``launch/train.py``.
+the detection/injection machinery; the training loop lives in
+``launch/train.py`` and the distributed-store recovery paths in
+``core/dstore.py``.
+
+Two injectors:
+
+* :class:`FailureInjector` — the original step-counted host-loss
+  injector (raise at configured step numbers, once each).
+* :class:`ChaosInjector` — site-addressable fault injection
+  (DESIGN.md §12).  Production code is threaded with named *sites*
+  (``peer.request``, ``pfs.write_unit``, ``registry.renew``,
+  ``lease.takeover.locked``, ...); an armed :class:`FaultSpec` matches
+  sites by ``fnmatch`` pattern and fires deterministically from a
+  seeded RNG.  With no injector attached every hook is a
+  ``None``-check — zero cost on the hot path.
 """
 
 from __future__ import annotations
 
+import dataclasses
+import fnmatch
+import random
 import threading
 import time
 from typing import Callable
@@ -21,6 +38,139 @@ class SimulatedFailure(RuntimeError):
         super().__init__(f"simulated {kind} at step {step}")
         self.step = step
         self.kind = kind
+
+
+class InjectedFault(ConnectionError):
+    """Raised at transport sites for ``drop``/``error`` faults — an
+    ``OSError`` subclass so the production retry paths handle it exactly
+    like a real socket failure."""
+
+
+@dataclasses.dataclass
+class FaultSpec:
+    """One armed fault: *where* (site pattern), *what* (kind), *when*
+    (probability / visit window / firing budget), and kind parameters.
+
+    Kinds understood by the instrumented sites:
+
+    * ``delay`` — sleep ``delay_s`` (+ uniform ``jitter_s``) at the site.
+    * ``drop`` / ``error`` — the site fails as if the transport broke
+      (socket closed, connect refused).
+    * ``torn_write`` — a PFS stripe write lands only the first ``frac``
+      of its bytes; raises unless ``silent`` (silent leaves the
+      corruption for the CRC manifest to catch on read).
+    * ``heartbeat_pause`` — the registry skips this renew tick (``count``
+      consecutive firings ≈ a pause of ``count * ttl/3``).
+    * ``corrupt`` — scribble garbage over the file the site just wrote
+      (lease-file corruption).
+    * ``crash`` — raise :class:`SimulatedFailure` at the site, emulating
+      process death at that exact point (e.g. mid-takeover with the
+      sidecar lock held).
+    """
+
+    site: str
+    kind: str
+    prob: float = 1.0  # per-visit firing probability (seeded RNG)
+    count: int | None = None  # max firings (None = unlimited)
+    after: int = 0  # skip the first ``after`` matching visits
+    delay_s: float = 0.0
+    jitter_s: float = 0.0
+    frac: float = 0.5  # torn write: fraction of bytes that land
+    silent: bool = False  # torn write: corrupt without raising
+    where: dict = dataclasses.field(default_factory=dict)  # ctx subset filter
+    # -- bookkeeping (mutated under the injector lock) --
+    visits: int = 0
+    fired: int = 0
+
+
+class ChaosInjector:
+    """Deterministic, seedable, site-addressable fault injection.
+
+    Call sites invoke ``injector.at("site.name", **ctx)``; the injector
+    matches armed specs in order (``fnmatch`` on the site name, ``where``
+    must be a subset of ``ctx``), applies probability / visit-window /
+    budget bookkeeping under a lock, and returns the fired spec (or
+    ``None``).  ``delay`` faults sleep inline; ``crash`` faults raise
+    :class:`SimulatedFailure`; all other kinds are returned for the site
+    to apply its transport-specific action.
+
+    Determinism: firing decisions come from one seeded ``random.Random``
+    consumed in call order — a single-threaded fault schedule replays
+    exactly; concurrent schedules are deterministic per-site when specs
+    use visit windows (``after``/``count``) rather than probabilities.
+    """
+
+    def __init__(self, faults: list[FaultSpec] | None = None, seed: int = 0) -> None:
+        self._faults: list[FaultSpec] = list(faults or [])
+        self._rng = random.Random(seed)
+        self._lock = threading.Lock()
+        self.history: list[tuple[str, str]] = []  # (site, kind) per firing
+
+    def arm(self, site: str, kind: str, **kw) -> FaultSpec:
+        spec = FaultSpec(site=site, kind=kind, **kw)
+        with self._lock:
+            self._faults.append(spec)
+        return spec
+
+    @classmethod
+    def from_specs(cls, specs: list[str], seed: int = 0) -> "ChaosInjector":
+        """Parse CLI fault strings: ``site:kind[,key=value,...]`` — e.g.
+        ``peer.request:delay,prob=0.2,delay_s=0.05``."""
+        inj = cls(seed=seed)
+        for s in specs:
+            head, _, tail = s.partition(",")
+            site, _, kind = head.partition(":")
+            kw: dict = {}
+            for item in filter(None, tail.split(",")):
+                k, _, v = item.partition("=")
+                field_type = FaultSpec.__dataclass_fields__[k].type
+                if field_type.startswith("bool"):
+                    kw[k] = v.lower() in ("1", "true", "yes")
+                elif field_type.startswith("int"):
+                    kw[k] = int(v)
+                else:
+                    kw[k] = float(v)
+            inj.arm(site, kind, **kw)
+        return inj
+
+    def at(self, site: str, **ctx) -> FaultSpec | None:
+        """Fault hook: returns the fired spec (``delay`` already applied,
+        ``crash`` raises), or ``None`` when nothing fires here."""
+        fired: FaultSpec | None = None
+        with self._lock:
+            for spec in self._faults:
+                if not fnmatch.fnmatch(site, spec.site):
+                    continue
+                if spec.where and any(ctx.get(k) != v for k, v in spec.where.items()):
+                    continue
+                spec.visits += 1
+                if spec.visits <= spec.after:
+                    continue
+                if spec.count is not None and spec.fired >= spec.count:
+                    continue
+                if spec.prob < 1.0 and self._rng.random() >= spec.prob:
+                    continue
+                spec.fired += 1
+                self.history.append((site, spec.kind))
+                fired = spec
+                break
+        if fired is None:
+            return None
+        if fired.delay_s or fired.jitter_s:
+            with self._lock:
+                jit = self._rng.uniform(0.0, fired.jitter_s) if fired.jitter_s else 0.0
+            time.sleep(fired.delay_s + jit)
+        if fired.kind == "crash":
+            raise SimulatedFailure(fired.fired, kind=f"chaos:{site}")
+        return fired
+
+    def fired_count(self, site: str | None = None, kind: str | None = None) -> int:
+        with self._lock:
+            return sum(
+                1
+                for s, k in self.history
+                if (site is None or fnmatch.fnmatch(s, site)) and (kind is None or k == kind)
+            )
 
 
 class FailureInjector:

@@ -1,0 +1,183 @@
+"""Resilience primitives: RetryPolicy, CircuitBreaker, ChaosInjector."""
+
+from __future__ import annotations
+
+import threading
+
+import pytest
+
+from repro.core.resilience import CircuitBreaker, RetryPolicy
+from repro.runtime.failure import ChaosInjector, SimulatedFailure
+
+
+class TestRetryPolicy:
+    def test_backoff_is_bounded_exponential(self):
+        p = RetryPolicy(base_delay_s=0.1, multiplier=2.0, max_delay_s=0.35, jitter=0.0)
+        assert p.backoff(1) == pytest.approx(0.1)
+        assert p.backoff(2) == pytest.approx(0.2)
+        assert p.backoff(3) == pytest.approx(0.35)  # capped
+        assert p.backoff(10) == pytest.approx(0.35)
+
+    def test_jitter_is_seeded_and_bounded(self):
+        a = RetryPolicy(base_delay_s=0.1, jitter=0.5, seed=7)
+        b = RetryPolicy(base_delay_s=0.1, jitter=0.5, seed=7)
+        seq_a = [a.backoff(1) for _ in range(8)]
+        seq_b = [b.backoff(1) for _ in range(8)]
+        assert seq_a == seq_b  # same seed, same schedule
+        assert all(0.05 <= d <= 0.15 for d in seq_a)
+        assert len(set(seq_a)) > 1  # actually jittered
+
+    def test_give_up_on_attempts_and_deadline(self):
+        import time
+
+        p = RetryPolicy(max_attempts=3, deadline_s=10.0)
+        t0 = time.monotonic()
+        assert not p.give_up(1, t0)
+        assert not p.give_up(2, t0)
+        assert p.give_up(3, t0)
+        # deadline: next retry would land past it
+        tight = RetryPolicy(max_attempts=100, deadline_s=0.05)
+        assert tight.give_up(1, t0 - 1.0, 0.0)
+
+    def test_run_retries_then_succeeds(self):
+        p = RetryPolicy(max_attempts=5, base_delay_s=0.0, jitter=0.0, deadline_s=30.0)
+        calls = []
+
+        def fn(attempt):
+            calls.append(attempt)
+            if len(calls) < 3:
+                raise ConnectionError("flaky")
+            return "ok"
+
+        slept = []
+        assert p.run(fn, retry_on=(ConnectionError,), sleep=slept.append) == "ok"
+        assert calls == [0, 1, 2]
+        assert len(slept) == 2
+
+    def test_run_exhausts_and_raises_last_error(self):
+        p = RetryPolicy(max_attempts=3, base_delay_s=0.0, jitter=0.0, deadline_s=30.0)
+        n = [0]
+
+        def fn(_):
+            n[0] += 1
+            raise ConnectionError("always")
+
+        with pytest.raises(ConnectionError):
+            p.run(fn, retry_on=(ConnectionError,), sleep=lambda _d: None)
+        assert n[0] == 3
+
+    def test_run_does_not_catch_other_errors(self):
+        p = RetryPolicy(max_attempts=5, base_delay_s=0.0)
+        with pytest.raises(ValueError):
+            p.run(lambda _a: (_ for _ in ()).throw(ValueError("no")), retry_on=(ConnectionError,))
+
+
+class TestCircuitBreaker:
+    def test_opens_after_threshold_and_short_circuits(self):
+        now = [0.0]
+        br = CircuitBreaker(failure_threshold=3, reset_s=5.0, clock=lambda: now[0])
+        for _ in range(3):
+            assert br.allow()
+            br.record_failure()
+        assert br.state == CircuitBreaker.OPEN
+        assert not br.allow()
+        assert br.opened_count == 1
+
+    def test_half_open_probe_single_flight_then_close(self):
+        now = [0.0]
+        br = CircuitBreaker(failure_threshold=1, reset_s=5.0, clock=lambda: now[0])
+        br.record_failure()
+        assert not br.allow()
+        now[0] = 6.0  # reset window elapsed
+        assert br.state == CircuitBreaker.HALF_OPEN
+        assert br.allow()  # the single probe
+        assert not br.allow()  # concurrent request refused while probing
+        br.record_success()
+        assert br.state == CircuitBreaker.CLOSED
+        assert br.allow()
+
+    def test_half_open_failure_reopens(self):
+        now = [0.0]
+        br = CircuitBreaker(failure_threshold=2, reset_s=5.0, clock=lambda: now[0])
+        br.record_failure()
+        br.record_failure()
+        now[0] = 6.0
+        assert br.allow()  # probe admitted
+        br.record_failure()  # probe failed: full window again
+        assert not br.allow()
+        assert br.opened_count == 2
+        now[0] = 10.9  # < 6.0 + reset_s
+        assert not br.allow()
+        now[0] = 11.1
+        assert br.allow()
+
+    def test_success_resets_failure_streak(self):
+        br = CircuitBreaker(failure_threshold=3)
+        br.record_failure()
+        br.record_failure()
+        br.record_success()
+        br.record_failure()
+        br.record_failure()
+        assert br.state == CircuitBreaker.CLOSED  # streak broken at 2
+
+
+class TestChaosInjector:
+    def test_site_patterns_and_where_filter(self):
+        inj = ChaosInjector()
+        inj.arm("peer.*", "drop", where={"op": "put"})
+        assert inj.at("peer.request", op="read_block") is None
+        spec = inj.at("peer.request", op="put")
+        assert spec is not None and spec.kind == "drop"
+        assert inj.at("lease.write", op="put") is None  # site mismatch
+
+    def test_count_and_after_windows(self):
+        inj = ChaosInjector()
+        inj.arm("s", "error", after=2, count=2)
+        fired = [inj.at("s") is not None for _ in range(6)]
+        assert fired == [False, False, True, True, False, False]
+        assert inj.fired_count("s") == 2
+
+    def test_probability_is_seeded_deterministic(self):
+        a = ChaosInjector(seed=42)
+        a.arm("s", "drop", prob=0.5)
+        b = ChaosInjector(seed=42)
+        b.arm("s", "drop", prob=0.5)
+        seq_a = [a.at("s") is not None for _ in range(32)]
+        seq_b = [b.at("s") is not None for _ in range(32)]
+        assert seq_a == seq_b
+        assert 0 < sum(seq_a) < 32  # actually probabilistic
+
+    def test_crash_kind_raises_simulated_failure(self):
+        inj = ChaosInjector()
+        inj.arm("lease.takeover.locked", "crash", count=1)
+        with pytest.raises(SimulatedFailure):
+            inj.at("lease.takeover.locked", name="f")
+        assert inj.at("lease.takeover.locked", name="f") is None  # budget spent
+
+    def test_from_specs_parses_cli_strings(self):
+        inj = ChaosInjector.from_specs(
+            ["peer.request:delay,prob=0.25,delay_s=0.05,count=3",
+             "pfs.write_unit:torn_write,frac=0.5,silent=true"]
+        )
+        specs = inj._faults
+        assert specs[0].site == "peer.request" and specs[0].kind == "delay"
+        assert specs[0].prob == 0.25 and specs[0].delay_s == 0.05 and specs[0].count == 3
+        assert specs[1].kind == "torn_write" and specs[1].silent is True
+        assert specs[1].frac == 0.5
+
+    def test_thread_safe_budget(self):
+        inj = ChaosInjector()
+        inj.arm("s", "error", count=50)
+        hits = []
+
+        def worker():
+            for _ in range(100):
+                if inj.at("s") is not None:
+                    hits.append(1)
+
+        ts = [threading.Thread(target=worker) for _ in range(4)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+        assert len(hits) == 50  # the firing budget is honored under races
