@@ -32,6 +32,7 @@ def main() -> None:
 
     from benchmarks import (
         chaos_soak,
+        compress_scaling,
         fig1_tiers,
         fig5_crossover,
         fig6_mountain,
@@ -55,6 +56,7 @@ def main() -> None:
         ("tscale", train_io_scaling),
         ("terascale", terasort_scaling),
         ("mixed", mixed_scaling),
+        ("compress", compress_scaling),
         ("multihost", multihost_scaling),
         ("chaos", chaos_soak),
         ("roofline", roofline),

@@ -215,6 +215,7 @@ class ShuffleEngine:
         self.cfg = cfg
         self.stats = ShuffleStats()
         self._ledger = _BufferLedger()
+        self._arb_pool = None  # optional arbiter lease (attach_arbiter)
         self._lock = threading.Lock()
         # reducer -> [(run file name, byte length)] — each a key-sorted run
         self._runs: dict[int, list[tuple[str, int]]] = {r: [] for r in range(cfg.n_reducers)}
@@ -223,6 +224,40 @@ class ShuffleEngine:
         # admission + deep sequential readahead, and flushed spill blocks
         # may be dropped from the memory tier under contention.
         store.hint_stream(cfg.prefix + "/spill/", StreamClass.SEQ_ONCE)
+
+    def attach_arbiter(self, arbiter, *, min_bytes: int = 0, weight: float = 1.0):
+        """Lease the sort-buffer budget from a :class:`MemoryArbiter`.
+
+        The pool's grant only ever *shrinks* the live budget below
+        ``cfg.memory_budget_bytes`` (never raises it), so the ledger's
+        ≤ 2×-budget acceptance gate keeps its original meaning.
+        """
+        floor = max(int(min_bytes), self.cfg.record_bytes * max(1, self.cfg.workers))
+        pool = arbiter.register(
+            "shuffle_sort",
+            cls="seq_once",
+            min_bytes=floor,
+            initial_bytes=self.cfg.memory_budget_bytes,
+        )
+
+        def value_fn() -> float:
+            pool.note_used(self._ledger.current)
+            # Always demand the configured budget: jobs are bursty, and a
+            # demand collapse between jobs would strand the next job on the
+            # floor grant until a plan tick.  SEQ_ONCE's low class base is
+            # what lets other pools outbid an idle engine.
+            pool.note_demand(self.cfg.memory_budget_bytes)
+            return 1.0 * weight * (1.0 + 4.0 * pool.miss_rate())
+
+        pool.value_fn = value_fn
+        self._arb_pool = pool
+        return pool
+
+    def _live_budget_bytes(self) -> int:
+        if self._arb_pool is not None:
+            return max(self.cfg.record_bytes,
+                       min(self._arb_pool.budget, self.cfg.memory_budget_bytes))
+        return self.cfg.memory_budget_bytes
 
     # ------------------------------------------------------------- phases
 
@@ -384,7 +419,7 @@ class ShuffleEngine:
         # Each concurrent mapper gets the full per-worker share: the sort
         # permutation is *streamed* out in app-buffer-sized gather slices
         # (see _spill), so no second batch-sized copy ever exists.
-        per_mapper = self.cfg.memory_budget_bytes // max(1, self.cfg.workers)
+        per_mapper = self._live_budget_bytes() // max(1, self.cfg.workers)
         return max(1, per_mapper // self.cfg.record_bytes)
 
     def _map_one(self, m: int, name: str, splitters: np.ndarray) -> None:
@@ -532,7 +567,7 @@ class ShuffleEngine:
         # sorted copies, see _merged_batches) and can span up to the sum of
         # all chunks — so a run's share is a quarter of the per-reducer
         # budget split k ways, keeping worst-case tracked bytes ≤ 2×budget.
-        per_reducer = self.cfg.memory_budget_bytes // max(1, self.cfg.workers)
+        per_reducer = self._live_budget_bytes() // max(1, self.cfg.workers)
         per_run = per_reducer // (4 * max(1, k))
         return max(1, per_run // self.cfg.record_bytes)
 

@@ -85,10 +85,12 @@ import socket
 import struct
 import threading
 import time
+import zlib
 
+from repro.core import codec as blockcodec
 from repro.core.resilience import CircuitBreaker, CircuitOpen, RetryPolicy
 from repro.core.store import ReadMode, TwoLevelStore, WriteMode
-from repro.core.tiers import BlockNotFound, TierError
+from repro.core.tiers import BlockNotFound, IntegrityError, TierError
 
 __all__ = [
     "DistributedStore",
@@ -568,14 +570,20 @@ class _PeerServer:
         if op == "ping":
             return {"ok": True, "host": d.host_id}, b""
         if op == "read_block":
-            hit = d.store.peek_block(header["name"], int(header["idx"]))
+            hit = d.store.peek_block_wire(header["name"], int(header["idx"]))
             if hit is None:
                 return {"ok": True, "hot": False}, b""
-            blob, crc = hit
+            blob, crc, enc, fb = hit
             with d._stats_lock:
                 d.stats.peer_blocks_served += 1
                 d.stats.peer_bytes_served += len(blob)
-            return {"ok": True, "hot": True, "crc": crc}, blob
+            resp = {"ok": True, "hot": True, "crc": crc}
+            if enc is not None:
+                # Wire compression (DESIGN.md §13): the payload is a TLC1
+                # container and the CRC covers the *compressed* bytes.
+                resp["enc"] = enc
+                resp["fb"] = fb
+            return resp, blob
         if op == "put":
             name = header["name"]
             d.leases.check(name)  # fencing: refuse if ownership moved
@@ -1211,6 +1219,15 @@ class DistributedStore:
             with self._stats_lock:
                 self.stats.peer_hot_blocks += 1
                 self.stats.peer_hot_bytes += len(payload)
+            if resp.get("enc") is not None:
+                # Compressed wire payload: verify transport integrity over
+                # the compressed bytes (the carried CRC covers those), then
+                # decode locally — the decoder's framing checks catch any
+                # deeper corruption (DESIGN.md §13).
+                if zlib.crc32(payload) != resp["crc"]:
+                    raise IntegrityError(f"peer wire CRC mismatch for {name}:{idx}")
+                data, _ = blockcodec.decode(payload, int(resp.get("fb") or 256 * 1024))
+                return data
             return payload
         data = self.store.get_range(
             name, idx * self.store.layout.block_size, blen, mode=ReadMode.PFS_BYPASS

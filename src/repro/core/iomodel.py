@@ -148,6 +148,64 @@ def f_for_read_mbps(nu: float, q: float, target: float) -> float:
 
 
 # ---------------------------------------------------------------------------
+# Compression-adjusted Eq. 7 terms (DESIGN.md §13)
+#
+# Block compression changes the *cold* leg of the blend only: memory-tier
+# bytes are always held uncompressed (hot reads stay zero-copy at ν), but
+# a cold read moves ``1/ratio`` physical bytes over the PFS link and then
+# pays a decode pass — two serialized stages, so the effective cold rate
+# is their harmonic composition.  Substituted into Eq. 7, the same blend
+# shape holds with q replaced by q_eff; solving that blend back through
+# ``f_for_read_mbps`` with the *raw* q gives an "effective f" — the
+# residency an uncompressed store would need to match — which is how a
+# ratio-r codec buys model-visible capacity without new hardware.
+# ---------------------------------------------------------------------------
+
+
+def effective_cold_read_mbps(q: float, ratio: float, decode_mbps: float | None = None) -> float:
+    """Logical MB/s of a cold read at compression ratio ``ratio``.
+
+    The PFS link moves ``1/ratio`` of the logical bytes at ``q`` physical
+    MB/s (so the link leg runs at ``q·ratio`` logical MB/s), serialized
+    with the decode pass at ``decode_mbps`` logical MB/s.  ``ratio=1`` or
+    ``decode_mbps=None`` degenerates to the uncompressed path.
+    """
+    if q <= 0 or ratio <= 0:
+        raise ValueError("q and ratio must be positive")
+    link = q * ratio
+    if decode_mbps is None or decode_mbps <= 0:
+        return link if ratio != 1.0 else q
+    return 1.0 / (1.0 / link + 1.0 / decode_mbps)
+
+
+def effective_read_mbps(
+    nu: float, q: float, f: float, ratio: float = 1.0, decode_mbps: float | None = None
+) -> float:
+    """Eq. 7 with the cold leg running at the compression-adjusted rate."""
+    q_eff = effective_cold_read_mbps(q, ratio, decode_mbps)
+    return blend_read_mbps(nu, q_eff, f)
+
+
+def effective_f(
+    nu: float, q: float, f: float, ratio: float = 1.0, decode_mbps: float | None = None
+) -> float:
+    """The in-memory fraction an *uncompressed* store would need to match
+    a compressed store running at physical residency ``f`` — compression's
+    capacity gain expressed in the paper's own variable."""
+    rate = effective_read_mbps(nu, q, f, ratio, decode_mbps)
+    return f_for_read_mbps(nu, q, min(rate, nu))
+
+
+def compression_wins(q: float, ratio: float, decode_mbps: float | None = None) -> bool:
+    """Is a compressed cold read faster than a raw one?  True iff the
+    serialized link+decode composition beats the raw PFS rate:
+    ``1/(ratio·q) + 1/decode < 1/q``."""
+    if ratio <= 1.0:
+        return False
+    return effective_cold_read_mbps(q, ratio, decode_mbps) > q
+
+
+# ---------------------------------------------------------------------------
 # Aggregate curves (Fig. 5) and crossover analysis (Section 4.5)
 # ---------------------------------------------------------------------------
 

@@ -66,7 +66,7 @@ import threading
 import time
 from collections import OrderedDict, deque
 
-from repro.core.iomodel import blend_read_mbps, f_for_read_mbps
+from repro.core.iomodel import blend_read_mbps, compression_wins, f_for_read_mbps
 
 MB = 2**20
 
@@ -197,6 +197,18 @@ class IOController:
 
         self.flush_gate = AdaptiveGate(limit=1)
         self._max_lanes = 1
+
+        # Codec telemetry (DESIGN.md §13): EWMA compression ratio and
+        # encode/decode rates.  They feed the DEFAULT-class compress
+        # decision and the compression-adjusted Eq. 7 terms — zero until
+        # the store's codec path reports its first block.
+        self.codec_ratio = 0.0
+        self.encode_mbps = 0.0
+        self.decode_mbps = 0.0
+        # Elastic memory arbiter (core/arbiter.py), rebalanced from the
+        # plan tick when attached so pool budgets follow the same cadence
+        # and the same measured inputs as the capacity plan.
+        self.arbiter = None
 
         self.class_stats: dict[StreamClass, ClassStats] = {
             c: ClassStats() for c in StreamClass
@@ -329,6 +341,11 @@ class IOController:
         self._retune_flush_lanes(read_bytes_delta > 0)
         if now - self._last_plan >= self.cfg.plan_interval_s:
             self._replan()
+            if self.arbiter is not None:
+                try:
+                    self.arbiter.rebalance(self)
+                except Exception:
+                    pass  # a failing pool callback must not kill the tick
             self._last_plan = now
 
     def _retune_readahead(self) -> None:
@@ -494,6 +511,48 @@ class IOController:
             # dropped spill block into the contended tier exactly once.
         return True
 
+    def compress_for_write(self, name: str) -> bool:
+        """Class-driven codec policy for one block entering the PFS tier
+        (DESIGN.md §13).
+
+        SEQ_ONCE spills, WRITE_BURST checkpoint chunks, and SEQ_REUSE
+        corpora compress by default — their bytes are scanned
+        sequentially, exactly where the smaller cold footprint pays in
+        both PFS MB/s and effective capacity.  LATENCY never compresses:
+        its reads are small and the decode pass is pure added latency.
+        DEFAULT consults the model: compress only while the estimated
+        compressed-read rate ``(1/ratio)·q_pfs`` beats the decode rate
+        (:func:`repro.core.iomodel.compression_wins`); before the first
+        codec samples land it defaults to yes, because the encode-time
+        ratio probe already rejects incompressible blocks for free.
+        """
+        cls = self.classify(name)
+        if cls is StreamClass.LATENCY:
+            return False
+        if cls is not StreamClass.DEFAULT:
+            return True
+        if self.codec_ratio <= 0.0:
+            return True
+        return compression_wins(
+            self.q_read_mbps, self.codec_ratio, self.decode_mbps or None
+        )
+
+    def note_codec(self, op: str, logical: int, physical: int, seconds: float) -> None:
+        """Codec telemetry from the store: one encode ('encode') or decode
+        ('decode') pass of ``logical`` bytes that moved ``physical`` bytes
+        in ``seconds``.  Feeds the EWMA ratio and MB/s estimates the
+        DEFAULT-class policy and the Eq. 7 effective-rate terms use."""
+        if logical <= 0 or physical <= 0:
+            return
+        with self._lock:
+            self.codec_ratio = self._ewma(self.codec_ratio, logical / physical)
+            if seconds > 1e-9:
+                mbps = (logical / MB) / seconds
+                if op == "encode":
+                    self.encode_mbps = self._ewma(self.encode_mbps, mbps)
+                else:
+                    self.decode_mbps = self._ewma(self.decode_mbps, mbps)
+
     def note_eviction(self, bkey: str, read_promoted: bool = True) -> None:
         """Eviction feedback: evicted keys enter the ghost list so a
         re-read soon after proves reuse (and re-promotes immediately).
@@ -643,5 +702,9 @@ class IOController:
             "measured_f": round(self.measured_f(), 4),
             "f_required_for_demand": round(self.f_required_for_demand(), 4),
             "predicted_read_mbps": round(self.predicted_read_mbps(), 1),
+            "codec_ratio": round(self.codec_ratio, 3),
+            "encode_mbps": round(self.encode_mbps, 1),
+            "decode_mbps": round(self.decode_mbps, 1),
+            "arbiter": self.arbiter.report() if self.arbiter is not None else None,
             "classes": classes,
         }

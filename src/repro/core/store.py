@@ -80,10 +80,13 @@ import heapq
 import itertools
 import queue
 import threading
+import time
 from collections import OrderedDict, deque
 from concurrent.futures import ThreadPoolExecutor
 from typing import Iterable, Iterator
 
+from repro.core import codec as blockcodec
+from repro.core.codec import CodecSpec
 from repro.core.layout import BlockLayout
 from repro.core.sched import IOController, StreamClass
 from repro.core.tiers import (
@@ -151,6 +154,16 @@ class _BlockMeta:
     # entry — a written-then-evicted spill block's first read is expected,
     # not proof of reuse.
     promoted: bool = False
+    # Compressed-at-rest state (DESIGN.md §13).  ``crc`` above is always
+    # the *logical* CRC (what the memory tier holds and every caller
+    # reads).  When the PFS copy is a TLC1 container: ``enc`` is the
+    # codec id, ``plen``/``pcrc`` the container's physical length and
+    # transfer-folded CRC, ``findex`` the parsed frame index ranged
+    # reads decode covering frames with.  ``enc is None`` = stored raw.
+    enc: int | None = None
+    plen: int = 0
+    pcrc: int = 0
+    findex: blockcodec.FrameIndex | None = None
 
 
 @dataclasses.dataclass
@@ -357,6 +370,7 @@ class TwoLevelStore:
         flush_workers: int = 2,
         readahead_blocks: int = 2,
         controller: IOController | None = None,
+        codec: CodecSpec | None = None,
         chaos=None,  # runtime.failure.ChaosInjector | None (threaded to the PFS tier)
     ) -> None:
         self.layout = BlockLayout(block_bytes)
@@ -376,6 +390,11 @@ class TwoLevelStore:
         )
         self.write_mode = write_mode
         self.read_mode = read_mode
+        # Transparent block compression (DESIGN.md §13): with a codec spec
+        # every block entering the PFS tier is offered to the encoder
+        # (class policy via the controller, ratio probe inside encode);
+        # without one the store is bit-for-bit the uncompressed system.
+        self.codec = codec
         self.eviction = eviction
         self.cache_on_read = cache_on_read
         self.app_buffer_bytes = app_buffer_bytes
@@ -389,6 +408,12 @@ class TwoLevelStore:
 
         self._files: dict[str, _FileMeta] = {}
         self._blocks: dict[str, _BlockMeta] = {}
+        # Cold-block codec cache: bkey -> FrameIndex (compressed) or None
+        # (raw).  Ranged reads of blocks with no table entry would otherwise
+        # pay a manifest describe + container-head fetch per call; entries
+        # are dropped whenever the block is rewritten or deleted.  Plain
+        # dict ops only (GIL-atomic), same convention as ``_blocks`` reads.
+        self._cold_index: dict[str, blockcodec.FrameIndex | None] = {}
         self._dirty: set[str] = set()
         # Memory-resident keys in LRU order → O(1) LRU victim selection.
         self._resident: OrderedDict[str, None] = OrderedDict()
@@ -823,12 +848,95 @@ class TwoLevelStore:
             if enqueue:
                 self._flush_q.put(bkey)  # blocks when queue is full (bounded)
 
+    # ----------------------------------------------------------------- codec
+
+    @staticmethod
+    def _codec_tag(index: blockcodec.FrameIndex) -> str:
+        """Manifest annotation for a compressed PFS object: logical length
+        + frame size, so any store instance (codec-configured or not) can
+        size and decode a cold container without reading data bytes."""
+        return f"tlc1:{index.logical_len}:{index.frame_bytes}"
+
+    @staticmethod
+    def _parse_codec_tag(tag: str | None) -> tuple[int, int] | None:
+        """``(logical_len, frame_bytes)`` from a manifest codec tag, or
+        ``None`` for an untagged (raw) object."""
+        if not tag or not tag.startswith("tlc1:"):
+            return None
+        parts = tag.split(":")
+        try:
+            logical = int(parts[1])
+            fb = int(parts[2]) if len(parts) > 2 else 256 * 1024
+        except (ValueError, IndexError):
+            return None
+        return logical, fb
+
+    def _encode_block(self, bkey: str, chunk) -> blockcodec.Encoded | None:
+        """Offer one block to the codec for its PFS write.
+
+        ``None`` means write raw: no codec configured, the class policy
+        declined (LATENCY, or a DEFAULT stream the model says loses), or
+        the ratio probe judged the bytes incompressible.
+        """
+        spec = self.codec
+        if spec is None or len(chunk) == 0:
+            return None
+        if self.controller is not None and not self.controller.compress_for_write(
+            bkey.rsplit(":", 1)[0]
+        ):
+            return None
+        t0 = time.perf_counter()
+        enc = blockcodec.encode(chunk, spec)
+        dt = time.perf_counter() - t0
+        if enc is None:
+            return None
+        with self.pfs._stats_lock:
+            self.pfs.stats.record_compress(len(chunk), len(enc.payload), dt)
+        if self.controller is not None:
+            self.controller.note_codec("encode", len(chunk), len(enc.payload), dt)
+        return enc
+
+    def _decode_block(self, bkey: str, payload, frame_bytes: int):
+        """Decode one whole TLC1 container (timed + telemetry).
+
+        Returns ``(logical bytes, logical CRC, FrameIndex)``; any framing
+        inconsistency or codec error raises ``IntegrityError``.
+        """
+        t0 = time.perf_counter()
+        index = blockcodec.parse_index(payload, frame_bytes)
+        raw = blockcodec.decode_frames(payload, index, 0, len(index.frame_lens), whole=True)
+        if len(raw) != index.logical_len:
+            raise IntegrityError(
+                f"container for {bkey} decoded to {len(raw)} bytes, "
+                f"header says {index.logical_len}"
+            )
+        lcrc = crc32_chunked(raw)
+        dt = time.perf_counter() - t0
+        with self.pfs._stats_lock:
+            self.pfs.stats.record_decode(len(raw), len(memoryview(payload)), dt)
+        if self.controller is not None:
+            self.controller.note_codec("decode", len(raw), len(memoryview(payload)), dt)
+        return raw, lcrc, index
+
     def _pfs_put(self, bkey: str, chunk, meta: _BlockMeta | None = None) -> None:
+        enc = self._encode_block(bkey, chunk)
         with self._block_lock(bkey):
-            crc = self.pfs.put(bkey, chunk)
+            self._cold_index.pop(bkey, None)
+            if enc is None:
+                crc = self.pfs.put(bkey, chunk)
+                lcrc, encid, plen, pcrc, findex = crc, None, 0, 0, None
+            else:
+                pcrc = self.pfs.put(bkey, enc.payload, tag=self._codec_tag(enc.index))
+                lcrc, encid, plen, findex = (
+                    enc.logical_crc, enc.index.codec, len(enc.payload), enc.index
+                )
         if meta is not None:
             with self._meta:
-                meta.crc = crc
+                meta.crc = lcrc
+                meta.enc = encid
+                meta.plen = plen
+                meta.pcrc = pcrc
+                meta.findex = findex
 
     # -------------------------------------------------------- async flushing
 
@@ -913,9 +1021,20 @@ class TwoLevelStore:
             view = self.mem.get_view(bkey)
         except BlockNotFound:
             return  # block deleted/superseded since the claim
-        self.pfs.put(bkey, view)
+        enc = self._encode_block(bkey, view)
+        self._cold_index.pop(bkey, None)
+        if enc is None:
+            self.pfs.put(bkey, view)
+            encid, plen, pcrc, findex = None, 0, 0, None
+        else:
+            pcrc = self.pfs.put(bkey, enc.payload, tag=self._codec_tag(enc.index))
+            encid, plen, findex = enc.index.codec, len(enc.payload), enc.index
         with self._meta:
             meta.dirty = False
+            meta.enc = encid
+            meta.plen = plen
+            meta.pcrc = pcrc
+            meta.findex = findex
             self.stats.async_flushes += 1
 
     def drain(self) -> None:
@@ -1100,8 +1219,15 @@ class TwoLevelStore:
             return fmeta
         n = 0
         size = 0
-        while self.pfs.contains(self._bkey(name, n)):
-            size += self.pfs.size_of(self._bkey(name, n))
+        while True:
+            try:
+                psize, tag = self.pfs.describe(self._bkey(name, n))
+            except BlockNotFound:
+                break
+            # A compressed block's manifest records physical size; its
+            # logical size rides in the codec tag.
+            parsed = self._parse_codec_tag(tag)
+            size += parsed[0] if parsed is not None else psize
             n += 1
         if n == 0:
             raise BlockNotFound(name)
@@ -1165,6 +1291,25 @@ class TwoLevelStore:
             return self._read_block(name, idx, mode)[lo:hi]
         with self._meta:
             self.stats.mem_misses += 1
+        # A compressed PFS object's physical offsets are not logical
+        # offsets: fetch + decode only the covering frames via the frame
+        # index (from the block table, or parsed from the container head
+        # for a cold block the manifest tag marks compressed).
+        index = meta.findex if meta is not None and meta.enc is not None else None
+        if index is None and meta is None:
+            if bkey in self._cold_index:
+                index = self._cold_index[bkey]
+            else:
+                try:
+                    _, tag = self.pfs.describe(bkey)
+                except BlockNotFound:
+                    tag = None
+                parsed = self._parse_codec_tag(tag)
+                if parsed is not None:
+                    index = self._cold_frame_index(bkey, parsed[0], parsed[1])
+                self._cold_index[bkey] = index
+        if index is not None:
+            return self._read_range_compressed(bkey, index, lo, hi)
         buf = bytearray(hi - lo)
         n, _ = self.pfs.readinto(bkey, buf, offset=lo, length=hi - lo)
         if n < hi - lo:
@@ -1172,6 +1317,39 @@ class TwoLevelStore:
                 self.stats.integrity_failures += 1
             raise IntegrityError(f"short PFS range read for {bkey}")
         return memoryview(buf)[:n]
+
+    def _cold_frame_index(self, bkey: str, logical_len: int, frame_bytes: int):
+        """Frame index of a cold compressed block: fetch just the container
+        head (header + frame table — the manifest tag sized it) and parse."""
+        head_len = blockcodec.index_bytes(logical_len, frame_bytes)
+        buf = bytearray(head_len)
+        n, _ = self.pfs.readinto(bkey, buf, offset=0, length=head_len)
+        if n < head_len:
+            with self._meta:
+                self.stats.integrity_failures += 1
+            raise IntegrityError(f"short container-head read for {bkey}")
+        return blockcodec.parse_index(buf, frame_bytes)
+
+    def _read_range_compressed(self, bkey: str, index: blockcodec.FrameIndex, lo: int, hi: int):
+        """Serve logical ``[lo, hi)`` of one compressed block: read the
+        physical span of the covering frames, decode only those, slice."""
+        first, last = index.frame_range(lo, hi)
+        off, plen = index.physical_span(first, last)
+        buf = bytearray(plen)
+        n, _ = self.pfs.readinto(bkey, buf, offset=off, length=plen)
+        if n < plen:
+            with self._meta:
+                self.stats.integrity_failures += 1
+            raise IntegrityError(f"short PFS range read for {bkey}")
+        t0 = time.perf_counter()
+        raw = blockcodec.decode_frames(buf, index, first, last, whole=False)
+        dt = time.perf_counter() - t0
+        with self.pfs._stats_lock:
+            self.pfs.stats.record_decode(len(raw), plen, dt)
+        if self.controller is not None:
+            self.controller.note_codec("decode", len(raw), plen, dt)
+        base = first * index.frame_bytes
+        return memoryview(raw)[lo - base : hi - base]
 
     def _read_block(self, name: str, idx: int, mode: ReadMode):
         """Fetch one block: memory view on a hit, parallel PFS stripes on a miss."""
@@ -1209,10 +1387,25 @@ class TwoLevelStore:
             raise BlockNotFound(bkey)
         with self._meta:
             self.stats.mem_misses += 1
+        # Physical geometry of the cold copy: a compressed block is read at
+        # its container length; a cold block with no table entry learns
+        # whether it is a container from the manifest codec tag — no data
+        # bytes move to find out.
+        enc = meta.enc if meta is not None else None
+        findex = meta.findex if meta is not None else None
+        cold_tag = None
+        if meta is not None:
+            psize = meta.plen if enc is not None else meta.length
+        else:
+            try:
+                psize, tag = self.pfs.describe(bkey)
+            except BlockNotFound:
+                psize, tag = self.layout.block_size, None
+            cold_tag = self._parse_codec_tag(tag)
         # Stripe-parallel zero-copy fetch: stripes assemble straight into the
         # block buffer and the verified per-stripe CRCs combine into the
-        # whole-block CRC, so the end-to-end check costs no extra data pass.
-        buf = bytearray(meta.length if meta is not None else self.layout.block_size)
+        # whole-object CRC, so the end-to-end check costs no extra data pass.
+        buf = bytearray(psize)
         try:
             n, crc = self.pfs.readinto(bkey, buf)
         except ValueError:
@@ -1222,16 +1415,42 @@ class TwoLevelStore:
         data = memoryview(buf)[:n]
         if crc is None:
             crc = crc32_chunked(data)
-        if meta is not None and (n != meta.length or crc != meta.crc):
-            with self._meta:
-                self.stats.integrity_failures += 1
-            raise IntegrityError(f"PFS CRC mismatch for {bkey}")
+        if enc is not None or cold_tag is not None:
+            # Transfer-folded CRC verified the *physical* (compressed)
+            # bytes; the decode pass re-derives the logical CRC — still no
+            # extra pass over the data (DESIGN.md §13).
+            if meta is not None and (n != meta.plen or crc != meta.pcrc):
+                with self._meta:
+                    self.stats.integrity_failures += 1
+                raise IntegrityError(f"PFS CRC mismatch for {bkey}")
+            if findex is not None:
+                fb = findex.frame_bytes
+            elif cold_tag is not None:
+                fb = cold_tag[1]
+            else:
+                fb = self.codec.frame_bytes if self.codec else 256 * 1024
+            pcrc, plen = crc, n
+            raw, lcrc, findex = self._decode_block(bkey, data, fb)
+            if meta is not None and (len(raw) != meta.length or lcrc != meta.crc):
+                with self._meta:
+                    self.stats.integrity_failures += 1
+                raise IntegrityError(f"decoded block mismatch for {bkey}")
+            data, crc, enc = memoryview(raw), lcrc, findex.codec
+        else:
+            pcrc = plen = 0
+            if meta is not None and (n != meta.length or crc != meta.crc):
+                with self._meta:
+                    self.stats.integrity_failures += 1
+                raise IntegrityError(f"PFS CRC mismatch for {bkey}")
         if (
             mode is ReadMode.TIERED
             and self.cache_on_read
             and (self.controller is None or self.controller.admit(name, bkey))
         ):
-            new_meta = meta or _BlockMeta(key=bkey, length=len(data), crc=crc)
+            new_meta = meta or _BlockMeta(
+                key=bkey, length=len(data), crc=crc,
+                enc=enc, plen=plen, pcrc=pcrc, findex=findex,
+            )
             try:
                 self._cache_block(new_meta, data)
                 with self._meta:
@@ -1251,21 +1470,36 @@ class TwoLevelStore:
             n += 1
         if n == 0:
             raise BlockNotFound(name)
+
+        def fetch(i: int) -> tuple[bytes, _BlockMeta]:
+            """One block → its logical bytes + a fully described meta
+            (compressed objects decode here; raw ones pass through)."""
+            bkey = self._bkey(name, i)
+            blob = self.pfs.get(bkey)
+            try:
+                _, tag = self.pfs.describe(bkey)
+            except BlockNotFound:
+                tag = None
+            parsed = self._parse_codec_tag(tag)
+            if parsed is None:
+                return blob, _BlockMeta(key=bkey, length=len(blob), crc=crc32_chunked(blob))
+            raw, lcrc, index = self._decode_block(bkey, blob, parsed[1])
+            return raw, _BlockMeta(
+                key=bkey, length=len(raw), crc=lcrc,
+                enc=index.codec, plen=len(blob),
+                pcrc=crc32_chunked(blob), findex=index,
+            )
+
         if n == 1:
-            parts = [self.pfs.get(self._bkey(name, 0))]
+            parts = [fetch(0)]
         else:
-            parts = list(self._pool.map(lambda i: self.pfs.get(self._bkey(name, i)), range(n)))
-        data = b"".join(parts)
+            parts = list(self._pool.map(fetch, range(n)))
+        data = b"".join(blob for blob, _ in parts)
         with self._meta:
             self._files[name] = _FileMeta(size=len(data), n_blocks=n)
-            off = 0
-            for i, part in enumerate(parts):
-                bkey = self._bkey(name, i)
-                if bkey not in self._blocks:
-                    self._blocks[bkey] = _BlockMeta(
-                        key=bkey, length=len(part), crc=crc32_chunked(part)
-                    )
-                off += len(part)
+            for _, meta in parts:
+                if meta.key not in self._blocks:
+                    self._blocks[meta.key] = meta
         return data
 
     # ---------------------------------------------------------------- manage
@@ -1318,6 +1552,7 @@ class TwoLevelStore:
             with self._block_lock(bkey):
                 in_mem = self.mem.delete(bkey)
                 in_pfs = self.pfs.delete(bkey)
+            self._cold_index.pop(bkey, None)
             with self._meta:
                 self._blocks.pop(bkey, None)
                 self._dirty.discard(bkey)
@@ -1351,6 +1586,100 @@ class TwoLevelStore:
             return blob, meta.crc
         finally:
             flock.release_read()
+
+    def peek_block_wire(self, name: str, idx: int) -> tuple[bytes, int, int | None, int] | None:
+        """Peer-wire variant of :meth:`peek_block` (DESIGN.md §13):
+        ``(payload, crc, enc, frame_bytes)`` or ``None`` when not hot.
+
+        ``enc is None`` → raw logical bytes + logical CRC, bit-identical
+        to :meth:`peek_block`.  When the store carries a codec and the
+        block's class already proved compressible (its durable copy is a
+        container), the hot bytes are re-encoded so the wire moves the
+        smaller container + its *compressed* CRC — the receiver checks
+        transport integrity over the compressed bytes and decodes locally.
+        """
+        flock = self._acquire_file(name, write=False)
+        try:
+            bkey = self._bkey(name, idx)
+            blob = self.mem.peek(bkey)
+            meta = self._blocks.get(bkey)
+            if blob is None or meta is None:
+                return None
+            if self.codec is not None and meta.enc is not None:
+                t0 = time.perf_counter()
+                enc = blockcodec.encode(blob, self.codec)
+                if enc is not None:
+                    dt = time.perf_counter() - t0
+                    if self.controller is not None:
+                        self.controller.note_codec(
+                            "encode", len(blob), len(enc.payload), dt
+                        )
+                    return (
+                        enc.payload,
+                        crc32_chunked(enc.payload),
+                        enc.index.codec,
+                        enc.index.frame_bytes,
+                    )
+            return blob, meta.crc, None, 0
+        finally:
+            flock.release_read()
+
+    # --------------------------------------------------------------- arbiter
+
+    def set_mem_capacity(self, capacity_bytes: int) -> None:
+        """Retarget the memory tier's capacity, evicting down to fit — the
+        elastic arbiter's resize hook for the store's pool.  Shrinks drain
+        through the normal victim path (dirty blocks flush before their
+        copy goes), so durability is never traded for the new budget."""
+        self.mem.set_capacity(capacity_bytes)
+        while self.mem.used_bytes > capacity_bytes:
+            victim = self._pop_victim()
+            if victim is None:
+                break
+            self._evict(victim)
+
+    def attach_arbiter(self, arbiter, min_bytes: int = 0, weight: float = 1.0):
+        """Register the memory tier as pool ``"mem_tier"`` of an elastic
+        :class:`~repro.core.arbiter.MemoryArbiter` (DESIGN.md §13).
+
+        The pool's ``value_fn`` doubles as the per-tick ledger refresh: it
+        folds the store's live hit/miss/eviction deltas into the pool and
+        returns a DEFAULT-class marginal value scaled by the measured miss
+        rate (evictions signal demand beyond the current budget).  Budget
+        changes land through :meth:`set_mem_capacity`.  Also wires the
+        arbiter into the store's controller plan tick when one is bound.
+        """
+        pool = arbiter.register(
+            "mem_tier",
+            cls="default",
+            min_bytes=min_bytes,
+            weight=weight,
+            initial_bytes=self.mem.capacity_bytes,
+            on_resize=self.set_mem_capacity,
+        )
+        last = {"h": 0, "m": 0, "e": 0}
+
+        def value_fn() -> float:
+            s = self.stats
+            dh, dm = s.mem_hits - last["h"], s.mem_misses - last["m"]
+            de = s.evictions - last["e"]
+            last.update(h=s.mem_hits, m=s.mem_misses, e=s.evictions)
+            pool.note_used(self.mem.used_bytes)
+            # Evictions mean the tier wants more than it holds; otherwise
+            # its demand is what it currently holds.
+            pool.note_demand(
+                int(self.mem.capacity_bytes * 1.5) if de else self.mem.used_bytes
+            )
+            if dh or dm:
+                pool.note_hit(dh)
+                pool.note_miss(dm)
+            miss = dm / (dh + dm) if (dh + dm) else 0.0
+            return 4.0 * weight * (1.0 + 4.0 * miss)
+
+        pool.value_fn = value_fn
+        if self.controller is not None:
+            self.controller.arbiter = arbiter
+        return pool
 
     def adopt_cold(self, name: str) -> bool:
         """Register a PFS-only file written by another store instance.

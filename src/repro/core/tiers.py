@@ -147,6 +147,14 @@ class TierStats:
     # pooled buffer was reused vs freshly allocated.
     buf_allocs: int = 0
     buf_reuses: int = 0
+    # Codec ledger (DESIGN.md §13): logical bytes are what the application
+    # wrote/read, physical bytes are what actually crossed this tier after
+    # compression.  Both encode and decode events contribute a (logical,
+    # physical) pair, so ``compression_ratio`` reflects the traffic mix.
+    bytes_logical: int = 0
+    bytes_physical: int = 0
+    compress_seconds: float = 0.0
+    decode_seconds: float = 0.0
 
     def record_read(self, nbytes: int, seconds: float, end: float | None = None) -> None:
         end = time.perf_counter() if end is None else end
@@ -188,6 +196,20 @@ class TierStats:
             self.buf_reuses += 1
         else:
             self.buf_allocs += 1
+
+    def record_compress(self, logical: int, physical: int, seconds: float) -> None:
+        self.bytes_logical += logical
+        self.bytes_physical += physical
+        self.compress_seconds += seconds
+
+    def record_decode(self, logical: int, physical: int, seconds: float) -> None:
+        self.bytes_logical += logical
+        self.bytes_physical += physical
+        self.decode_seconds += seconds
+
+    def compression_ratio(self) -> float:
+        """logical/physical over all codec traffic; 1.0 when no codec ran."""
+        return self.bytes_logical / self.bytes_physical if self.bytes_physical else 1.0
 
     def read_mbps(self) -> float:
         return self.bytes_read / 2**20 / self.read_seconds if self.read_seconds else 0.0
@@ -254,6 +276,10 @@ class TierStats:
             write_bursts=self.write_bursts + other.write_bursts,
             buf_allocs=self.buf_allocs + other.buf_allocs,
             buf_reuses=self.buf_reuses + other.buf_reuses,
+            bytes_logical=self.bytes_logical + other.bytes_logical,
+            bytes_physical=self.bytes_physical + other.bytes_physical,
+            compress_seconds=self.compress_seconds + other.compress_seconds,
+            decode_seconds=self.decode_seconds + other.decode_seconds,
         )
         starts = [s for s in (self.read_span_start, other.read_span_start) if s]
         out.read_span_start = min(starts) if starts else 0.0
@@ -389,6 +415,18 @@ class MemoryTier:
         with self._lock:
             return list(self._data)
 
+    def set_capacity(self, capacity_bytes: int) -> None:
+        """Retarget the tier's capacity (the memory arbiter's resize hook).
+
+        Shrinking below current usage is allowed — the tier simply refuses
+        *new* puts until the owner (the store's eviction loop) drains it
+        down; resident blocks are never dropped here, because victim
+        selection is store policy, not tier mechanics.
+        """
+        if capacity_bytes <= 0:
+            raise ValueError("capacity must be positive")
+        self.capacity_bytes = capacity_bytes
+
     @property
     def used_bytes(self) -> int:
         return self._used
@@ -507,13 +545,18 @@ class PFSTier:
 
     # -- core ops -------------------------------------------------------------
 
-    def put(self, key: str, data) -> int:
+    def put(self, key: str, data, tag: str | None = None) -> int:
         """Write one object; returns the CRC32 of the whole object.
 
         Stripe units stream out concurrently, each folding its CRC over the
         4 MB chunks it writes; the unit CRCs are then combined
         (``crc32_combine``) into the object CRC — integrity metadata for
         the layer above at zero extra passes over the data.
+
+        ``tag`` is an opaque single-line annotation stored in the manifest
+        (the store marks compressed containers ``tlc1:<logical_len>`` so a
+        cold scan learns logical sizes without reading any data bytes);
+        :meth:`describe` reads it back.
         """
         t0 = time.perf_counter()
         mv = memoryview(data)
@@ -550,7 +593,7 @@ class PFSTier:
 
         with self._key_lock(key):
             crcs = self._map_units(write_unit, units)
-            self._write_manifest(key, len(mv), crcs)
+            self._write_manifest(key, len(mv), crcs, tag)
             # In-place overwrite with fewer units: unlink the stale tail
             # (units are contiguous, so probe until the first missing file).
             unit = len(units)
@@ -568,8 +611,13 @@ class PFSTier:
             whole = crc32_combine(whole, crc, ln)
         return whole
 
-    def _write_manifest(self, key: str, total: int, crcs: list[int]) -> None:
+    def _write_manifest(self, key: str, total: int, crcs: list[int],
+                        tag: str | None = None) -> None:
         manifest = f"{total}\n" + "\n".join(f"{c:08x}" for c in crcs) + "\n"
+        if tag:
+            if "\n" in tag:
+                raise ValueError("manifest tag must be a single line")
+            manifest += f"#{tag}\n"
         path = self._manifest_path(key)
         tmp = path + ".tmp"
         with open(tmp, "w") as fh:
@@ -585,7 +633,18 @@ class PFSTier:
                 lines = fh.read().splitlines()
         except FileNotFoundError:
             raise BlockNotFound(key) from None
-        return int(lines[0]), [int(x, 16) for x in lines[1:] if x]
+        # "#"-prefixed lines are tags (see put); CRC lines are bare hex.
+        return int(lines[0]), [int(x, 16) for x in lines[1:] if x and not x.startswith("#")]
+
+    def describe(self, key: str) -> tuple[int, str | None]:
+        """``(physical size, manifest tag)`` without touching data bytes."""
+        try:
+            with open(self._manifest_path(key)) as fh:
+                lines = fh.read().splitlines()
+        except FileNotFoundError:
+            raise BlockNotFound(key) from None
+        tag = next((x[1:] for x in lines[1:] if x.startswith("#")), None)
+        return int(lines[0]), tag
 
     def _read_unit_into(self, key: str, unit: int, uln: int, dst: memoryview, crc_want: int) -> None:
         """Fill ``dst`` (length ``uln``) from one stripe file, checking CRC."""

@@ -152,12 +152,26 @@ class _SlabCache:
     the working set of the current permutation rounds resident.
     """
 
+    #: token width — slabs are int32 token arrays
+    TOKEN_BYTES = 4
+
     def __init__(self, corpus: SyntheticCorpus, slab_tokens: int, capacity: int, stats: LoaderStats) -> None:
         self.corpus = corpus
         self.slab_tokens = slab_tokens
         self.capacity = max(1, capacity)
         self.stats = stats
         self._slabs: OrderedDict[tuple[int, int], np.ndarray] = OrderedDict()
+
+    @property
+    def bytes_per_slab(self) -> int:
+        return self.slab_tokens * self.TOKEN_BYTES
+
+    def set_capacity_bytes(self, nbytes: int) -> None:
+        """Retarget the cache budget (the elastic arbiter's resize hook,
+        DESIGN.md §13).  Only the target moves here; a shrink drains
+        through ``get``'s own LRU trim on the next fill — the cache is
+        single-consumer, so no cross-thread eviction races."""
+        self.capacity = max(1, int(nbytes) // self.bytes_per_slab)
 
     def get(self, shard: int, slab_idx: int) -> np.ndarray:
         key = (shard, slab_idx)
@@ -261,6 +275,47 @@ class ShardedLoader:
         if self.shard_owner_map is not None:
             return self.shard_owner_map[shard]
         return min(shard * self.n_hosts // self.corpus.n_shards, self.n_hosts - 1)
+
+    def attach_arbiter(self, arbiter, min_bytes: int = 0, weight: float = 1.0):
+        """Register the slab cache as pool ``"loader_slabs"`` (SEQ_REUSE)
+        of an elastic :class:`~repro.core.arbiter.MemoryArbiter`.
+
+        The pool's ``value_fn`` doubles as its per-tick ledger refresh:
+        slab hit/miss deltas from :class:`LoaderStats` become the miss
+        rate the arbiter scales marginal value by, and a full cache
+        signals demand above the current budget.  Budget changes land via
+        :meth:`_SlabCache.set_capacity_bytes` (DESIGN.md §13).
+        """
+        cache = self._cache
+        bps = cache.bytes_per_slab
+        pool = arbiter.register(
+            "loader_slabs",
+            cls="seq_reuse",
+            min_bytes=max(min_bytes, bps),
+            weight=weight,
+            initial_bytes=cache.capacity * bps,
+            on_resize=cache.set_capacity_bytes,
+        )
+        last = {"h": 0, "m": 0}
+
+        def value_fn() -> float:
+            s = self.stats
+            dh, dm = s.slab_hits - last["h"], s.slab_misses - last["m"]
+            last.update(h=s.slab_hits, m=s.slab_misses)
+            held = len(cache._slabs) * bps
+            pool.note_used(held)
+            # A cache running at capacity wants head-room; one with slack
+            # only asks for what it holds.
+            full = len(cache._slabs) >= cache.capacity
+            pool.note_demand(int(cache.capacity * bps * 1.5) if full else held)
+            if dh or dm:
+                pool.note_hit(dh)
+                pool.note_miss(dm)
+            miss = dm / (dh + dm) if (dh + dm) else 0.0
+            return 8.0 * weight * (1.0 + 4.0 * miss)
+
+        pool.value_fn = value_fn
+        return pool
 
     def _window_shard(self, w: int) -> int:
         """Home shard of window ``w`` (the shard holding its first token)."""

@@ -139,6 +139,10 @@ class CheckpointManager:
         self._pending_lock = threading.Lock()
         #: wall seconds save() spent on the caller's critical path, per save
         self.save_critical_s: list[float] = []
+        # Elastic-arbiter staging ledger (DESIGN.md §13): host bytes of
+        # async-save snapshots still queued/serializing on the lane.
+        self._inflight_bytes = 0
+        self._arb_pool = None
 
     # -------------------------------------------------------------- naming
 
@@ -171,12 +175,60 @@ class CheckpointManager:
             # Surface failures of already-finished saves without blocking on
             # the one still in flight — the critical path stays snapshot-only.
             self._join_pending(wait=False)
-            fut = self._bg.submit(self._serialize_and_put, step, named)
+            nbytes = sum(a.nbytes for _, a in named)
+            if self._arb_pool is not None:
+                with self._pending_lock:
+                    over = self._inflight_bytes + nbytes > max(
+                        self._arb_pool.budget, nbytes
+                    )
+                if over:
+                    # Staging budget exhausted: drain the lane before
+                    # snapshotting another copy — the arbiter throttles
+                    # async staging instead of letting it balloon.
+                    self._join_pending(wait=True)
+            with self._pending_lock:
+                self._inflight_bytes += nbytes
+            fut = self._bg.submit(self._bg_save, step, named, nbytes)
             with self._pending_lock:
                 self._pending.append(fut)
         else:
             self._serialize_and_put(step, named)
         self.save_critical_s.append(time.perf_counter() - t0)
+
+    def _bg_save(self, step: int, named: list[tuple[str, np.ndarray]], nbytes: int) -> None:
+        try:
+            self._serialize_and_put(step, named)
+        finally:
+            with self._pending_lock:
+                self._inflight_bytes = max(0, self._inflight_bytes - nbytes)
+
+    def attach_arbiter(self, arbiter, min_bytes: int = 0, weight: float = 1.0):
+        """Register async-save staging as pool ``"ckpt_staging"``
+        (WRITE_BURST) of an elastic
+        :class:`~repro.core.arbiter.MemoryArbiter` (DESIGN.md §13).
+
+        The pool floors to live usage — a snapshot mid-serialize cannot be
+        dropped — and when in-flight snapshot bytes exceed the budget the
+        next async :meth:`save` drains the lane before copying more.
+        """
+        pool = arbiter.register(
+            "ckpt_staging",
+            cls="write_burst",
+            min_bytes=min_bytes,
+            weight=weight,
+            floor_to_usage=True,
+        )
+
+        def value_fn() -> float:
+            with self._pending_lock:
+                held = self._inflight_bytes
+            pool.note_used(held)
+            pool.note_demand(max(held, pool.min_bytes))
+            return 2.0 * weight
+
+        pool.value_fn = value_fn
+        self._arb_pool = pool
+        return pool
 
     def _serialize_and_put(self, step: int, named: list[tuple[str, np.ndarray]]) -> None:
         leaves, chunks = _pack_chunks(named, self.chunk_bytes)

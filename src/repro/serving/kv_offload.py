@@ -145,6 +145,36 @@ class TieredKVCache:
 
             store.hint_stream(store_prefix + "/", StreamClass.LATENCY)
 
+    def attach_arbiter(self, arbiter, min_bytes: int = 0, weight: float = 1.0):
+        """Register the host KV history as pool ``"kv_staging"`` (LATENCY)
+        of an elastic :class:`~repro.core.arbiter.MemoryArbiter`.
+
+        The pool floors to live usage (``floor_to_usage``): decode
+        correctness needs every appended token's host copy, so the arbiter
+        may route *idle* headroom elsewhere but can never ask this pool to
+        shed held bytes.  Usage grows with decoded length; demand is the
+        full ``max_len`` history the buffers were provisioned for.
+        """
+        per_token = (
+            2 * self.batch * self.kv * self.dim * self.cold_k.dtype.itemsize
+        )
+        pool = arbiter.register(
+            "kv_staging",
+            cls="latency",
+            min_bytes=min_bytes,
+            weight=weight,
+            initial_bytes=per_token * self.max_len,
+            floor_to_usage=True,
+        )
+
+        def value_fn() -> float:
+            pool.note_used(per_token * self.length)
+            pool.note_demand(per_token * self.max_len)
+            return 16.0 * weight
+
+        pool.value_fn = value_fn
+        return pool
+
     # ------------------------------------------------------- store offload
 
     def _page_file(self, p: int) -> str:

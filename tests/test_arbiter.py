@@ -1,0 +1,217 @@
+"""MemoryArbiter: registration, water-fill, hysteresis, floors, boosts.
+
+The arbiter is a pure control-plane object — no threads of its own — so
+every property here drives ``rebalance()`` directly and inspects the
+resulting budgets.
+"""
+
+from __future__ import annotations
+
+import pytest
+
+from repro.core.arbiter import MemoryArbiter
+
+MB = 2**20
+
+
+def test_register_and_release():
+    arb = MemoryArbiter(total_bytes=64 * MB)
+    a = arb.register("a")
+    assert a.budget == 64 * MB  # sole pool gets the whole pot initially
+    b = arb.register("b", initial_bytes=8 * MB)
+    assert set(arb.pools()) == {"a", "b"}
+    with pytest.raises(ValueError):
+        arb.register("a")
+    b.release()
+    assert set(arb.pools()) == {"a"}
+
+
+def test_budgets_sum_to_total_after_convergence():
+    arb = MemoryArbiter(total_bytes=64 * MB)
+    pools = [arb.register(f"p{i}", initial_bytes=MB) for i in range(4)]
+    for p in pools:
+        p.note_demand(64 * MB)
+    for _ in range(32):
+        arb.rebalance()
+    total = sum(p.budget for p in pools)
+    assert total <= 64 * MB
+    assert total >= 60 * MB  # deadband slack only
+
+
+def test_class_priority_orders_grants():
+    """With equal demand, latency > seq_reuse > default > write_burst >
+    seq_once in granted bytes."""
+    arb = MemoryArbiter(total_bytes=100 * MB)
+    order = ["latency", "seq_reuse", "default", "write_burst", "seq_once"]
+    pools = {c: arb.register(c, cls=c, initial_bytes=MB) for c in order}
+    for p in pools.values():
+        p.note_demand(100 * MB)
+    for _ in range(64):
+        arb.rebalance()
+    grants = [pools[c].budget for c in order]
+    assert grants == sorted(grants, reverse=True)
+    assert grants[0] > 2 * grants[-1]
+
+
+def test_demand_cap_sheds_idle_bytes_to_busy_pools():
+    arb = MemoryArbiter(total_bytes=64 * MB)
+    idle = arb.register("idle", cls="latency", initial_bytes=32 * MB)
+    busy = arb.register("busy", cls="seq_once", initial_bytes=32 * MB)
+    idle.note_demand(1 * MB)  # high class weight but tiny demand
+    busy.note_demand(64 * MB)
+    for _ in range(64):
+        arb.rebalance()
+    assert idle.budget <= int(1 * MB * 1.25) + int(64 * MB * 0.01)
+    assert busy.budget > 48 * MB
+
+
+def test_hysteresis_bounds_per_tick_moves():
+    arb = MemoryArbiter(total_bytes=64 * MB, hysteresis_frac=0.125)
+    a = arb.register("a", initial_bytes=60 * MB)
+    b = arb.register("b", initial_bytes=4 * MB)
+    a.note_demand(0)
+    b.note_demand(64 * MB)
+    before = (a.budget, b.budget)
+    arb.rebalance()
+    max_move = int(64 * MB * 0.125)
+    assert abs(a.budget - before[0]) <= max_move
+    assert abs(b.budget - before[1]) <= max_move
+
+
+def test_min_bytes_floor_is_never_breached():
+    arb = MemoryArbiter(total_bytes=64 * MB)
+    small = arb.register("small", cls="seq_once", min_bytes=8 * MB,
+                         initial_bytes=8 * MB)
+    greedy = arb.register("greedy", cls="latency", initial_bytes=56 * MB)
+    small.note_demand(8 * MB)
+    greedy.note_demand(64 * MB)
+    for _ in range(64):
+        arb.rebalance()
+    assert small.budget >= 8 * MB
+
+
+def test_floor_to_usage_protects_inflight_bytes():
+    arb = MemoryArbiter(total_bytes=64 * MB)
+    stage = arb.register("stage", cls="write_burst", initial_bytes=32 * MB,
+                         floor_to_usage=True)
+    hog = arb.register("hog", cls="latency", initial_bytes=32 * MB)
+    stage.note_used(20 * MB)
+    stage.note_demand(20 * MB)
+    hog.note_demand(64 * MB)
+    for _ in range(64):
+        arb.rebalance()
+    assert stage.budget >= 20 * MB
+
+
+def test_miss_rate_boost_grows_thrashing_pool():
+    arb = MemoryArbiter(total_bytes=64 * MB)
+    cold = arb.register("cold", cls="default", initial_bytes=32 * MB)
+    hot = arb.register("hot", cls="default", initial_bytes=32 * MB)
+    for _ in range(32):
+        cold.note_demand(64 * MB)
+        hot.note_demand(64 * MB)
+        cold.note_hit(100)          # all hits: happy at current size
+        hot.note_miss(80)           # thrashing: wants more bytes
+        hot.note_hit(20)
+        arb.rebalance()
+    assert hot.budget > cold.budget
+
+
+def test_value_fn_overrides_class_base():
+    arb = MemoryArbiter(total_bytes=64 * MB)
+    lo = arb.register("lo", cls="latency", initial_bytes=32 * MB,
+                      value_fn=lambda: 0.1)
+    hi = arb.register("hi", cls="seq_once", initial_bytes=32 * MB,
+                      value_fn=lambda: 100.0)
+    lo.note_demand(64 * MB)
+    hi.note_demand(64 * MB)
+    for _ in range(64):
+        arb.rebalance()
+    assert hi.budget > lo.budget
+
+
+def test_failing_value_fn_does_not_kill_rebalance():
+    arb = MemoryArbiter(total_bytes=64 * MB)
+
+    def boom():
+        raise RuntimeError("client bug")
+
+    p = arb.register("p", value_fn=boom)
+    q = arb.register("q")
+    p.note_demand(64 * MB)
+    q.note_demand(64 * MB)
+    out = arb.rebalance()
+    assert set(out) == {"p", "q"}
+
+
+def test_on_resize_called_outside_lock_and_exceptions_swallowed():
+    arb = MemoryArbiter(total_bytes=64 * MB)
+    calls = []
+
+    def resize_ok(n):
+        calls.append(n)
+
+    def resize_boom(n):
+        raise RuntimeError("evict failed")
+
+    a = arb.register("a", initial_bytes=2 * MB, on_resize=resize_ok)
+    b = arb.register("b", initial_bytes=2 * MB, on_resize=resize_boom)
+    a.note_demand(64 * MB)
+    b.note_demand(64 * MB)
+    arb.rebalance()
+    assert calls and calls[-1] == a.budget
+
+
+def test_under_target_class_gets_model_boost():
+    """A controller whose class_stats mark a class under its Eq. 7 target
+    doubles that class's marginal value."""
+
+    class _CS:
+        footprint_bytes = 1 << 20
+        target_f = 0.8
+
+        @staticmethod
+        def measured_f():
+            return 0.1  # far under target
+
+    class _Cls:
+        value = "seq_reuse"
+
+    class _Ctl:
+        class_stats = {_Cls(): _CS()}
+
+    arb = MemoryArbiter(total_bytes=64 * MB)
+    boosted = arb.register("boosted", cls="seq_reuse", initial_bytes=32 * MB)
+    other = arb.register("other", cls="seq_reuse", initial_bytes=32 * MB)
+    # Same class: both boosted — compare against a run with no controller
+    # to check the boost itself is applied (budgets move faster).
+    boosted.note_demand(64 * MB)
+    other.note_demand(64 * MB)
+    out = arb.rebalance(_Ctl())
+    assert set(out) == {"boosted", "other"}
+
+    # Differential check: boosted class vs plain class of equal base.
+    arb2 = MemoryArbiter(total_bytes=64 * MB)
+    x = arb2.register("x", cls="seq_reuse", initial_bytes=32 * MB)
+    y = arb2.register("y", cls="seq_reuse", initial_bytes=32 * MB)
+    x.note_demand(64 * MB)
+    y.note_demand(64 * MB)
+
+    class _ClsX:
+        value = "seq_reuse"
+
+    # Mark only via a custom value_fn-free path is class-wide, so instead
+    # verify the boost via _marginal_value directly.
+    v_plain = arb2._marginal_value(x, set())
+    v_boost = arb2._marginal_value(x, {"seq_reuse"})
+    assert v_boost == pytest.approx(2.0 * v_plain)
+
+
+def test_report_shape():
+    arb = MemoryArbiter(total_bytes=64 * MB)
+    p = arb.register("p", cls="latency")
+    p.note_used(MB)
+    rep = arb.report()
+    assert rep["total_bytes"] == 64 * MB
+    assert rep["pools"]["p"]["cls"] == "latency"
+    assert rep["pools"]["p"]["used"] == MB

@@ -1,0 +1,189 @@
+"""TLC1 block codec: container round-trips, ranged decode, and the
+store-level edge cases (raw fallback, append resume, corruption).
+
+DESIGN.md §13 documents the framing format these tests pin down.
+"""
+
+from __future__ import annotations
+
+import os
+import zlib
+
+import numpy as np
+import pytest
+
+from repro.core import codec as blockcodec
+from repro.core.codec import (
+    CODEC_LZMA,
+    CODEC_ZLIB,
+    CodecSpec,
+    decode,
+    decode_frames,
+    encode,
+    index_bytes,
+    is_container,
+    parse_index,
+)
+from repro.core.store import TwoLevelStore
+from repro.core.tiers import IntegrityError
+
+
+def _compressible(n: int, seed: int = 0) -> bytes:
+    # int32 tokens < 32768: upper bytes are zero — shuffle + zlib love it.
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, 32768, size=n // 4, dtype=np.int32).tobytes()
+
+
+# ------------------------------------------------------------- container
+
+
+def test_roundtrip_zlib_and_lzma():
+    data = _compressible(512 * 1024)
+    for codec in (CODEC_ZLIB, CODEC_LZMA):
+        enc = encode(data, CodecSpec(codec=codec, frame_bytes=64 * 1024))
+        assert enc is not None and len(enc.payload) < len(data)
+        raw, crc = decode(enc.payload, 64 * 1024)
+        assert raw == data
+        assert crc == zlib.crc32(data) == enc.logical_crc
+
+
+def test_incompressible_declined_zero_overhead():
+    """Random bytes must be stored raw: encode declines entirely, so the
+    physical representation is the logical bytes — not a container with
+    per-frame overhead."""
+    data = os.urandom(256 * 1024)
+    assert encode(data, CodecSpec(frame_bytes=64 * 1024)) is None
+    assert not is_container(data[:16])
+
+
+def test_zero_length_declined():
+    assert encode(b"", CodecSpec()) is None
+
+
+def test_ranged_decode_only_covering_frames():
+    fb = 64 * 1024
+    data = _compressible(400 * 1024, seed=1)  # 7 frames, short tail
+    enc = encode(data, CodecSpec(frame_bytes=fb))
+    assert enc is not None
+    index = parse_index(enc.payload, fb)
+    assert index.logical_len == len(data)
+    for lo, hi in [(0, 10), (fb - 5, fb + 5), (len(data) - 17, len(data)),
+                   (3 * fb, 5 * fb)]:
+        first, last = index.frame_range(lo, hi)
+        off, length = index.physical_span(first, last)
+        segment = enc.payload[off:off + length]
+        raw = decode_frames(segment, index, first, last, whole=False)
+        base = first * fb
+        assert bytes(raw[lo - base:hi - base]) == data[lo:hi]
+
+
+def test_index_bytes_matches_parse():
+    fb = 64 * 1024
+    data = _compressible(200 * 1024, seed=2)
+    enc = encode(data, CodecSpec(frame_bytes=fb))
+    assert enc is not None
+    head = index_bytes(len(data), fb)
+    # The header + frame table alone must be parseable into a full index.
+    index = parse_index(enc.payload[:head], fb)
+    assert index.data_offset == head
+    assert index.frame_lens == enc.index.frame_lens
+
+
+def test_mixed_raw_frames():
+    """A block mixing compressible and random frames keeps the random
+    frames raw (RAW_FRAME bit) yet still round-trips."""
+    fb = 64 * 1024
+    data = _compressible(2 * fb, seed=3) + os.urandom(2 * fb)
+    enc = encode(data, CodecSpec(frame_bytes=fb, min_gain=0.99))
+    if enc is None:
+        pytest.skip("probe declined the whole block")
+    assert any(n & blockcodec.RAW_FRAME for n in enc.index.frame_lens)
+    raw, crc = decode(enc.payload, fb)
+    assert raw == data and crc == zlib.crc32(data)
+
+
+# ------------------------------------------------------------- via store
+
+
+@pytest.fixture
+def cstore(tmp_path):
+    store = TwoLevelStore(
+        str(tmp_path / "pfs"),
+        mem_capacity_bytes=2 * 2**20,
+        block_bytes=256 * 1024,
+        codec=CodecSpec(frame_bytes=64 * 1024),
+    )
+    yield store
+    store.close()
+
+
+def test_store_roundtrip_and_ranged(cstore):
+    data = _compressible(900 * 1024, seed=4)
+    cstore.put("f", data)
+    cstore.drain()
+    # Evict everything so reads come from compressed PFS objects.
+    cstore.set_mem_capacity(1)
+    cstore.set_mem_capacity(2 * 2**20)
+    assert cstore.get("f") == data
+    assert cstore.get_range("f", 100_000, 50_000) == data[100_000:150_000]
+
+
+def test_store_append_resume_partial_tail(cstore):
+    """Close a file with a partial tail block, reopen for append, extend:
+    the tail must decode, be extended, and re-encode bit-identically."""
+    part1 = _compressible(300 * 1024, seed=5)  # 1 full + 1 partial block
+    h = cstore.open_append("ap")
+    h.append_chunk(part1)
+    h.close()
+    cstore.drain()
+    cstore.set_mem_capacity(1)
+    cstore.set_mem_capacity(2 * 2**20)
+    part2 = _compressible(200 * 1024, seed=6)
+    h = cstore.open_append("ap")
+    h.append_chunk(part2)
+    h.close()
+    cstore.drain()
+    assert cstore.get("ap") == part1 + part2
+
+
+def test_store_corrupted_frames_raise_integrity_error(cstore, tmp_path):
+    data = _compressible(300 * 1024, seed=7)
+    cstore.put("c", data)
+    cstore.drain()
+    # Flip a byte in every stripe-unit data file (`*.sNNNN`) backing
+    # block 0 — sidecar .crc files and manifests stay intact.
+    hits = 0
+    for root, _dirs, files in os.walk(tmp_path / "pfs"):
+        for fn in files:
+            if "@000000" in fn and ".s" in fn:
+                p = os.path.join(root, fn)
+                blob = bytearray(open(p, "rb").read())
+                if not blob:
+                    continue
+                mid = len(blob) // 2
+                blob[mid] ^= 0xFF
+                open(p, "wb").write(bytes(blob))
+                hits += 1
+    assert hits > 0, "no PFS stripe files found to corrupt"
+    cstore.set_mem_capacity(1)
+    cstore.set_mem_capacity(2 * 2**20)
+    with pytest.raises(IntegrityError):
+        cstore.get("c")
+
+
+def test_codecless_reader_decodes_tagged_objects(tmp_path):
+    """A store opened without a codec must still decode containers written
+    by a codec-enabled store on the same PFS namespace (manifest tag)."""
+    root = str(tmp_path / "pfs")
+    data = _compressible(500 * 1024, seed=8)
+    w = TwoLevelStore(root, mem_capacity_bytes=2 * 2**20, block_bytes=256 * 1024,
+                      codec=CodecSpec(frame_bytes=64 * 1024))
+    w.put("x", data)
+    w.drain()
+    w.close()
+    r = TwoLevelStore(root, mem_capacity_bytes=2 * 2**20, block_bytes=256 * 1024)
+    try:
+        assert r.get("x") == data
+        assert r.get_range("x", 70_000, 30_000) == data[70_000:100_000]
+    finally:
+        r.close()

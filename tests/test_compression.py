@@ -1,0 +1,107 @@
+"""Property tests for top-k gradient compression with error feedback.
+
+Covers the contract stated in ``optim/compression.py``'s docstring: mask
+size honours the ratio, sent + residual exactly re-compose the EF
+accumulator, long-run updates are unbiased (the residual does not grow
+without bound), and the transform is jit-compatible.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim.compression import topk_compress_with_ef
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _tree(seed: int = 0):
+    rng = np.random.default_rng(seed)
+    return {
+        "w": jnp.asarray(rng.normal(size=(64, 32)), jnp.float32),
+        "b": jnp.asarray(rng.normal(size=(128,)), jnp.float32),
+    }
+
+
+def test_mask_size_matches_ratio():
+    grads = _tree()
+    for ratio in (0.01, 0.1, 0.5):
+        sparse, _, stats = topk_compress_with_ef(grads, None, ratio=ratio)
+        for leaf in jax.tree_util.tree_leaves(sparse):
+            k = max(1, int(leaf.size * ratio))
+            nz = int(jnp.count_nonzero(leaf))
+            # Ties at the threshold may admit a few extra elements, but the
+            # mask must cover at least k and stay O(k).
+            assert k <= nz <= max(2 * k, k + 8)
+        assert stats["elements_sent"] <= stats["elements_total"]
+
+
+def test_sent_plus_residual_recomposes_accumulator():
+    grads = _tree(1)
+    ef = jax.tree_util.tree_map(
+        lambda g: jnp.full(g.shape, 0.25, jnp.float32), grads)
+    sparse, new_ef, _ = topk_compress_with_ef(grads, ef, ratio=0.05)
+    acc = jax.tree_util.tree_map(lambda g, e: g + e, grads, ef)
+    recomposed = jax.tree_util.tree_map(lambda s, r: s + r, sparse, new_ef)
+    for a, b in zip(jax.tree_util.tree_leaves(acc),
+                    jax.tree_util.tree_leaves(recomposed)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_residual_disjoint_from_sent():
+    grads = _tree(2)
+    sparse, new_ef, _ = topk_compress_with_ef(grads, None, ratio=0.1)
+    for s, r in zip(jax.tree_util.tree_leaves(sparse),
+                    jax.tree_util.tree_leaves(new_ef)):
+        # An element is either sent (residual zero) or held back (sent zero).
+        assert not np.any(np.logical_and(np.asarray(s) != 0, np.asarray(r) != 0))
+
+
+def test_long_run_unbiasedness():
+    """Sum of sent updates converges to the sum of raw grads (EF catches up)."""
+    rng = np.random.default_rng(3)
+    ef = None
+    total_raw = np.zeros((32, 16), np.float64)
+    total_sent = np.zeros((32, 16), np.float64)
+    for _ in range(200):
+        g = {"w": jnp.asarray(rng.normal(size=(32, 16)), jnp.float32)}
+        sparse, ef, _ = topk_compress_with_ef(g, ef, ratio=0.05)
+        total_raw += np.asarray(g["w"], np.float64)
+        total_sent += np.asarray(sparse["w"], np.float64)
+    residual = np.asarray(ef["w"], np.float64)
+    # Everything not yet sent lives in the residual, exactly.
+    np.testing.assert_allclose(total_sent + residual, total_raw,
+                               rtol=1e-4, atol=1e-3)
+    # The residual stays bounded — EF drains, it does not accumulate drift.
+    assert np.abs(residual).max() < 10 * np.abs(total_raw).max() / 200 + 5.0
+
+
+def test_jit_compatible():
+    grads = _tree(4)
+    ef0 = jax.tree_util.tree_map(
+        lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+    @jax.jit
+    def step(g, e):
+        sparse, new_ef, _ = topk_compress_with_ef(g, e, ratio=0.1)
+        return sparse, new_ef
+
+    s_jit, e_jit = step(grads, ef0)
+    s_ref, e_ref, _ = topk_compress_with_ef(grads, ef0, ratio=0.1)
+    for a, b in zip(jax.tree_util.tree_leaves(s_jit),
+                    jax.tree_util.tree_leaves(s_ref)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+    for a, b in zip(jax.tree_util.tree_leaves(e_jit),
+                    jax.tree_util.tree_leaves(e_ref)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_stats_ratio_tracks_request():
+    grads = _tree(5)
+    _, _, stats = topk_compress_with_ef(grads, None, ratio=0.02)
+    assert stats["ratio"] == pytest.approx(0.02, rel=0.5)
+    assert stats["elements_total"] == sum(
+        g.size for g in jax.tree_util.tree_leaves(grads))

@@ -156,3 +156,38 @@ class TestSerializeAndMerge:
         assert m.bytes_read == a.bytes_read
         assert m.read_span_start == a.read_span_start
         assert m.read_span_end == a.read_span_end
+
+
+class TestCodecCounters:
+    def test_record_and_ratio(self):
+        s = TierStats()
+        assert s.compression_ratio() == 1.0  # no codec traffic yet
+        s.record_compress(4 * MB, MB, 0.01)
+        s.record_decode(2 * MB, MB // 2, 0.004)
+        assert s.bytes_logical == 6 * MB
+        assert s.bytes_physical == MB + MB // 2
+        assert s.compression_ratio() == 4.0
+        assert s.compress_seconds == 0.01 and s.decode_seconds == 0.004
+
+    def test_dict_round_trip_carries_codec_counters(self):
+        s = TierStats()
+        s.record_compress(8 * MB, 2 * MB, 0.02)
+        s.record_decode(8 * MB, 2 * MB, 0.01)
+        clone = TierStats.from_dict(s.to_dict())
+        assert clone == s
+        assert clone.bytes_logical == 16 * MB
+        assert clone.compression_ratio() == 4.0
+
+    def test_merge_sums_codec_counters(self):
+        a = TierStats()
+        a.record_compress(4 * MB, MB, 0.01)
+        b = TierStats()
+        b.record_decode(4 * MB, 2 * MB, 0.02)
+        m = a.merge(b)
+        assert m.bytes_logical == 8 * MB
+        assert m.bytes_physical == 3 * MB
+        assert m.compress_seconds == 0.01 and m.decode_seconds == 0.02
+        # cluster-wide ratio is bytes-weighted, not a mean of ratios
+        assert m.compression_ratio() == 8 / 3
+        # out-of-place: inputs untouched
+        assert a.decode_seconds == 0.0 and b.bytes_logical == 4 * MB
