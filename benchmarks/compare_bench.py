@@ -20,7 +20,14 @@ dropped gate is the purest form of regression.
 Usage::
 
     python -m benchmarks.compare_bench --baseline benchmarks/baselines \
-        --fresh bench_artifacts [--tolerance 0.2]
+        --fresh bench_artifacts [--tolerance 0.2] [--only label ...]
+
+``--only`` restricts the comparison to metrics whose label (the first
+dotted segment of the metric name — ``sscale``, ``chaos``, …) is in the
+given set.  The CI bench matrix uses this to give every gate leg its own
+scoped delta table: a leg only sees — and can only fail on — the metrics
+its own benchmark produced, so the missing-gated-metric check doesn't
+fire for labels that ran in other legs.
 """
 
 from __future__ import annotations
@@ -75,6 +82,13 @@ GATED: dict[str, str] = {
     # CI step)
     "chaos.no_data_loss": "higher",
     "chaos.recovery_ok": "higher",
+    # multi-session serving plane: byte-count over-capacity ratio, the
+    # binary evict/resume token-identity verdict, and the deterministic
+    # shared-prefix page dedup ratio (aggregate tok/s and p99 TTFT are
+    # wall-clock, hard-bounded in serve_sessions' own CI step)
+    "serve_sessions.over_capacity": "higher",
+    "serve_sessions.resume_identical": "higher",
+    "serve_sessions.dedup_ratio": "higher",
 }
 
 
@@ -143,10 +157,17 @@ def main() -> None:
     ap.add_argument("--fresh", default="bench_artifacts")
     ap.add_argument("--tolerance", type=float, default=0.20,
                     help="allowed regression fraction on gated metrics")
+    ap.add_argument("--only", nargs="*", default=None,
+                    help="restrict to metrics whose label (first dotted "
+                         "segment) is in this set")
     args = ap.parse_args()
 
     baseline = load_rows(args.baseline)
     fresh = load_rows(args.fresh)
+    if args.only:
+        keep = set(args.only)
+        baseline = {k: v for k, v in baseline.items() if k.split(".")[0] in keep}
+        fresh = {k: v for k, v in fresh.items() if k.split(".")[0] in keep}
     if not baseline:
         print(f"no baselines under {args.baseline!r} — nothing to gate", file=sys.stderr)
         sys.exit(2)

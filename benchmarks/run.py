@@ -42,6 +42,7 @@ def main() -> None:
         parallel_scaling,
         roofline,
         serve_scaling,
+        serve_sessions,
         terasort_scaling,
         train_io_scaling,
     )
@@ -59,6 +60,7 @@ def main() -> None:
         ("compress", compress_scaling),
         ("multihost", multihost_scaling),
         ("chaos", chaos_soak),
+        ("serve_sessions", serve_sessions),
         ("roofline", roofline),
     ]
     if args.only:

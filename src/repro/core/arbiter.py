@@ -113,7 +113,11 @@ class MemoryPool:
         self._last_misses = self.misses
 
     def release(self) -> None:
-        """Deregister (client shut down); its bytes return to the pot."""
+        """Deregister (client shut down); its bytes return to the pot.
+
+        Idempotent, and a no-op if a *newer* pool has since reclaimed the
+        name: releasing a stale handle must never evict its successor.
+        """
         self._arbiter._release(self)
 
 
@@ -135,6 +139,7 @@ class MemoryArbiter:
         self._pools: dict[str, MemoryPool] = {}
         self.rebalances = 0
         self.bytes_moved = 0
+        self.releases = 0  # pools retired (session/cache close must hit this)
 
     # ------------------------------------------------------------ registry
 
@@ -169,7 +174,9 @@ class MemoryArbiter:
 
     def _release(self, pool: MemoryPool) -> None:
         with self._lock:
-            self._pools.pop(pool.name, None)
+            if self._pools.get(pool.name) is pool:
+                del self._pools[pool.name]
+                self.releases += 1
 
     def pools(self) -> dict[str, MemoryPool]:
         with self._lock:
@@ -283,6 +290,7 @@ class MemoryArbiter:
                 "total_bytes": self.total_bytes,
                 "rebalances": self.rebalances,
                 "bytes_moved": self.bytes_moved,
+                "releases": self.releases,
                 "pools": {
                     p.name: {
                         "cls": p.cls,

@@ -224,6 +224,9 @@ class IOController:
         self.lane_trajectory: deque[tuple[float, int]] = deque(maxlen=self.cfg.trajectory_len)
         self.ticks = 0
         self._t0 = time.perf_counter()
+        # classify() memo — invalidated by hint-tuple identity (see there).
+        self._classify_cache: dict[str, StreamClass] = {}
+        self._classify_hints: tuple = ()
 
     # ---------------------------------------------------------------- bind
 
@@ -244,14 +247,31 @@ class IOController:
         }
 
     def classify(self, name: str) -> StreamClass:
-        """Longest registered prefix hint wins; unhinted files are DEFAULT."""
+        """Longest registered prefix hint wins; unhinted files are DEFAULT.
+
+        Memoized per file name: the serving plane registers one LATENCY
+        hint per session, so the linear prefix scan would otherwise run
+        O(sessions) on *every* block I/O.  The cache keys on the hint
+        tuple's identity — ``hint_stream`` rebuilds the tuple on any
+        change, which invalidates the whole memo for free.
+        """
         hints = () if self._store is None else self._store._hint_items
+        if hints is not self._classify_hints:
+            self._classify_cache = {}
+            self._classify_hints = hints
+        cached = self._classify_cache.get(name)
+        if cached is not None:
+            return cached
         best: StreamClass | None = None
         best_len = -1
         for prefix, cls in hints:
             if len(prefix) > best_len and name.startswith(prefix):
                 best, best_len = cls, len(prefix)
-        return best or StreamClass.DEFAULT
+        out = best or StreamClass.DEFAULT
+        if len(self._classify_cache) >= 65536:  # bound stale-name growth
+            self._classify_cache = {}
+        self._classify_cache[name] = out
+        return out
 
     # ------------------------------------------------------------ sampling
 

@@ -12,6 +12,21 @@ Eq. 7 f), staged H2D bytes per step, and write-through flushes.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --reduced \
         --batch 2 --prompt-len 48 --tokens 24 --kv-window 32 --kv-page 16
+
+``--sessions N`` switches to the production serving plane (DESIGN.md
+§14): N concurrent sessions under a continuous-batching
+``SessionScheduler``, each owning per-layer tiered KV caches.
+``--max-batch`` bounds the per-step decode batch; ``--hbm-budget-kb`` /
+``--host-budget-kb`` bound the aggregate device/host KV footprint
+(over-HBM demotes staging buffers, over-host evicts idle sessions fully
+into the store and resumes them bit-identically); ``--shared-prefix``
+gives sessions a common prompt prefix so the refcounted page registry
+stores each shared cold page once.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --reduced \
+        --sessions 8 --max-batch 2 --prompt-len 48 --tokens 16 \
+        --kv-window 16 --kv-page 8 --shared-prefix 32 \
+        --store-root /tmp/kvstore --host-budget-kb 256
 """
 
 from __future__ import annotations
@@ -79,6 +94,30 @@ def tiered_serve(cfg, batch: int, prompt_len: int, tokens: int, window: int,
     return gen, prefill_s, decode_s, tiered_cache_stats(caches)
 
 
+def session_serve(cfg, n_sessions: int, max_batch: int, prompt_len: int,
+                  tokens: int, window: int, page: int | None, seed: int = 0,
+                  store=None, shared_prefix: int = 0,
+                  hbm_bytes: int | None = None, host_bytes: int | None = None):
+    """Continuous batching over ``n_sessions`` tiered sessions (eager)."""
+    from repro.serving import SessionScheduler
+
+    cfg = dataclasses.replace(cfg, scan_layers=False)
+    model = make_model(cfg)
+    params, _ = init_with_axes(model.init, jax.random.PRNGKey(seed), dtype=jnp.float32)
+    rng = np.random.default_rng(seed)
+    shared = rng.integers(0, cfg.vocab, min(shared_prefix, prompt_len))
+    sched = SessionScheduler(
+        model, cfg, params, window=window, page=page, max_batch=max_batch,
+        store=store, hbm_bytes=hbm_bytes, host_bytes=host_bytes,
+    )
+    for _ in range(n_sessions):
+        tail = rng.integers(0, cfg.vocab, prompt_len - len(shared))
+        sched.submit(np.concatenate([shared, tail]).astype(np.int32), tokens)
+    report = sched.run()
+    sched.close()
+    return report
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -90,6 +129,17 @@ def main() -> None:
                     help="route full-attention KV through the tiered cache (hot ring size)")
     ap.add_argument("--kv-page", type=int, default=0,
                     help="cold-tier staging page in tokens (default min(window, 512))")
+    ap.add_argument("--sessions", type=int, default=0,
+                    help="continuous-batching serving plane over N sessions (needs --kv-window)")
+    ap.add_argument("--max-batch", type=int, default=4,
+                    help="with --sessions: per-step decode batch bound")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="with --sessions: common prompt prefix length (page dedup)")
+    ap.add_argument("--hbm-budget-kb", type=int, default=0,
+                    help="with --sessions: aggregate device KV budget (0 = unbounded)")
+    ap.add_argument("--host-budget-kb", type=int, default=0,
+                    help="with --sessions: aggregate host KV budget (0 = unbounded; "
+                         "overflow evicts idle sessions into --store-root)")
     ap.add_argument("--store-root", default="",
                     help="persist cold KV pages through a two-level store at this root")
     ap.add_argument("--distributed", action="store_true",
@@ -112,6 +162,27 @@ def main() -> None:
 
             store = TwoLevelStore(args.store_root)
     try:
+        if args.sessions > 0:
+            if args.kv_window <= 0:
+                raise SystemExit("--sessions requires --kv-window")
+            rep = session_serve(
+                cfg, args.sessions, args.max_batch, args.prompt_len, args.tokens,
+                window=args.kv_window, page=args.kv_page or None, store=store,
+                shared_prefix=args.shared_prefix,
+                hbm_bytes=args.hbm_budget_kb * 1024 or None,
+                host_bytes=args.host_budget_kb * 1024 or None,
+            )
+            print(f"sessions {rep['sessions']} (retired {rep['retired']}) over "
+                  f"{rep['steps']} steps, max_batch {args.max_batch}")
+            print(f"decode {rep['decoded_tokens']} tokens: {rep['decode_s']:.3f}s "
+                  f"({rep['decode_tok_per_s']:,.0f} tok/s aggregate)")
+            print(f"ttft p50 {rep['ttft_p50_s']*1e3:.1f}ms  p99 {rep['ttft_p99_s']*1e3:.1f}ms")
+            print(f"tier overflow: {rep['demotions']} demotions, "
+                  f"{rep['evictions']} evictions, {rep['resumes']} resumes")
+            if "dedup_ratio" in rep:
+                print(f"shared pages: {rep['pages_logical']} logical / "
+                      f"{rep['pages_stored']} stored (dedup {rep['dedup_ratio']:.2f}x)")
+            return
         if args.kv_window > 0:
             gen, prefill_s, decode_s, st = tiered_serve(
                 cfg, args.batch, args.prompt_len, args.tokens,

@@ -175,7 +175,7 @@ def make_serve_step(model, cfg: ArchConfig) -> Callable:
 
 def make_tiered_caches(
     model, cfg: ArchConfig, batch: int, max_len: int, window: int, page: int | None,
-    dtype=jnp.bfloat16, store=None, store_prefix: str = "serving/kv",
+    dtype=jnp.bfloat16, store=None, store_prefix: str = "serving/kv", pages=None,
 ) -> dict:
     """Caches for the two-level serving backend: every full-attention GQA
     layer gets a ``TieredKVCache`` (device hot ring + paged host cold tier);
@@ -185,7 +185,10 @@ def make_tiered_caches(
     shard of a :class:`~repro.core.dstore.DistributedStore`) adds the
     third level: completed cold pages persist under
     ``<store_prefix>/prefix_<i>/`` so KV history survives host DRAM loss
-    (``restore_cold_from_store``).
+    (``restore_cold_from_store``).  ``pages`` (a
+    :class:`~repro.serving.SharedPageRegistry`) routes completed pages
+    through the content-addressed refcounted table instead, so sessions
+    sharing a prompt prefix store each shared page once.
 
     Requires an unrolled stack (``cfg.scan_layers=False``) — the cold tier
     is host state, which cannot ride a ``lax.scan`` carry.
@@ -203,6 +206,7 @@ def make_tiered_caches(
                 batch, cfg.n_kv_heads, hd, window=window, max_len=max_len,
                 dtype=dtype, page=page,
                 store=store, store_prefix=store_prefix, name=f"prefix_{i}",
+                pages=pages,
             )
         else:
             caches[f"prefix_{i}"] = make_layer_cache(spec, cfg, batch, max_len, dtype)

@@ -268,9 +268,17 @@ def attention_apply(
         # TieredKVCache — hot device ring + paged cold host tier.  The
         # decode loop runs unjitted in this mode so the cold tier can live
         # in host memory and stage pages on demand.
-        pos = jnp.asarray([cache.length]) if positions is None else positions
+        if positions is not None:
+            pos = positions.reshape(1, -1)
+        elif hasattr(cache, "row_positions"):
+            # Continuous batching: the cache is a per-layer batch adapter
+            # over sessions of heterogeneous lengths — (B, 1) positions,
+            # one per row, so RoPE phases stay per-session correct.
+            pos = cache.row_positions()
+        else:
+            pos = jnp.asarray([[cache.length]])
         if use_rope:
-            cos, sin = rope_tables(pos.reshape(1, -1), hd, cfg.rope_theta)
+            cos, sin = rope_tables(pos, hd, cfg.rope_theta)
             q = apply_rope(q, cos, sin)
             k = apply_rope(k, cos, sin)
         cache.append(k[:, 0], v[:, 0])  # the (B, KV, hd) token

@@ -1,5 +1,19 @@
-"""Serving substrate: the two-level KV cache (HBM <-> host offload)."""
+"""Serving substrate: the two-level KV cache (HBM <-> host offload) and
+the continuous-batching session scheduler over it."""
 
-from repro.serving.kv_offload import TieredKVCache
+from repro.serving.kv_offload import SharedPageRegistry, TieredKVCache
+from repro.serving.scheduler import (
+    Session,
+    SessionKVBatch,
+    SessionScheduler,
+    SessionState,
+)
 
-__all__ = ["TieredKVCache"]
+__all__ = [
+    "SharedPageRegistry",
+    "TieredKVCache",
+    "Session",
+    "SessionKVBatch",
+    "SessionScheduler",
+    "SessionState",
+]

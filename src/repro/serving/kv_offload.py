@@ -60,6 +60,9 @@ O(max_len) for durability and device-loss recovery.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import json
+import threading
 
 import jax
 import jax.numpy as jnp
@@ -77,11 +80,99 @@ class TieredKVStats:
     d2h_flushes: int = 0  # batched sync points (seed path: one per token)
     pages_persisted: int = 0  # completed pages written into the store tier
     bytes_persisted: int = 0
+    evictions: int = 0  # full evict-to-store cycles (idle session parked)
+    resumes: int = 0  # full resume-from-store cycles
+    demotions: int = 0  # staging-buffer drops under arbiter pressure
 
     def hot_fraction(self) -> float:
         """The paper's f = hot / (hot + cold) over all attends so far."""
         total = self.hot_hits_tokens + self.cold_reads_tokens
         return self.hot_hits_tokens / total if total else 1.0
+
+
+class SharedPageRegistry:
+    """Content-addressed, refcounted cold-page table over one store.
+
+    DESIGN.md §14: sessions sharing a prompt prefix produce bit-identical
+    completed cold pages (causal attention ⇒ k/v at position *i* depend
+    only on tokens ≤ *i*, and the host tier stores the cache dtype
+    exactly), so pages are keyed by content hash and stored **once**
+    across every session and tier.  ``put`` takes a reference (storing the
+    blob on first sight), ``decref`` drops one and deletes the blob when
+    the count reaches zero — a retiring session can never free a page
+    another live session still maps.  Counters are cumulative so the
+    dedup ratio survives sessions retiring.
+    """
+
+    def __init__(self, store, prefix: str = "serving/pages") -> None:
+        from repro.core.sched import StreamClass
+
+        self.store = store
+        self.prefix = prefix
+        self._lock = threading.Lock()
+        self._refs: dict[str, int] = {}
+        self.pages_logical = 0  # references handed out (puts + adopts)
+        self.pages_stored = 0  # distinct blobs ever written to the store
+        self.dedup_hits = 0
+        store.hint_stream(prefix + "/", StreamClass.LATENCY)
+
+    def _file(self, key: str) -> str:
+        return f"{self.prefix}/{key}"
+
+    def put(self, blob: bytes) -> str:
+        """Intern a completed page; returns its content key (ref held)."""
+        key = hashlib.sha1(blob).hexdigest()
+        with self._lock:
+            self.pages_logical += 1
+            n = self._refs.get(key, 0)
+            self._refs[key] = n + 1
+            if n:
+                self.dedup_hits += 1
+                return key
+            self.pages_stored += 1
+        from repro.core.store import WriteMode
+
+        self.store.put(self._file(key), blob, mode=WriteMode.ASYNC_WRITEBACK)
+        return key
+
+    def fetch(self, key: str) -> bytes:
+        return self.store.get(self._file(key))
+
+    def adopt(self, keys) -> None:
+        """Take references on already-stored pages — the resume path after
+        the registry's in-memory refcounts were lost (host restart): the
+        blobs are durable in the store, only the counts need rebuilding."""
+        with self._lock:
+            for key in keys:
+                self.pages_logical += 1
+                n = self._refs.get(key, 0)
+                self._refs[key] = n + 1
+                if n:
+                    self.dedup_hits += 1
+
+    def decref(self, key: str) -> bool:
+        """Drop one reference; deletes the blob at zero.  Returns whether
+        the physical page was deleted."""
+        with self._lock:
+            n = self._refs.get(key, 0) - 1
+            if n > 0:
+                self._refs[key] = n
+                return False
+            self._refs.pop(key, None)
+        self.store.delete(self._file(key))
+        return True
+
+    def refcount(self, key: str) -> int:
+        with self._lock:
+            return self._refs.get(key, 0)
+
+    def live_pages(self) -> int:
+        with self._lock:
+            return len(self._refs)
+
+    def dedup_ratio(self) -> float:
+        """Logical page references per physical stored page (≥ 1)."""
+        return self.pages_logical / self.pages_stored if self.pages_stored else 1.0
 
 
 class TieredKVCache:
@@ -104,6 +195,7 @@ class TieredKVCache:
         store=None,
         store_prefix: str = "serving/kv",
         name: str = "kv0",
+        pages: SharedPageRegistry | None = None,
     ):
         if window <= 0 or max_len < window:
             raise ValueError("need 0 < window <= max_len")
@@ -137,29 +229,41 @@ class TieredKVCache:
         self.stats = TieredKVStats()
         # Optional store-backed third level (TwoLevelStore), with the host
         # tier declared latency-sensitive to the adaptive I/O controller.
+        # With a SharedPageRegistry, completed pages are content-addressed
+        # and refcounted (shared across sessions); tail + manifest stay
+        # private under this cache's own store directory.
+        if pages is not None and store is None:
+            store = pages.store
         self._store = store
         self._store_dir = f"{store_prefix}/{name}"
         self._persisted_pages = 0
+        self._pages = pages
+        self._page_keys: list[str] = []
+        self._arb_pool = None
+        self._closed = False
         if store is not None:
             from repro.core.sched import StreamClass
 
             store.hint_stream(store_prefix + "/", StreamClass.LATENCY)
 
-    def attach_arbiter(self, arbiter, min_bytes: int = 0, weight: float = 1.0):
-        """Register the host KV history as pool ``"kv_staging"`` (LATENCY)
-        of an elastic :class:`~repro.core.arbiter.MemoryArbiter`.
+    def attach_arbiter(self, arbiter, min_bytes: int = 0, weight: float = 1.0,
+                       name: str = "kv_staging"):
+        """Register the host KV history as pool ``name`` (LATENCY) of an
+        elastic :class:`~repro.core.arbiter.MemoryArbiter`.
 
         The pool floors to live usage (``floor_to_usage``): decode
         correctness needs every appended token's host copy, so the arbiter
         may route *idle* headroom elsewhere but can never ask this pool to
         shed held bytes.  Usage grows with decoded length; demand is the
-        full ``max_len`` history the buffers were provisioned for.
+        full ``max_len`` history the buffers were provisioned for.  The
+        handle is kept so :meth:`close` deregisters it — a retired session
+        must return its bytes to the pot, not strand them.
         """
         per_token = (
             2 * self.batch * self.kv * self.dim * self.cold_k.dtype.itemsize
         )
         pool = arbiter.register(
-            "kv_staging",
+            name,
             cls="latency",
             min_bytes=min_bytes,
             weight=weight,
@@ -173,6 +277,7 @@ class TieredKVCache:
             return 16.0 * weight
 
         pool.value_fn = value_fn
+        self._arb_pool = pool
         return pool
 
     # ------------------------------------------------------- store offload
@@ -180,22 +285,116 @@ class TieredKVCache:
     def _page_file(self, p: int) -> str:
         return f"{self._store_dir}/page_{p:06d}"
 
+    def _tail_file(self) -> str:
+        return f"{self._store_dir}/tail"
+
+    def _manifest_file(self) -> str:
+        return f"{self._store_dir}/manifest"
+
+    def _write_manifest(self, tail: int = 0) -> None:
+        """Persist the session's page map: ordered content keys (registry
+        mode), page geometry, and — after an eviction — the tail length so
+        a resume restores the *exact* logical length, not just the durable
+        page boundary."""
+        from repro.core.store import WriteMode
+
+        man: dict = {
+            "page": self.page,
+            "pages": self._persisted_pages,
+            "length": self.length,
+            "tail": tail,
+        }
+        if self._pages is not None:
+            man["keys"] = self._page_keys
+        self._store.put(
+            self._manifest_file(), json.dumps(man).encode(),
+            mode=WriteMode.ASYNC_WRITEBACK,
+        )
+
+    def _read_manifest(self) -> dict:
+        if self._store.exists(self._manifest_file()):
+            return json.loads(self._store.get(self._manifest_file()))
+        return {}
+
     def _persist_pages(self) -> None:
         """Write newly completed (immutable) cold pages into the store —
-        each exactly once, k bytes then v bytes, async write-back."""
+        each exactly once, k bytes then v bytes, async write-back.  With a
+        :class:`SharedPageRegistry` the page is interned by content hash
+        (shared prompt prefixes across sessions store one copy); otherwise
+        it lands under this cache's private ``page_NNNNNN`` name."""
         from repro.core.store import WriteMode
 
         full = self._flushed // self.page
+        new = full > self._persisted_pages
         for p in range(self._persisted_pages, full):
             lo, hi = p * self.page, (p + 1) * self.page
             blob = (
                 np.ascontiguousarray(self.cold_k[:, :, lo:hi, :]).tobytes()
                 + np.ascontiguousarray(self.cold_v[:, :, lo:hi, :]).tobytes()
             )
-            self._store.put(self._page_file(p), blob, mode=WriteMode.ASYNC_WRITEBACK)
+            if self._pages is not None:
+                self._page_keys.append(self._pages.put(blob))
+            else:
+                self._store.put(
+                    self._page_file(p), blob, mode=WriteMode.ASYNC_WRITEBACK
+                )
             self.stats.pages_persisted += 1
             self.stats.bytes_persisted += len(blob)
         self._persisted_pages = full
+        if new and self._pages is not None:
+            self._write_manifest()
+
+    def _alloc_tiers(self) -> None:
+        """(Re)allocate every tier empty — the resume path after a full
+        eviction freed them."""
+        host_dt = np.dtype(jnp.dtype(self.dtype))
+        self.cold_k = np.zeros((self.batch, self.kv, self.max_len, self.dim), host_dt)
+        self.cold_v = np.zeros_like(self.cold_k)
+        self.hot_k = jnp.zeros((self.batch, self.kv, self.window, self.dim), self.dtype)
+        self.hot_v = jnp.zeros_like(self.hot_k)
+        self._cap = self._block_k
+        self._cold_k_dev = jnp.zeros((self.batch, self.kv, self._cap, self.dim), self.dtype)
+        self._cold_v_dev = jnp.zeros_like(self._cold_k_dev)
+        self._staged_pages = 0
+
+    def _restore_pages(self) -> int:
+        """Refill cold pages from the store; returns tokens restored."""
+        per = self.batch * self.kv * self.page * self.dim * self.cold_k.dtype.itemsize
+        shape = (self.batch, self.kv, self.page, self.dim)
+        # Clamped at this cache's cold capacity: a store written by a
+        # longer-history cache (or a name collision) must not walk the
+        # restore past max_len and fail mid-copy.
+        max_pages = self.max_len // self.page
+        if self._pages is not None:
+            keys = list(self._read_manifest().get("keys", []))[:max_pages]
+            fresh = not self._page_keys  # this handle held no refs yet
+            for p, key in enumerate(keys):
+                blob = self._pages.fetch(key)
+                lo, hi = p * self.page, (p + 1) * self.page
+                self.cold_k[:, :, lo:hi, :] = np.frombuffer(
+                    blob[:per], dtype=self.cold_k.dtype
+                ).reshape(shape)
+                self.cold_v[:, :, lo:hi, :] = np.frombuffer(
+                    blob[per:], dtype=self.cold_v.dtype
+                ).reshape(shape)
+            self._page_keys = keys
+            if fresh and keys:
+                self._pages.adopt(keys)
+            p = len(keys)
+        else:
+            p = 0
+            while p < max_pages and self._store.exists(self._page_file(p)):
+                blob = self._store.get(self._page_file(p))
+                lo, hi = p * self.page, (p + 1) * self.page
+                self.cold_k[:, :, lo:hi, :] = np.frombuffer(
+                    blob[:per], dtype=self.cold_k.dtype
+                ).reshape(shape)
+                self.cold_v[:, :, lo:hi, :] = np.frombuffer(
+                    blob[per:], dtype=self.cold_v.dtype
+                ).reshape(shape)
+                p += 1
+        self._persisted_pages = p
+        return p * self.page
 
     def restore_cold_from_store(self, rebuild_hot: bool = True) -> int:
         """Host-DRAM loss recovery: refill the cold history from the store.
@@ -210,25 +409,9 @@ class TieredKVCache:
         """
         if self._store is None:
             raise RuntimeError("no store attached to restore from")
-        per = self.batch * self.kv * self.page * self.dim * self.cold_k.dtype.itemsize
-        shape = (self.batch, self.kv, self.page, self.dim)
-        max_pages = self.max_len // self.page
-        p = 0
-        # Clamped at this cache's cold capacity: a store written by a
-        # longer-history cache (or a name collision) must not walk the
-        # restore past max_len and fail mid-copy.
-        while p < max_pages and self._store.exists(self._page_file(p)):
-            blob = self._store.get(self._page_file(p))
-            lo, hi = p * self.page, (p + 1) * self.page
-            self.cold_k[:, :, lo:hi, :] = np.frombuffer(
-                blob[:per], dtype=self.cold_k.dtype
-            ).reshape(shape)
-            self.cold_v[:, :, lo:hi, :] = np.frombuffer(
-                blob[per:], dtype=self.cold_v.dtype
-            ).reshape(shape)
-            p += 1
-        n = p * self.page
-        self._persisted_pages = p
+        if self.cold_k is None:
+            self._alloc_tiers()
+        n = self._restore_pages()
         self._pending_k, self._pending_v = [], []
         self._flushed = n
         self.length = n
@@ -236,6 +419,122 @@ class TieredKVCache:
         if rebuild_hot and n:
             self.rebuild_hot_from_cold()
         return n
+
+    # ----------------------------------------------- session evict / resume
+
+    def evict_to_store(self) -> int:
+        """Fully park the cache in the store: persist every completed page
+        *and* the partial tail, then free all three tiers (hot ring, host
+        history, staging buffer).  Unlike the page-boundary durability of
+        the write-through path, eviction is exact — ``resume_from_store``
+        restores the cache bit-identically at its full logical length, so
+        an idle session costs zero HBM and zero host DRAM while parked.
+        Returns the parked length in tokens."""
+        if self._store is None:
+            raise RuntimeError("no store attached to evict into")
+        if self.cold_k is None:
+            return self.length  # already parked
+        from repro.core.store import WriteMode
+
+        self.flush_host()  # drains pending + persists completed pages
+        tail_lo = self._persisted_pages * self.page
+        tail_n = self.length - tail_lo
+        if tail_n > 0:
+            blob = (
+                np.ascontiguousarray(self.cold_k[:, :, tail_lo:self.length, :]).tobytes()
+                + np.ascontiguousarray(self.cold_v[:, :, tail_lo:self.length, :]).tobytes()
+            )
+            self._store.put(self._tail_file(), blob, mode=WriteMode.ASYNC_WRITEBACK)
+        self._write_manifest(tail=tail_n)
+        self.stats.evictions += 1
+        self.hot_k = self.hot_v = None
+        self.cold_k = self.cold_v = None
+        self._cold_k_dev = self._cold_v_dev = None
+        self._cap = 0
+        self._staged_pages = 0
+        self._pending_k, self._pending_v = [], []
+        return self.length
+
+    def resume_from_store(self) -> int:
+        """Un-park an evicted cache: reallocate the tiers, restore every
+        page plus the tail, and rebuild the hot ring — bit-identical to
+        the pre-eviction state (host tier stores the cache dtype exactly,
+        so the round trip is lossless).  Returns the restored length."""
+        if self._store is None:
+            raise RuntimeError("no store attached to resume from")
+        expect = self.length
+        if self.cold_k is None:
+            self._alloc_tiers()
+        n = self._restore_pages()
+        man = self._read_manifest()
+        tail_n = int(man.get("tail", 0))
+        if tail_n > 0 and self._store.exists(self._tail_file()):
+            blob = self._store.get(self._tail_file())
+            per = self.batch * self.kv * tail_n * self.dim * self.cold_k.dtype.itemsize
+            shape = (self.batch, self.kv, tail_n, self.dim)
+            self.cold_k[:, :, n : n + tail_n, :] = np.frombuffer(
+                blob[:per], dtype=self.cold_k.dtype
+            ).reshape(shape)
+            self.cold_v[:, :, n : n + tail_n, :] = np.frombuffer(
+                blob[per:], dtype=self.cold_v.dtype
+            ).reshape(shape)
+            n += tail_n
+        self._pending_k, self._pending_v = [], []
+        self._flushed = n
+        self.length = n
+        self._staged_pages = 0
+        if n:
+            self.rebuild_hot_from_cold()
+        self.stats.resumes += 1
+        if expect and n != expect:
+            raise RuntimeError(f"resume restored {n} tokens, expected {expect}")
+        return n
+
+    def drop_staging(self) -> int:
+        """Mid-decode demotion under arbiter pressure: shrink the device
+        staging buffer back to one block.  Correctness is unaffected — the
+        next ``attend`` re-stages needed pages from the host tier (paying
+        the H2D bandwidth again); only the bandwidth amortization is
+        sacrificed.  Returns the device bytes freed."""
+        if self._cold_k_dev is None:
+            return 0
+        if self._cap == self._block_k and self._staged_pages == 0:
+            return 0
+        before = self.staged_device_bytes()
+        self._cap = self._block_k
+        self._cold_k_dev = jnp.zeros((self.batch, self.kv, self._cap, self.dim), self.dtype)
+        self._cold_v_dev = jnp.zeros_like(self._cold_k_dev)
+        self._staged_pages = 0
+        self.stats.demotions += 1
+        return before - self.staged_device_bytes()
+
+    def close(self, delete_store_files: bool = True) -> None:
+        """Retire the cache: release its arbiter pool (bytes back to the
+        pot — the strand-bytes fix), drop refcounts on shared pages
+        (deleting any that reach zero), delete this session's private
+        store files, and free every tier.  Idempotent."""
+        if self._closed:
+            return
+        self._closed = True
+        if self._arb_pool is not None:
+            self._arb_pool.release()
+            self._arb_pool = None
+        if self._pages is not None:
+            for key in self._page_keys:
+                self._pages.decref(key)
+            self._page_keys = []
+        if self._store is not None and delete_store_files:
+            if self._pages is None:
+                for p in range(self._persisted_pages):
+                    self._store.delete(self._page_file(p))
+            self._store.delete(self._tail_file())
+            self._store.delete(self._manifest_file())
+        self.hot_k = self.hot_v = None
+        self.cold_k = self.cold_v = None
+        self._cold_k_dev = self._cold_v_dev = None
+        self._pending_k, self._pending_v = [], []
+        self._cap = 0
+        self._staged_pages = 0
 
     # ------------------------------------------------------------- append
 
@@ -246,6 +545,8 @@ class TieredKVCache:
     def append_block(self, k: jax.Array, v: jax.Array) -> None:
         """Write S tokens (B, KV, S, D) — prefill bulk path, one dispatch."""
         s = k.shape[2]
+        if self.cold_k is None:
+            raise RuntimeError("cache is evicted/closed; resume before appending")
         if self.length + s > self.max_len:
             raise ValueError("cache full")
         w = self.window
@@ -369,6 +670,8 @@ class TieredKVCache:
         """
         if self.length == 0:
             raise ValueError("attend on an empty cache")
+        if self.cold_k is None:
+            raise RuntimeError("cache is evicted/closed; resume before attending")
         self.stage_cold()
         hot_n, cold_n = self.hot_len, self.cold_len
         self.stats.hot_hits_tokens += hot_n
@@ -416,6 +719,8 @@ class TieredKVCache:
     # --------------------------------------------------------- accounting
 
     def hot_device_bytes(self) -> int:
+        if self.hot_k is None:  # evicted/closed: the ring is freed
+            return 0
         return 2 * self.batch * self.kv * self.window * self.dim * jnp.dtype(self.dtype).itemsize
 
     def staged_device_bytes(self) -> int:
@@ -425,6 +730,8 @@ class TieredKVCache:
         return self.hot_device_bytes() + self.staged_device_bytes()
 
     def host_bytes(self) -> int:
+        if self.cold_k is None:  # evicted/closed: the host tier is freed
+            return 0
         return 2 * self.batch * self.kv * self.max_len * self.dim * self.cold_k.dtype.itemsize
 
 

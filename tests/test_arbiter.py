@@ -215,3 +215,46 @@ def test_report_shape():
     assert rep["total_bytes"] == 64 * MB
     assert rep["pools"]["p"]["cls"] == "latency"
     assert rep["pools"]["p"]["used"] == MB
+
+
+def test_kv_cache_close_releases_arbiter_pool():
+    """Regression: a retired session's KV cache must return its pool to
+    the pot.  Before the fix, ``TieredKVCache.close()`` never called
+    ``pool.release()``, so every retired session permanently stranded its
+    ``initial_bytes`` — after enough sessions the arbiter had nothing
+    left to water-fill."""
+    jnp = pytest.importorskip("jax.numpy")
+    from repro.serving import TieredKVCache
+
+    arb = MemoryArbiter(total_bytes=64 * MB)
+    cache = TieredKVCache(1, 2, 16, window=8, max_len=64, dtype=jnp.float32)
+    cache.attach_arbiter(arb)
+    assert "kv_staging" in arb.report()["pools"]
+    before = arb.releases
+
+    cache.close()
+    assert arb.releases == before + 1
+    assert "kv_staging" not in arb.report()["pools"]
+    # Idempotent: double close must not double-release.
+    cache.close()
+    assert arb.releases == before + 1
+
+    # The freed name is immediately reusable by the next session.
+    cache2 = TieredKVCache(1, 2, 16, window=8, max_len=64, dtype=jnp.float32)
+    cache2.attach_arbiter(arb)
+    assert "kv_staging" in arb.report()["pools"]
+    cache2.close()
+    assert arb.releases == before + 2
+
+
+def test_release_is_identity_checked():
+    """Releasing a stale pool handle after its name was re-registered
+    must not evict the new owner."""
+    arb = MemoryArbiter(total_bytes=64 * MB)
+    old = arb.register("p", initial_bytes=MB)
+    old.release()
+    new = arb.register("p", initial_bytes=MB)
+    old.release()  # stale handle — ignored
+    assert arb.report()["pools"]["p"] is not None
+    new.release()
+    assert "p" not in arb.report()["pools"]

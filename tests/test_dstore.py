@@ -18,6 +18,10 @@ from repro.core.dstore import (
     LeaseLost,
     NotOwner,
 )
+
+# Socket servers + lease TTL waits make this suite wall-clock heavy; CI
+# runs `-m slow` in its own step with a wider per-test timeout.
+pytestmark = pytest.mark.slow
 from repro.core.sched import ControllerConfig, IOController
 from repro.core.store import WriteMode
 from repro.core.tiers import crc32_chunked

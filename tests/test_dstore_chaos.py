@@ -19,6 +19,10 @@ from repro.runtime.failure import ChaosInjector, SimulatedFailure
 MB = 2**20
 TTL = 1.0
 
+# Fault-injection soaks wait out real lease TTLs and retry backoffs; CI
+# runs `-m slow` in its own step with a wider per-test timeout.
+pytestmark = pytest.mark.slow
+
 
 def _shard(host_id: int, root, **kw) -> DistributedStore:
     kw.setdefault("mem_capacity_bytes", 8 * MB)

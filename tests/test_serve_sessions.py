@@ -1,0 +1,198 @@
+"""Multi-session serving plane: continuous batching, tier overflow,
+evict/resume identity, refcounted prefix pages — DESIGN.md §14."""
+
+from __future__ import annotations
+
+import dataclasses
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.arbiter import MemoryArbiter
+from repro.core.store import TwoLevelStore
+from repro.serving import SessionScheduler, SessionState, SharedPageRegistry
+
+PROMPT, NEW, WINDOW, PAGE = 10, 4, 4, 2
+
+
+@pytest.fixture(scope="module")
+def lm():
+    from repro.configs import get_reduced
+    from repro.models.lm import LM
+    from repro.nn.module import init_with_axes
+
+    # fp32: token-identity tests compare exact integer argmax sequences.
+    cfg = dataclasses.replace(get_reduced("qwen3_8b"), dtype="float32", scan_layers=False)
+    model = LM(cfg)
+    params, _ = init_with_axes(model.init, jax.random.PRNGKey(0), dtype=jnp.float32)
+    return model, cfg, params
+
+
+def make_sched(lm, **kw):
+    model, cfg, params = lm
+    kw.setdefault("window", WINDOW)
+    kw.setdefault("page", PAGE)
+    kw.setdefault("max_batch", 2)
+    kw.setdefault("dtype", jnp.float32)
+    return SessionScheduler(model, cfg, params, **kw)
+
+
+def prompts(cfg, n, shared=0, seed=0):
+    rng = np.random.default_rng(seed)
+    head = rng.integers(1, cfg.vocab, size=shared)
+    return [
+        np.concatenate([head, rng.integers(1, cfg.vocab, size=PROMPT - shared)]).astype(np.int32)
+        for _ in range(n)
+    ]
+
+
+def decode_all(sched, ps, new_tokens=NEW):
+    sids = [sched.submit(p, new_tokens) for p in ps]
+    sched.run(max_steps=200)
+    return {sid: sched.session_tokens(sid) for sid in sids}
+
+
+class TestLifecycle:
+    def test_admit_decode_retire(self, lm):
+        """QUEUED → ACTIVE → RETIRED; every session finishes with exactly
+        max_new_tokens and a recorded TTFT; caches are torn down."""
+        _, cfg, _ = lm
+        sched = make_sched(lm)
+        ps = prompts(cfg, 3)
+        sids = [sched.submit(p, NEW) for p in ps]
+        assert all(sched._sessions[s].state is SessionState.QUEUED for s in sids)
+        rep = sched.run(max_steps=200)
+        assert rep["retired"] == rep["sessions"] == 3
+        assert rep["prefills"] == 3
+        for sid in sids:
+            sess = sched._sessions[sid]
+            assert sess.state is SessionState.RETIRED
+            assert sess.caches is None  # retire must free the tiers
+            assert len(sess.tokens) == NEW
+            assert sess.ttft_s is not None and sess.ttft_s > 0
+        sched.close()
+
+    def test_continuous_batching_interleaves(self, lm):
+        """With max_batch < sessions, decode steps interleave sessions
+        (round-robin on last_step) instead of running them serially."""
+        _, cfg, _ = lm
+        sched = make_sched(lm, max_batch=2, admit_per_step=4)
+        toks = decode_all(sched, prompts(cfg, 4))
+        # 4 sessions x 3 decode steps at batch width 2 ⇒ more steps than
+        # any serial single-session run, but far fewer than 4x.
+        assert sched.decoded_tokens == sum(len(t) - 1 for t in toks.values())
+        assert sched.retired == 4
+        sched.close()
+
+    def test_batching_matches_unbatched_tokens(self, lm):
+        """Batched decode (vmapped kernel, heterogeneous lengths) produces
+        the same tokens as max_batch=1 serial decode."""
+        _, cfg, _ = lm
+        ps = prompts(cfg, 3)
+        batched = decode_all(make_sched(lm, max_batch=3, admit_per_step=3), ps)
+        serial = decode_all(make_sched(lm, max_batch=1, admit_per_step=1), ps)
+        assert list(batched.values()) == list(serial.values())
+
+
+class TestTierOverflow:
+    def test_evict_resume_token_identical(self, lm):
+        """Sessions parked in the store mid-generation resume bit-exactly:
+        the over-capacity run's tokens equal the unbounded control run's."""
+        _, cfg, _ = lm
+        ps = prompts(cfg, 4, shared=6)
+        with tempfile.TemporaryDirectory() as td:
+            store = TwoLevelStore(td + "/pfs", mem_capacity_bytes=8 << 20,
+                                  block_bytes=128 << 10, stripe_bytes=32 << 10)
+            sched = make_sched(lm, store=store, host_bytes=1, admit_per_step=4)
+            toks = decode_all(sched, ps)
+            rep = sched.report()
+            assert rep["evictions"] >= 1 and rep["resumes"] >= 1
+            evicted_sids = [s.sid for s in sched._sessions.values() if s.evictions]
+            assert evicted_sids, "host_bytes=1 must force at least one eviction"
+            sched.close()
+            store.close()
+        ctrl = decode_all(make_sched(lm, admit_per_step=4), ps)
+        assert list(toks.values()) == list(ctrl.values())
+
+    def test_hbm_pressure_demotes_mid_decode(self, lm):
+        """An aggregate HBM budget below the staging footprint drops LRU
+        staging buffers mid-decode; correctness is untouched (the next
+        attend re-stages).  Generations run long enough for the staging
+        buffer to double past its one-block floor — dropping a floor-sized
+        buffer frees nothing, so short decodes never demote."""
+        _, cfg, _ = lm
+        ps = prompts(cfg, 2)
+        new = 14  # cold history >> _block_k ⇒ staging grows ⇒ droppable
+        sched = make_sched(lm, hbm_bytes=1, admit_per_step=2)
+        toks = decode_all(sched, ps, new_tokens=new)
+        assert sched.demotions >= 1
+        sched.close()
+        ctrl = decode_all(make_sched(lm, admit_per_step=2), ps, new_tokens=new)
+        assert list(toks.values()) == list(ctrl.values())
+
+
+class TestPrefixSharing:
+    def test_registry_refcounts_no_double_free(self):
+        """Two holders of one page: first decref keeps the blob, second
+        deletes it — a retiring session can't free a live session's page."""
+        with tempfile.TemporaryDirectory() as td:
+            store = TwoLevelStore(td + "/pfs", mem_capacity_bytes=4 << 20,
+                                  block_bytes=64 << 10, stripe_bytes=32 << 10)
+            reg = SharedPageRegistry(store, prefix="t/pages")
+            blob = b"\x01" * 4096
+            k1 = reg.put(blob)
+            k2 = reg.put(blob)
+            assert k1 == k2
+            assert reg.pages_logical == 2 and reg.pages_stored == 1
+            assert reg.refcount(k1) == 2
+            assert reg.fetch(k1) == blob
+
+            assert reg.decref(k1) is False  # one holder left
+            assert reg.fetch(k1) == blob  # blob survives
+            assert reg.decref(k1) is True  # last ref: physically deleted
+            assert reg.live_pages() == 0
+            with pytest.raises(Exception):
+                reg.fetch(k1)
+            # adopt() rebuilds counts after a registry restart
+            reg.adopt([k1, k1])
+            assert reg.refcount(k1) == 2
+            assert reg.dedup_ratio() > 1.0
+            store.close()
+
+    def test_shared_prefix_pages_stored_once_and_reclaimed(self, lm):
+        """Sessions sharing a prompt prefix dedup their cold pages; once
+        every session retires, no physical page survives."""
+        _, cfg, _ = lm
+        ps = prompts(cfg, 4, shared=6)
+        with tempfile.TemporaryDirectory() as td:
+            store = TwoLevelStore(td + "/pfs", mem_capacity_bytes=8 << 20,
+                                  block_bytes=128 << 10, stripe_bytes=32 << 10)
+            sched = make_sched(lm, store=store, host_bytes=1, admit_per_step=4)
+            decode_all(sched, ps)
+            rep = sched.report()
+            assert rep["pages_stored"] < rep["pages_logical"]
+            assert rep["dedup_ratio"] > 1.0
+            # all sessions retired ⇒ every page reference dropped
+            assert sched.pages.live_pages() == 0
+            sched.close()
+            store.close()
+
+
+class TestArbiterIntegration:
+    def test_close_releases_tier_pools(self, lm):
+        """The scheduler's serve_hbm/serve_host pools return to the pot on
+        close; closing twice is safe."""
+        _, cfg, _ = lm
+        arb = MemoryArbiter(total_bytes=64 << 20)
+        sched = make_sched(lm, arbiter=arb)
+        assert {"serve_hbm", "serve_host"} <= set(arb.report()["pools"])
+        decode_all(sched, prompts(cfg, 2))
+        before = arb.releases
+        sched.close()
+        assert arb.releases == before + 2
+        assert not ({"serve_hbm", "serve_host"} & set(arb.report()["pools"]))
+        sched.close()  # idempotent
+        assert arb.releases == before + 2
