@@ -89,6 +89,15 @@ GATED: dict[str, str] = {
     "serve_sessions.over_capacity": "higher",
     "serve_sessions.resume_identical": "higher",
     "serve_sessions.dedup_ratio": "higher",
+    # self-healing cold tier: binary verdicts only — zero acked-byte loss
+    # under rot + server kill, scrub convergence, the calibrated
+    # linear-in-r Eq. 2 write-cost check, and r=1 layout compatibility
+    # (the scrub-storm p99 bound is wall-clock, hard-asserted in
+    # repair_scaling's own CI step)
+    "repair.no_data_loss": "higher",
+    "repair.fully_repaired": "higher",
+    "repair.model_within_tol": "higher",
+    "repair.r1_compat": "higher",
 }
 
 
@@ -166,6 +175,21 @@ def main() -> None:
     fresh = load_rows(args.fresh)
     if args.only:
         keep = set(args.only)
+        known = (
+            {k.split(".")[0] for k in baseline}
+            | {k.split(".")[0] for k in fresh}
+            | {k.split(".")[0] for k in GATED}
+        )
+        unknown = sorted(keep - known)
+        if unknown:
+            # A typo'd label must not silently gate nothing — the CI leg
+            # would go green having compared zero metrics.
+            print(
+                f"compare_bench: unknown --only label(s): {', '.join(unknown)} "
+                f"(known: {', '.join(sorted(known))})",
+                file=sys.stderr,
+            )
+            sys.exit(2)
         baseline = {k: v for k, v in baseline.items() if k.split(".")[0] in keep}
         fresh = {k: v for k, v in fresh.items() if k.split(".")[0] in keep}
     if not baseline:

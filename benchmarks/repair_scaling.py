@@ -1,0 +1,428 @@
+"""Self-healing cold tier — the acceptance gate for stripe replication,
+the background scrubber, and automatic repair (core/tiers.py +
+core/scrub.py, DESIGN.md §15).
+
+Three verdicts:
+
+**Gate 1 — zero data loss under rot + server loss.**  A replicated
+(``r=2``) store runs sustained mixed read/write load while the chaos
+injector rots primary replicas on disk (``pfs.read_unit`` bit flips) and
+then removes one whole PFS server directory (``pfs.server_down``).
+Every acked write must re-read **bit-identically** during degradation
+(read-any failover), and after ``scrub_until_clean`` reports fully
+repaired every stripe replica of every key must verify clean.  The rot
+phase targets replica 0 only and the scrubber heals it before the server
+kill — the single-failure-per-unit envelope an ``r=2`` code tolerates by
+construction; overlapping double faults are genuine data loss and the
+tier is honest about them (``TestScrubber.test_lost_object...``).
+Gated in CI: ``repair.no_data_loss``, ``repair.fully_repaired``.
+
+**Gate 2 — bounded foreground impact.**  Cold-read p99 while the
+scrubber loops continuously must stay within ``SCRUB_P99_RATIO_MAX``
+(2×) of the scrub-idle p99 (or the absolute cap, whichever is larger) —
+the SCRUB lane gate plus utilization pacing keep verification traffic
+off the foreground path's critical samples.  Hard-asserted in this
+module's own CI step (a wall-clock quantity, like chaos_soak's p99).
+
+**Gate 3 — Eq. 2 replication cost structure.**  The
+``pfs_write_replicated`` model (μ/r — the paper's Eq. 2 write-path
+discipline generalized to r replicas) says replicated write *time* is
+linear in r: a fixed per-put overhead plus a byte term amplified r×.
+Raw r1/r2 throughput ratios are machine-dependent (page caching hides
+the byte term entirely on fast local disks), so — like
+``compress_scaling``'s calibrated-model gate — we calibrate the two
+free parameters from endpoint measurements on *this* machine (fsynced
+puts at r=1 and r=4) and demand the model predict the interior point
+r=2 within ``MODEL_TOL``.  Gated in CI: ``repair.model_within_tol``;
+the r=1 leg also proves layout compatibility (``repair.r1_compat``: no
+``#repl`` manifest line, single-copy stripe files — bit-identical to
+the pre-replication tier).
+
+Run standalone for hard gate assertions::
+
+    PYTHONPATH=src python -m benchmarks.repair_scaling [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import tempfile
+import threading
+import time
+import zlib
+
+import numpy as np
+
+MB = 2**20
+
+#: Gate 2: scrub-storm cold-read p99 over scrub-idle p99 (the ISSUE
+#: acceptance bound), with an absolute cap so an ultra-fast idle baseline
+#: can't make the ratio flaky on loaded CI runners.
+SCRUB_P99_RATIO_MAX = 2.0
+SCRUB_P99_ABS_CAP_S = 0.25
+
+#: Gate 3: relative error of the measured interior-point (r=2) put time
+#: vs the linear-in-r prediction calibrated from the r=1 and r=4
+#: endpoints.  Empirically ~5-15% on an idle box; 0.35 absorbs noisy CI
+#: runners while still convicting a superlinear (or flat) cost curve.
+MODEL_TOL = 0.35
+
+REPLICATION = 2
+N_SERVERS = 4
+
+#: Gate 3's replication sweep: endpoints calibrate the linear model's
+#: two parameters, the interior point validates it.
+R_SWEEP = (1, 2, 4)
+R_INTERIOR = 2
+
+
+def _geometry(quick: bool) -> dict:
+    if quick:
+        return dict(
+            soak_files=12,
+            file_bytes=256 * 1024,
+            soak_rounds=2,
+            p99_files=8,
+            p99_bytes=512 * 1024,
+            p99_rounds=3,
+            thr_objects=6,
+            thr_bytes=4 * MB,
+            thr_stripe_bytes=1 * MB,
+            thr_reps=3,
+            mem_bytes=16 * MB,
+            block_bytes=128 * 1024,
+            stripe_bytes=64 * 1024,
+        )
+    return dict(
+        soak_files=24,
+        file_bytes=1 * MB,
+        soak_rounds=3,
+        p99_files=16,
+        p99_bytes=2 * MB,
+        p99_rounds=4,
+        thr_objects=8,
+        thr_bytes=8 * MB,
+        thr_stripe_bytes=2 * MB,
+        thr_reps=4,
+        mem_bytes=64 * MB,
+        block_bytes=512 * 1024,
+        stripe_bytes=256 * 1024,
+    )
+
+
+def _payload(name: str, nbytes: int) -> bytes:
+    """Deterministic payload — regenerable at validation time, so every
+    re-read is checked bit-identically against what was acked."""
+    seed = zlib.adler32(name.encode()) & 0xFFFFFFFF
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, 256, size=nbytes, dtype=np.uint8).tobytes()
+
+
+# ------------------------------------------------------------ gate 1: soak
+
+
+def measure_soak(quick: bool) -> dict:
+    from repro.core.store import ReadMode, TwoLevelStore
+    from repro.runtime.failure import ChaosInjector
+
+    geo = _geometry(quick)
+    chaos = ChaosInjector(seed=0x5C2B)
+    out = {"bad": 0, "acked": 0, "reads": 0}
+    with tempfile.TemporaryDirectory() as d:
+        store = TwoLevelStore(
+            os.path.join(d, "pfs"),
+            mem_capacity_bytes=geo["mem_bytes"],
+            block_bytes=geo["block_bytes"],
+            n_pfs_servers=N_SERVERS,
+            stripe_bytes=geo["stripe_bytes"],
+            chaos=chaos,
+            replication=REPLICATION,
+            scrub_interval_s=3600.0,  # queue-driven repairs only; passes explicit
+        )
+        try:
+            names = [f"soak/f{i:04d}" for i in range(geo["soak_files"])]
+            written: list[str] = []
+            rng = np.random.default_rng(0xD1CE)
+
+            def mixed_round(r: int, fresh: list[str]) -> None:
+                """One round of sustained mixed load: interleaved cold reads
+                (bit-identical validation) and write-through puts."""
+                order = rng.permutation(len(written))
+                stride = max(1, len(order) // max(1, len(fresh)))
+                snapshot = [written[i] for i in order]  # acked before the round
+                for k, n_read in enumerate(snapshot):
+                    data = store.get(n_read, mode=ReadMode.PFS_BYPASS)
+                    out["reads"] += 1
+                    if data != _payload(n_read, geo["file_bytes"]):
+                        out["bad"] += 1
+                    if k % stride == 0 and fresh:
+                        n = fresh.pop()
+                        store.put(n, _payload(n, geo["file_bytes"]))
+                        written.append(n)
+                        out["acked"] += 1
+                for n in fresh:
+                    store.put(n, _payload(n, geo["file_bytes"]))
+                    written.append(n)
+                    out["acked"] += 1
+
+            # setup: half the namespace exists before any fault is armed
+            half = len(names) // 2
+            for n in names[:half]:
+                store.put(n, _payload(n, geo["file_bytes"]))
+                written.append(n)
+                out["acked"] += 1
+
+            # --- rot phase: primary-replica bit flips under mixed load ---
+            n_flips = 4 if quick else 8
+            chaos.arm("pfs.read_unit", "bit_flip", prob=0.10, count=n_flips,
+                      where={"replica": 0})
+            for r in range(geo["soak_rounds"]):
+                lo = half + r * (len(names) - half) // geo["soak_rounds"]
+                hi = half + (r + 1) * (len(names) - half) // geo["soak_rounds"]
+                mixed_round(r, [n for n in names[lo:hi]])
+            out["flips"] = chaos.fired_count("pfs.read_unit", "bit_flip")
+            # heal the rot before the server kill: keeps every fault inside
+            # the single-failure-per-unit envelope r=2 tolerates
+            out["rot_passes"] = store.scrubber.scrub_until_clean()
+
+            # --- server loss: one whole PFS directory disappears ---
+            chaos.arm("pfs.server_down", "server_down", count=1, where={"server": 1})
+            for _ in range(2):
+                mixed_round(geo["soak_rounds"], [])  # degraded reads, zero loss
+            out["downs"] = chaos.fired_count("pfs.server_down", "server_down")
+
+            # --- repair verdict: scrub to convergence, verify every replica ---
+            out["repair_passes"] = store.scrubber.scrub_until_clean()
+            dirty = sum(1 for k in store.pfs.keys() if store.pfs.verify(k))
+            out["dirty_after"] = dirty
+            for n in names:  # final bit-identity sweep of the whole namespace
+                if store.get(n, mode=ReadMode.PFS_BYPASS) != _payload(n, geo["file_bytes"]):
+                    out["bad"] += 1
+            out["degraded"] = store.pfs.stats.degraded_reads
+            out["repaired_units"] = store.pfs.stats.repaired_units
+            out["scrub"] = store.scrubber.stats.to_dict()
+        finally:
+            store.close()
+    return out
+
+
+# ------------------------------------------------------------- gate 2: p99
+
+
+def measure_scrub_p99(quick: bool) -> dict:
+    from repro.core.sched import ControllerConfig, IOController
+    from repro.core.scrub import Scrubber
+    from repro.core.store import ReadMode, TwoLevelStore
+
+    geo = _geometry(quick)
+    with tempfile.TemporaryDirectory() as d:
+        store = TwoLevelStore(
+            os.path.join(d, "pfs"),
+            mem_capacity_bytes=geo["mem_bytes"],
+            block_bytes=geo["block_bytes"],
+            n_pfs_servers=N_SERVERS,
+            stripe_bytes=geo["stripe_bytes"],
+            controller=IOController(ControllerConfig()),
+            replication=REPLICATION,
+        )
+        try:
+            names = [f"p99/f{i:04d}" for i in range(geo["p99_files"])]
+            for n in names:
+                store.put(n, _payload(n, geo["p99_bytes"]))
+            store.drain()
+            rng = np.random.default_rng(0x99)
+
+            def read_mix() -> list[float]:
+                lats: list[float] = []
+                for _ in range(geo["p99_rounds"]):
+                    for i in rng.permutation(len(names)):
+                        t0 = time.perf_counter()
+                        data = store.get(names[i], mode=ReadMode.PFS_BYPASS)
+                        lats.append(time.perf_counter() - t0)
+                        assert data == _payload(names[i], geo["p99_bytes"])
+                return lats
+
+            idle_lat = read_mix()  # scrub-idle yardstick, same mix
+
+            scrub = Scrubber(store.pfs, controller=store.controller)
+            stop = threading.Event()
+
+            def storm() -> None:
+                while not stop.is_set():
+                    scrub.scrub_once()
+
+            t = threading.Thread(target=storm, name="scrub-storm", daemon=True)
+            t.start()
+            try:
+                busy_lat = read_mix()  # identical mix under continuous scrub
+            finally:
+                stop.set()
+                scrub.stop()
+                t.join(timeout=30)
+            return {
+                "idle_p99": float(np.percentile(idle_lat, 99)),
+                "busy_p99": float(np.percentile(busy_lat, 99)),
+                "scrub_passes": scrub.stats.passes,
+                "pause_s": store.controller.scrub_pause_s,
+            }
+        finally:
+            store.close()
+
+
+# ------------------------------------------------ gate 3: Eq. 2 throughput
+
+
+def measure_write_model(quick: bool) -> dict:
+    from statistics import median
+
+    from repro.core import iomodel
+    from repro.core.cluster import paper_average_cluster
+    from repro.core.tiers import PFSTier
+
+    geo = _geometry(quick)
+    # Byte-dominated probe geometry: stripes sized so every put lands one
+    # unit per server, and medians over repetitions — small fsynced writes
+    # are latency-noise-dominated and would swamp the curve being fitted.
+    t_put: dict[int, float] = {}  # median fsynced per-object put time, by r
+    r1_compat = True
+    for r in R_SWEEP:
+        meds: list[float] = []
+        for rep in range(geo["thr_reps"]):
+            with tempfile.TemporaryDirectory() as d:
+                # fsync: the byte cost must reach the disk, or page caching
+                # flattens the curve and there is no replication cost to model
+                tier = PFSTier(
+                    os.path.join(d, "pfs"),
+                    n_servers=N_SERVERS,
+                    stripe_bytes=geo["thr_stripe_bytes"],
+                    replication=r,
+                    fsync=True,
+                )
+                try:
+                    blobs = [
+                        _payload(f"thr/r{r}_{i}", geo["thr_bytes"])
+                        for i in range(geo["thr_objects"])
+                    ]
+                    tier.put("thr/warmup", blobs[0])  # exclude cold-start effects
+                    samples: list[float] = []
+                    for i, blob in enumerate(blobs):
+                        t0 = time.perf_counter()
+                        tier.put(f"thr/r{r}_{i}", blob)
+                        samples.append(time.perf_counter() - t0)
+                    meds.append(median(samples))
+                    if r == 1 and rep == 0:
+                        # layout compatibility: r=1 must be bit-identical to
+                        # the pre-replication tier — no #repl line,
+                        # single-copy files
+                        text = open(tier._manifest_path("thr/r1_0", 0)).read()
+                        extra = [
+                            j
+                            for j in range(1, N_SERVERS)
+                            if os.path.exists(tier._stripe_path("thr/r1_0", 0, j))
+                            or os.path.exists(tier._manifest_path("thr/r1_0", j))
+                        ]
+                        r1_compat = "#repl" not in text and not extra
+                finally:
+                    tier.close()
+        t_put[r] = median(meds)
+    # Calibrate t(r) = a + b*r from the endpoints, predict the interior
+    # point — Eq. 2's structure (fixed overhead + r-amplified byte term)
+    # with both parameters measured on this machine.
+    r_lo, r_hi = R_SWEEP[0], R_SWEEP[-1]
+    t_pred = t_put[r_lo] + (t_put[r_hi] - t_put[r_lo]) * (R_INTERIOR - r_lo) / (r_hi - r_lo)
+    rel_err = abs(t_put[R_INTERIOR] - t_pred) / t_pred
+    spec = paper_average_cluster()
+    model_ratio = iomodel.pfs_write_replicated(spec, 1) / iomodel.pfs_write_replicated(
+        spec, REPLICATION
+    )
+    thr = {r: geo["thr_bytes"] / MB / t for r, t in t_put.items()}
+    return {
+        "thr_r1": thr[1],
+        "thr_r2": thr[REPLICATION],
+        "thr_r4": thr[r_hi],
+        "t_interior_ms": t_put[R_INTERIOR] * 1e3,
+        "t_pred_ms": t_pred * 1e3,
+        "rel_err": rel_err,
+        "model_ratio": model_ratio,
+        "r1_compat": r1_compat,
+        "read_degraded_model": iomodel.pfs_read_any(spec, REPLICATION, failed=1, n=N_SERVERS),
+    }
+
+
+def run(quick: bool = False) -> list[tuple[str, float, str]]:
+    soak = measure_soak(quick)
+    p99 = measure_scrub_p99(quick)
+    model = measure_write_model(quick)
+
+    no_loss = 1.0 if soak["bad"] == 0 else 0.0
+    fully_repaired = 1.0 if soak["dirty_after"] == 0 else 0.0
+    p99_x = p99["busy_p99"] / p99["idle_p99"] if p99["idle_p99"] > 0 else 0.0
+    p99_ok = p99["busy_p99"] <= max(
+        SCRUB_P99_RATIO_MAX * p99["idle_p99"], SCRUB_P99_ABS_CAP_S
+    )
+    model_ok = 1.0 if model["rel_err"] <= MODEL_TOL else 0.0
+    return [
+        ("repair.replication", float(REPLICATION), f"stripe copies over {N_SERVERS} servers"),
+        ("repair.faults_fired", float(soak["flips"] + soak["downs"]),
+         f"{soak['flips']} on-disk bit flips + {soak['downs']} server-dir kill"),
+        ("repair.acked_writes", float(soak["acked"]),
+         f"write-through puts under mixed load ({soak['reads']} validated reads)"),
+        ("repair.degraded_reads", float(soak["degraded"]),
+         "reads served from a non-primary replica (read-any failover)"),
+        ("repair.no_data_loss", no_loss,
+         f"=1 required: every read bit-identical during degradation ({soak['bad']} bad)"),
+        ("repair.repaired_units", float(soak["repaired_units"]),
+         f"stripe replicas rewritten over {soak['rot_passes'] + soak['repair_passes']} passes"),
+        ("repair.fully_repaired", fully_repaired,
+         f"=1 required: every replica verifies clean post-scrub ({soak['dirty_after']} dirty)"),
+        ("repair.idle_p99_ms", round(p99["idle_p99"] * 1e3, 2), "cold-read p99, scrubber idle"),
+        ("repair.scrub_p99_ms", round(p99["busy_p99"] * 1e3, 2),
+         f"cold-read p99 under continuous scrub ({p99['scrub_passes']} passes)"),
+        ("repair.scrub_p99_x", round(p99_x, 2),
+         f"<= {SCRUB_P99_RATIO_MAX} (or {SCRUB_P99_ABS_CAP_S}s abs) required standalone"),
+        ("repair.scrub_p99_ok", 1.0 if p99_ok else 0.0,
+         "=1: scrubber stays off the foreground read path"),
+        ("repair.write_mb_s_r1", round(model["thr_r1"], 1),
+         "fsynced PFS write throughput, r=1"),
+        ("repair.write_mb_s_r2", round(model["thr_r2"], 1),
+         f"fsynced PFS write throughput, r={REPLICATION}"),
+        ("repair.write_mb_s_r4", round(model["thr_r4"], 1),
+         f"fsynced PFS write throughput, r={R_SWEEP[-1]} (calibration endpoint)"),
+        ("repair.model_rel_err", round(model["rel_err"], 3),
+         f"interior r={R_INTERIOR} put time {model['t_interior_ms']:.1f}ms vs "
+         f"linear-in-r prediction {model['t_pred_ms']:.1f}ms "
+         f"(Eq. 2 model r1/r2 throughput ratio {model['model_ratio']:.1f})"),
+        ("repair.model_within_tol", model_ok,
+         f"=1 required: interior-point rel err <= {MODEL_TOL:.0%}"),
+        ("repair.r1_compat", 1.0 if model["r1_compat"] else 0.0,
+         "=1 required: r=1 layout bit-identical to the pre-replication tier"),
+    ]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true", help="smoke sizes + hard gate assertions")
+    args = ap.parse_args()
+    rows = run(quick=args.quick)
+    for name, value, derived in rows:
+        print(f"{name},{value},{derived}")
+    vals = {name: value for name, value, _ in rows}
+    assert vals["repair.faults_fired"] > 1, "the fault schedule never fired"
+    assert vals["repair.degraded_reads"] > 0, "no read ever failed over"
+    assert vals["repair.no_data_loss"] == 1.0, "a degraded read was not bit-identical"
+    assert vals["repair.fully_repaired"] == 1.0, "scrub left unverified replicas behind"
+    assert vals["repair.scrub_p99_ok"] == 1.0, (
+        f"scrub-storm p99 {vals['repair.scrub_p99_ms']}ms exceeds "
+        f"{SCRUB_P99_RATIO_MAX}x idle ({vals['repair.idle_p99_ms']}ms) and the absolute cap"
+    )
+    assert vals["repair.model_within_tol"] == 1.0, (
+        f"interior-point (r={R_INTERIOR}) put time strays {vals['repair.model_rel_err']:.0%} "
+        f"from the calibrated linear-in-r Eq. 2 model (tol {MODEL_TOL:.0%})"
+    )
+    assert vals["repair.r1_compat"] == 1.0, "r=1 layout is not byte-identical to the seed tier"
+    print("repair_scaling gates passed")
+
+
+if __name__ == "__main__":
+    main()

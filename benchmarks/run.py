@@ -40,6 +40,7 @@ def main() -> None:
         mixed_scaling,
         multihost_scaling,
         parallel_scaling,
+        repair_scaling,
         roofline,
         serve_scaling,
         serve_sessions,
@@ -61,9 +62,19 @@ def main() -> None:
         ("multihost", multihost_scaling),
         ("chaos", chaos_soak),
         ("serve_sessions", serve_sessions),
+        ("repair", repair_scaling),
         ("roofline", roofline),
     ]
     if args.only:
+        known = {label for label, _ in modules}
+        unknown = [label for label in args.only if label not in known]
+        if unknown:
+            # A typo'd label must not silently run nothing (a CI leg that
+            # filters by label would pass vacuously).
+            sys.exit(
+                f"run.py: unknown --only label(s): {', '.join(unknown)} "
+                f"(known: {', '.join(sorted(known))})"
+            )
         modules = [(label, mod) for label, mod in modules if label in args.only]
     art_dir = os.environ.get("BENCH_ARTIFACT_DIR", ".")
     os.makedirs(art_dir, exist_ok=True)

@@ -334,6 +334,10 @@ def parse_index(data, frame_bytes: int = 256 * 1024) -> FrameIndex:
         raise IntegrityError(f"bad container magic {magic!r}")
     if codec not in (CODEC_ZLIB, CODEC_LZMA):
         raise IntegrityError(f"unknown codec id {codec}")
+    if filt not in (FILTER_NONE, FILTER_SHUFFLE, FILTER_DELTA_SHUFFLE):
+        raise IntegrityError(f"unknown filter id {filt}")
+    if width not in (1, 2, 4, 8):
+        raise IntegrityError(f"bad filter width {width}")
     table_end = _HEADER.size + 4 * n_frames
     if len(mv) < table_end:
         raise IntegrityError("container truncated inside frame table")

@@ -736,6 +736,9 @@ class DStoreStats:
     reclaim_warmed_bytes: int = 0  # bytes pre-warmed into this shard
     reclaim_errors: int = 0
     recovery_events: list = dataclasses.field(default_factory=list)
+    # -- self-healing cold tier (DESIGN.md §15) --
+    scrub_repairs: int = 0  # keys this host's scrubber healed
+    scrub_repaired_units: int = 0  # stripe-unit replicas it rewrote
 
     def peer_hot_fraction(self) -> float:
         """Of remotely-owned bytes this host read, the fraction served hot
@@ -831,6 +834,14 @@ class DistributedStore:
         self.registry = HostRegistry(pfs_root, host_id, ttl_s=lease_ttl_s, chaos=chaos)
         self.leases = LeaseTable(pfs_root, self.registry, chaos=chaos)
         self.gossip = GossipBoard(pfs_root, host_id, hot_limit=gossip_hot_limit)
+        # Scrub coordination (DESIGN.md §15): when the wrapped store runs a
+        # scrubber (scrub_interval_s in **store_kwargs), partition scrub
+        # ownership by lease — each file is scrubbed by exactly one host —
+        # and publish repair events on the gossip board.
+        self._repair_events: list[dict] = []
+        if self.store.scrubber is not None:
+            self.store.scrubber.filter_fn = self._scrub_owns
+            self.store.scrubber.on_repair = self._on_scrub_repair
         self.server = _PeerServer(self)
         self.registry.publish(self.server.addr)
         if auto_gossip:
@@ -859,6 +870,7 @@ class DistributedStore:
             "block_bytes": self.store.layout.block_size,
             "n_pfs_servers": self.store.pfs.n_servers,
             "stripe_bytes": self.store.pfs.stripe_bytes,
+            "replication": self.store.pfs.replication,
         }
         existing = _read_json(path)
         if existing is None:
@@ -1346,6 +1358,55 @@ class DistributedStore:
                 )
         return reclaimed
 
+    # --------------------------------------------------------------- scrub
+
+    def _scrub_owns(self, key: str) -> bool:
+        """Scrub-ownership partition: does *this* host scrub ``key``?
+
+        Block keys derive from file names (``name:idx``), and files have
+        exactly one valid lease — so the lease owner scrubs them, and the
+        whole namespace is covered with no double work.  Files with no
+        valid lease (never claimed, or orphaned mid-takeover) fall back to
+        a deterministic hash partition over the live host set, so they are
+        still scrubbed by exactly one host rather than by all or none.
+        """
+        name = key.rsplit(":", 1)[0]
+        info = self.leases.read(name)
+        if info is not None and self.leases.valid(info):
+            return info.owner == self.host_id
+        now = time.time()
+        live = sorted(
+            int(rec["host"]) for rec in self.registry.hosts()
+            if now < rec.get("expires", 0.0)
+        )
+        if not live or self.host_id not in live:
+            return True  # registry unreadable/raced: scrub rather than skip
+        return live[zlib.crc32(name.encode()) % len(live)] == self.host_id
+
+    def _on_scrub_repair(self, key: str, result: dict) -> None:
+        """Scrubber repair hook: count it and stage a gossip repair event
+        (published with the next heartbeat's gossip payload)."""
+        event = {
+            "key": key,
+            "host": self.host_id,
+            "units": int(result.get("repaired_units", 0)),
+            "manifests": int(result.get("repaired_manifests", 0)),
+            "time": time.time(),
+        }
+        with self._stats_lock:
+            self.stats.scrub_repairs += 1
+            self.stats.scrub_repaired_units += event["units"]
+            self._repair_events.append(event)
+            del self._repair_events[:-64]  # bounded: latest 64 events gossip
+
+    def scrub_now(self) -> dict:
+        """One synchronous scrub pass over this host's owned partition
+        (tests/operators; the background thread runs the same pass)."""
+        scrubber = self.store.scrubber
+        if scrubber is None:
+            raise RuntimeError("store was built without scrub_interval_s")
+        return scrubber.scrub_once()
+
     def restart_peer_server(self) -> None:
         """Bounce the peer transport endpoint, keeping the same port and
         this host's leases (a transport blip, not a process restart — the
@@ -1424,6 +1485,12 @@ class DistributedStore:
             if resident > 0:
                 hot[name] = int(resident * size)
         payload = dict(payload, hot=hot, addr=self.server.addr)
+        with self._stats_lock:
+            if self._repair_events:
+                # Repair events ride the gossip board (DESIGN.md §15): peers
+                # see which keys were healed where, and the benchmarks can
+                # assert cluster-wide repair visibility without new RPCs.
+                payload["repairs"] = list(self._repair_events)
         self.gossip.publish(payload)
         if ctrl is not None:
             for host, rec in self.gossip.peers().items():
@@ -1432,6 +1499,14 @@ class DistributedStore:
     def cluster_hot_bytes(self) -> dict[int, dict[str, int]]:
         """host -> {file -> hot bytes} over the gossip board (placement input)."""
         return self.gossip.hot_bytes()
+
+    def cluster_repairs(self) -> dict[int, list[dict]]:
+        """host -> recent scrub-repair events over the gossip board."""
+        return {
+            host: list(rec.get("repairs", []))
+            for host, rec in self.gossip.peers(include_self=True).items()
+            if rec.get("repairs")
+        }
 
     # --------------------------------------------------------------- stats
 

@@ -75,6 +75,48 @@ def ofs_write(spec: ClusterSpec, n: int | None = None) -> float:
     )
 
 
+def pfs_write_replicated(spec: ClusterSpec, replication: int, n: int | None = None) -> float:
+    """Eq. 2-style replicated PFS write: one compute node's rate at factor r.
+
+    Every logical byte lands ``r`` times across the data servers, so each
+    shared resource carries r streams — the NIC ``rho/r``, the backplane
+    ``Phi/rN``, the data disks ``(M/N)·mu'/r``.  Algebraically this is
+    ``ofs_write / r`` (Eq. 2's ``mu/3`` term generalized to a knob):
+    durability is priced as a 1/r throughput multiplier, which is exactly
+    what ``PFSTier(replication=r)`` should measure.
+    """
+    if replication < 1:
+        raise ValueError(f"replication must be >= 1, got {replication}")
+    return ofs_write(spec, n) / replication
+
+
+def pfs_read_any(
+    spec: ClusterSpec, replication: int, failed: int = 0, n: int | None = None
+) -> float:
+    """Read-any over ``r`` rotated replicas with ``failed`` servers lost.
+
+    A healthy read costs what a single copy costs (read-any touches one
+    replica), so r does not appear in the healthy rate.  Losing servers
+    shrinks the pool the surviving reads spread over (``M - failed``)
+    until ``failed >= r``: rotated placement then guarantees some stripe
+    unit kept *all* its replicas on the failed set — data loss, rate 0.
+    """
+    if replication < 1:
+        raise ValueError(f"replication must be >= 1, got {replication}")
+    if failed < 0 or failed > spec.n_data:
+        raise ValueError(f"failed must be in [0, n_data], got {failed}")
+    if failed >= replication:
+        return 0.0
+    n = spec.n_compute if n is None else n
+    m = spec.n_data - failed
+    return min(
+        spec.nic_mbps,
+        spec.backplane_mbps / n,
+        (m / n) * spec.nic_mbps,
+        (m / n) * spec.data_disk_read_mbps,
+    )
+
+
 def tachyon_read(spec: ClusterSpec, n: int | None = None, local: bool = True) -> float:
     """Eq. 4 — in-memory file system read throughput of one compute node."""
     n = spec.n_compute if n is None else n

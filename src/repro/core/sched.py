@@ -77,15 +77,20 @@ class StreamClass(enum.Enum):
     SEQ_ONCE = "seq_once"  # sequential, read exactly once (scan / spill run)
     WRITE_BURST = "write_burst"  # bursty writes, rarely read back
     LATENCY = "latency"  # small latency-sensitive reads
+    SCRUB = "scrub"  # background integrity scrub / repair traffic
 
 
 #: Greedy capacity-plan priority: who gets memory first under contention.
+#: SCRUB goes last on purpose — its bytes are verification traffic with
+#: zero Eq. 7 caching value, and its I/O lane is throttled separately
+#: (``scrub_gate`` / ``scrub_pause_s``) whenever the PFS pool is busy.
 _PLAN_PRIORITY = (
     StreamClass.LATENCY,
     StreamClass.SEQ_REUSE,
     StreamClass.DEFAULT,
     StreamClass.WRITE_BURST,
     StreamClass.SEQ_ONCE,
+    StreamClass.SCRUB,
 )
 
 
@@ -102,6 +107,12 @@ class ControllerConfig:
     under_target_slack: float = 0.05  # reuse class this far under target f = contended
     util_low: float = 0.5  # PFS pool under this busy fraction -> deepen
     util_high: float = 0.9  # over this -> stop deepening / shrink
+    # SCRUB lane throttle: the background scrubber sleeps this long between
+    # objects — the floor while the PFS pool idles, the ceiling while
+    # foreground traffic keeps it above util_high (so scrub verification
+    # cannot push foreground p99 unbounded; DESIGN.md §15).
+    scrub_pause_min_s: float = 0.0
+    scrub_pause_max_s: float = 0.25
     trajectory_len: int = 256
     # Priors until the first EWMA samples land (MB/s).  Deliberately modest;
     # two ticks of real traffic dominate them.
@@ -197,6 +208,12 @@ class IOController:
 
         self.flush_gate = AdaptiveGate(limit=1)
         self._max_lanes = 1
+        # SCRUB lane (DESIGN.md §15): at most one object scrubbed at a time
+        # (repair correctness wants serial per-key work anyway), paced by
+        # ``scrub_pause_s`` which the tick retunes off PFS utilization —
+        # the same busy-fraction signal that sizes flush lanes.
+        self.scrub_gate = AdaptiveGate(limit=1)
+        self.scrub_pause_s = self.cfg.scrub_pause_min_s
 
         # Codec telemetry (DESIGN.md §13): EWMA compression ratio and
         # encode/decode rates.  They feed the DEFAULT-class compress
@@ -359,6 +376,7 @@ class IOController:
 
         self._retune_readahead()
         self._retune_flush_lanes(read_bytes_delta > 0)
+        self._retune_scrub_lane()
         if now - self._last_plan >= self.cfg.plan_interval_s:
             self._replan()
             if self.arbiter is not None:
@@ -410,6 +428,22 @@ class IOController:
         if lanes != self.flush_gate.limit:
             self.flush_gate.set_limit(lanes)
             self.lane_trajectory.append((time.perf_counter() - self._t0, lanes))
+
+    def _retune_scrub_lane(self) -> None:
+        """Pace the background scrubber off PFS-pool busyness: idle pool →
+        scrub at full speed (pause floor), saturated pool → back off to the
+        pause ceiling, linear in between.  Mirrors the flush-lane stance:
+        background durability work yields to foreground latency."""
+        cfg = self.cfg
+        u = self.pfs_utilization
+        if u <= cfg.util_low:
+            pause = cfg.scrub_pause_min_s
+        elif u >= cfg.util_high:
+            pause = cfg.scrub_pause_max_s
+        else:
+            frac = (u - cfg.util_low) / max(1e-9, cfg.util_high - cfg.util_low)
+            pause = cfg.scrub_pause_min_s + frac * (cfg.scrub_pause_max_s - cfg.scrub_pause_min_s)
+        self.scrub_pause_s = pause
 
     def _replan(self) -> None:
         """Footprint scan + greedy Eq.7 capacity plan: assign target ``f``
@@ -715,6 +749,7 @@ class IOController:
             "bypasses": bypasses,
             "flush_drops": sum(cs["flush_drops"] for cs in classes.values()),
             "flush_lanes": self.flush_gate.limit,
+            "scrub_pause_s": round(self.scrub_pause_s, 4),
             "lane_trajectory": list(self.lane_trajectory),
             "readahead": {c.value: d for c, d in ra.items()},
             "readahead_trajectory": list(self.readahead_trajectory),

@@ -89,6 +89,7 @@ from repro.core import codec as blockcodec
 from repro.core.codec import CodecSpec
 from repro.core.layout import BlockLayout
 from repro.core.sched import IOController, StreamClass
+from repro.core.scrub import Scrubber
 from repro.core.tiers import (
     BlockNotFound,
     CapacityExceeded,
@@ -372,6 +373,8 @@ class TwoLevelStore:
         controller: IOController | None = None,
         codec: CodecSpec | None = None,
         chaos=None,  # runtime.failure.ChaosInjector | None (threaded to the PFS tier)
+        replication: int = 1,
+        scrub_interval_s: float | None = None,
     ) -> None:
         self.layout = BlockLayout(block_bytes)
         self.mem = MemoryTier(mem_capacity_bytes)
@@ -387,6 +390,7 @@ class TwoLevelStore:
             fsync=fsync,
             io_workers=self.io_workers,
             chaos=chaos,
+            replication=replication,
         )
         self.write_mode = write_mode
         self.read_mode = read_mode
@@ -454,6 +458,18 @@ class TwoLevelStore:
                 self._pool.shutdown(wait=False)
                 self.pfs.close()
                 raise
+
+        # Self-healing cold tier (DESIGN.md §15): with a scrub interval the
+        # store runs a background Scrubber over its PFS tier.  The scrubber
+        # installs itself as the tier's ``on_degraded`` hook, so a read that
+        # failed over past a bad replica queues an out-of-band repair; full
+        # passes re-verify and re-replicate everything else on the interval.
+        self.scrubber: Scrubber | None = None
+        if scrub_interval_s is not None:
+            self.scrubber = Scrubber(
+                self.pfs, controller=controller, interval_s=scrub_interval_s
+            )
+            self.scrubber.start()
 
     def hint_stream(self, prefix: str, cls: StreamClass | None) -> None:
         """Declare the access pattern of every file under ``prefix``.
@@ -1736,17 +1752,22 @@ class TwoLevelStore:
         return self.pfs.server_bytes()
 
     def tier_stats(self) -> dict[str, dict]:
-        return {
+        out = {
             "mem": dataclasses.asdict(self.mem.stats),
             "pfs": dataclasses.asdict(self.pfs.stats),
             "store": dataclasses.asdict(self.stats),
         }
+        if self.scrubber is not None:
+            out["scrub"] = self.scrubber.stats.to_dict()
+        return out
 
     def close(self) -> None:
         if self._closed:
             return
         self.drain()
         self._closed = True
+        if self.scrubber is not None:
+            self.scrubber.stop()
         for _ in self._flushers:
             self._flush_q.put(None)
         for t in self._flushers:

@@ -26,6 +26,7 @@ from __future__ import annotations
 
 import dataclasses
 import os
+import shutil
 import threading
 import time
 import zlib
@@ -147,6 +148,11 @@ class TierStats:
     # pooled buffer was reused vs freshly allocated.
     buf_allocs: int = 0
     buf_reuses: int = 0
+    # Replication ledger (DESIGN.md §15): reads that had to fail over past
+    # a missing/corrupt primary copy to a surviving replica, and stripe-unit
+    # replicas rewritten by the repair path (inline or scrubber-driven).
+    degraded_reads: int = 0
+    repaired_units: int = 0
     # Codec ledger (DESIGN.md §13): logical bytes are what the application
     # wrote/read, physical bytes are what actually crossed this tier after
     # compression.  Both encode and decode events contribute a (logical,
@@ -276,6 +282,8 @@ class TierStats:
             write_bursts=self.write_bursts + other.write_bursts,
             buf_allocs=self.buf_allocs + other.buf_allocs,
             buf_reuses=self.buf_reuses + other.buf_reuses,
+            degraded_reads=self.degraded_reads + other.degraded_reads,
+            repaired_units=self.repaired_units + other.repaired_units,
             bytes_logical=self.bytes_logical + other.bytes_logical,
             bytes_physical=self.bytes_physical + other.bytes_physical,
             compress_seconds=self.compress_seconds + other.compress_seconds,
@@ -461,6 +469,18 @@ class PFSTier:
     aggregate-throughput model saturates M servers).  Per-key striped
     locks serialize put/get/delete of the *same* key; different keys
     proceed fully in parallel.
+
+    **Replication (DESIGN.md §15).**  With ``replication=r`` every stripe
+    unit (and the manifest) is written to ``r`` distinct server
+    directories — replica ``j`` of unit ``u`` lands on server
+    ``(u + j) % n_servers``, a rotation, so no two replicas of one unit
+    ever co-locate and each server carries an even 1/n share of every
+    replica rank (the Eq. 2 μ/r write cost, read-any on the read side).
+    Reads fail over past missing/corrupt copies (counting
+    ``TierStats.degraded_reads`` and notifying ``on_degraded`` so a
+    scrubber can queue a repair); :meth:`repair` rewrites bad replicas
+    from a surviving good copy.  ``replication=1`` is byte-identical to
+    the pre-replication layout on disk.
     """
 
     MANIFEST_SUFFIX = ".crc"
@@ -475,15 +495,25 @@ class PFSTier:
         fsync: bool = False,
         io_workers: int | None = None,
         chaos=None,  # runtime.failure.ChaosInjector | None
+        replication: int = 1,
     ) -> None:
         if n_servers <= 0 or stripe_bytes <= 0 or io_buffer_bytes <= 0:
             raise ValueError("n_servers, stripe_bytes, io_buffer_bytes must be positive")
+        if not 1 <= replication <= n_servers:
+            raise ValueError(
+                f"replication must be in [1, n_servers]: got r={replication}, n={n_servers}"
+            )
         self.chaos = chaos
         self.root = root
         self.n_servers = n_servers
         self.stripe_bytes = stripe_bytes
         self.io_buffer_bytes = io_buffer_bytes
         self.fsync = fsync
+        self.replication = replication
+        # Called with the key whenever a read had to fail over past a bad
+        # replica — the scrubber's repair-queue hook.  Exceptions are
+        # swallowed: degraded reads must still succeed.
+        self.on_degraded = None
         self.io_workers = n_servers if io_workers is None else max(1, io_workers)
         self._pool: ThreadPoolExecutor | None = (
             ThreadPoolExecutor(max_workers=self.io_workers, thread_name_prefix="pfs-io")
@@ -520,12 +550,16 @@ class PFSTier:
     def _unsafe(name: str) -> str:
         return name.replace("@", ":").replace("__", os.sep)
 
-    def _stripe_path(self, key: str, unit: int) -> str:
-        server = unit % self.n_servers
+    def _stripe_path(self, key: str, unit: int, replica: int = 0) -> str:
+        # Rotated placement: replica j of unit u on server (u + j) % n.
+        # The unit index in the filename keeps cross-directory placement
+        # collision-free, and replica 0 is exactly the pre-replication path.
+        server = (unit + replica) % self.n_servers
         return os.path.join(self._server_dir(server), f"{self._safe(key)}.s{unit:04d}")
 
-    def _manifest_path(self, key: str) -> str:
-        return os.path.join(self._server_dir(0), self._safe(key) + self.MANIFEST_SUFFIX)
+    def _manifest_path(self, key: str, replica: int = 0) -> str:
+        server = replica % self.n_servers
+        return os.path.join(self._server_dir(server), self._safe(key) + self.MANIFEST_SUFFIX)
 
     def _iter_units(self, total: int) -> Iterator[tuple[int, int, int]]:
         """Yield (unit_index, offset, length) stripe units covering ``total``."""
@@ -543,6 +577,37 @@ class PFSTier:
             return list(self._pool.map(fn, units))
         return [fn(u) for u in units]
 
+    def _open_for_write(self, path: str):
+        """Open a stripe/manifest file for writing, recreating a missing
+        server directory — a replaced data node rejoins empty, and both
+        foreground writes and scrubber re-replication must be able to
+        land bytes on it."""
+        try:
+            return open(path, "wb")
+        except FileNotFoundError:
+            os.makedirs(os.path.dirname(path), exist_ok=True)
+            return open(path, "wb")
+
+    def _maybe_chaos_server_down(self) -> None:
+        """Chaos site "pfs.server_down": a ``server_down`` fault removes one
+        server directory wholesale (``where={"server": k}`` picks the
+        victim) — the lost-data-node scenario the replicated read path and
+        the scrubber's re-replication exist to survive."""
+        if self.chaos is None:
+            return
+        for s in range(self.n_servers):
+            spec = self.chaos.at("pfs.server_down", server=s)
+            if spec is not None and spec.kind == "server_down":
+                shutil.rmtree(self._server_dir(s), ignore_errors=True)
+
+    def _note_degraded(self, key: str) -> None:
+        hook = self.on_degraded
+        if hook is not None:
+            try:
+                hook(key)
+            except Exception:
+                pass  # repair enqueue is best-effort; the read must succeed
+
     # -- core ops -------------------------------------------------------------
 
     def put(self, key: str, data, tag: str | None = None) -> int:
@@ -559,6 +624,7 @@ class PFSTier:
         :meth:`describe` reads it back.
         """
         t0 = time.perf_counter()
+        self._maybe_chaos_server_down()
         mv = memoryview(data)
         units = list(self._iter_units(len(mv)))
 
@@ -570,23 +636,45 @@ class PFSTier:
             # write produces: a manifest that convicts the short file on
             # the next read (silent mode), or an immediate write error the
             # flush pipeline retries (default).  Zero-cost without chaos.
-            cutoff = off + ln
+            # Fired once per replica, so a count-bounded spec tears exactly
+            # one copy and read-any serves the survivors.
             torn = None
-            if self.chaos is not None:
-                spec = self.chaos.at("pfs.write_unit", key=key, unit=unit)
-                if spec is not None and spec.kind == "torn_write":
-                    torn = spec
-                    cutoff = off + max(0, int(ln * spec.frac))
+            cutoffs = []
+            for j in range(self.replication):
+                cutoff = off + ln
+                if self.chaos is not None:
+                    spec = self.chaos.at("pfs.write_unit", key=key, unit=unit, replica=j)
+                    if spec is not None and spec.kind == "torn_write":
+                        torn = spec
+                        cutoff = off + max(0, int(ln * spec.frac))
+                cutoffs.append(cutoff)
             crc = 0
-            with open(self._stripe_path(key, unit), "wb") as fh:
+            handles = [
+                self._open_for_write(self._stripe_path(key, unit, j))
+                for j in range(self.replication)
+            ]
+            try:
                 for b0 in range(off, off + ln, self.io_buffer_bytes):
                     chunk = mv[b0 : min(b0 + self.io_buffer_bytes, off + ln)]
                     crc = zlib.crc32(chunk, crc)
-                    if b0 < cutoff:
-                        fh.write(chunk[: cutoff - b0])
+                    for fh, cutoff in zip(handles, cutoffs):
+                        if b0 < cutoff:
+                            fh.write(chunk[: cutoff - b0])
                 if self.fsync:
-                    fh.flush()
-                    os.fsync(fh.fileno())
+                    for fh in handles:
+                        fh.flush()
+                        os.fsync(fh.fileno())
+            finally:
+                for fh in handles:
+                    fh.close()
+            # Replicas beyond the current factor are stale survivors of a
+            # wider-replication past: an in-place overwrite must kill them
+            # or read-any could later serve the *old* version of this unit.
+            for j in range(self.replication, self.n_servers):
+                try:
+                    os.remove(self._stripe_path(key, unit, j))
+                except FileNotFoundError:
+                    pass
             if torn is not None and not torn.silent:
                 raise IntegrityError(f"injected torn write on stripe unit {unit} of {key!r}")
             return crc
@@ -595,12 +683,18 @@ class PFSTier:
             crcs = self._map_units(write_unit, units)
             self._write_manifest(key, len(mv), crcs, tag)
             # In-place overwrite with fewer units: unlink the stale tail
-            # (units are contiguous, so probe until the first missing file).
+            # (units are contiguous, so probe all replica placements until
+            # the first unit with no file anywhere).
             unit = len(units)
             while True:
-                try:
-                    os.remove(self._stripe_path(key, unit))
-                except FileNotFoundError:
+                found = False
+                for j in range(self.n_servers):
+                    try:
+                        os.remove(self._stripe_path(key, unit, j))
+                        found = True
+                    except FileNotFoundError:
+                        pass
+                if not found:
                     break
                 unit += 1
         t1 = time.perf_counter()
@@ -618,50 +712,209 @@ class PFSTier:
             if "\n" in tag:
                 raise ValueError("manifest tag must be a single line")
             manifest += f"#{tag}\n"
-        path = self._manifest_path(key)
+        if self.replication > 1:
+            # Recorded in the sidecar (not just tier config) so readers and
+            # the scrubber know the replica set of *this object* even after
+            # the tier is reopened with a different factor.  Omitted at r=1,
+            # which keeps unreplicated manifests byte-identical to the
+            # pre-replication format.
+            manifest += f"#repl={self.replication}\n"
+        for j in range(self.replication):
+            self._replace_manifest_text(key, j, manifest)
+        for j in range(self.replication, self.n_servers):
+            # Stale manifest replicas from a wider-replication past would
+            # let read-any resurrect the old object version; remove them.
+            try:
+                os.remove(self._manifest_path(key, j))
+            except FileNotFoundError:
+                pass
+
+    def _replace_manifest_text(self, key: str, replica: int, text: str) -> None:
+        """Atomically land one manifest replica (tmp + rename, fsync-aware)."""
+        path = self._manifest_path(key, replica)
         tmp = path + ".tmp"
-        with open(tmp, "w") as fh:
-            fh.write(manifest)
+        try:
+            fh = open(tmp, "w")
+        except FileNotFoundError:
+            os.makedirs(os.path.dirname(path), exist_ok=True)
+            fh = open(tmp, "w")
+        with fh:
+            fh.write(text)
             if self.fsync:
                 fh.flush()
                 os.fsync(fh.fileno())
         os.replace(tmp, path)  # atomic: readers see old or new, never partial
 
-    def _read_manifest(self, key: str) -> tuple[int, list[int]]:
+    @staticmethod
+    def _load_manifest_text(path: str) -> str:
+        """Read sidecar bytes and decode defensively: scribbled manifests
+        can hold arbitrary bytes, and a UnicodeDecodeError here would be a
+        crash where the contract promises IntegrityError.  Replacement
+        characters fail the strict format checks in ``_parse_manifest``,
+        which convicts the replica and lets read-any fail over."""
+        with open(path, "rb") as fh:
+            return fh.read().decode("utf-8", errors="replace")
+
+    def _parse_manifest(self, key: str, text: str) -> tuple[int, list[int], int]:
+        """Parse sidecar text into ``(total, unit CRCs, replication)``.
+
+        Every malformation — truncation, scribbled bytes, a CRC count that
+        disagrees with the recorded size — raises :class:`IntegrityError`:
+        a manifest that cannot be fully trusted must never yield partial
+        data (read-any then tries the next manifest replica).
+        """
+        lines = text.splitlines()
         try:
-            with open(self._manifest_path(key)) as fh:
-                lines = fh.read().splitlines()
-        except FileNotFoundError:
-            raise BlockNotFound(key) from None
-        # "#"-prefixed lines are tags (see put); CRC lines are bare hex.
-        return int(lines[0]), [int(x, 16) for x in lines[1:] if x and not x.startswith("#")]
+            total = int(lines[0])
+        except (IndexError, ValueError):
+            raise IntegrityError(f"corrupt manifest for {key!r}: bad size line") from None
+        if total < 0:
+            raise IntegrityError(f"corrupt manifest for {key!r}: negative size")
+        crcs: list[int] = []
+        repl = 1
+        for ln in lines[1:]:
+            if not ln:
+                continue
+            if ln.startswith("#"):
+                if ln.startswith("#repl="):
+                    try:
+                        repl = int(ln[len("#repl="):])
+                    except ValueError:
+                        raise IntegrityError(
+                            f"corrupt manifest for {key!r}: bad replication line"
+                        ) from None
+                continue
+            try:
+                crcs.append(int(ln, 16))
+            except ValueError:
+                raise IntegrityError(f"corrupt manifest for {key!r}: bad CRC line") from None
+        expect = (total + self.stripe_bytes - 1) // self.stripe_bytes
+        if len(crcs) != expect:
+            raise IntegrityError(
+                f"corrupt manifest for {key!r}: {len(crcs)} CRCs for {expect} stripe units"
+            )
+        if not 1 <= repl <= self.n_servers:
+            raise IntegrityError(
+                f"corrupt manifest for {key!r}: replication {repl} outside [1, {self.n_servers}]"
+            )
+        return total, crcs, repl
+
+    def _read_manifest(self, key: str) -> tuple[int, list[int], int]:
+        """Read-any over the manifest replicas: ``(total, CRCs, repl)``.
+
+        The replica count of an existing object is recorded *inside* the
+        manifest, so every server directory is probed — a key written at
+        r=2 stays readable when server_00 (the primary manifest home) is
+        lost.  A manifest that exists but fails to parse is treated like a
+        bad data replica: fail over, and only surface the
+        :class:`IntegrityError` when no replica parses.
+        """
+        last: IntegrityError | None = None
+        for j in range(self.n_servers):
+            try:
+                text = self._load_manifest_text(self._manifest_path(key, j))
+            except FileNotFoundError:
+                continue
+            try:
+                parsed = self._parse_manifest(key, text)
+            except IntegrityError as exc:
+                last = exc
+                continue
+            if j:
+                with self._stats_lock:
+                    self.stats.degraded_reads += 1
+                self._note_degraded(key)
+            return parsed
+        if last is not None:
+            raise last
+        raise BlockNotFound(key)
 
     def describe(self, key: str) -> tuple[int, str | None]:
         """``(physical size, manifest tag)`` without touching data bytes."""
-        try:
-            with open(self._manifest_path(key)) as fh:
-                lines = fh.read().splitlines()
-        except FileNotFoundError:
-            raise BlockNotFound(key) from None
-        tag = next((x[1:] for x in lines[1:] if x.startswith("#")), None)
-        return int(lines[0]), tag
+        last: IntegrityError | None = None
+        for j in range(self.n_servers):
+            try:
+                text = self._load_manifest_text(self._manifest_path(key, j))
+            except FileNotFoundError:
+                continue
+            try:
+                total, _, _ = self._parse_manifest(key, text)
+            except IntegrityError as exc:
+                last = exc
+                continue
+            lines = text.splitlines()
+            tag = next(
+                (x[1:] for x in lines[1:] if x.startswith("#") and not x.startswith("#repl=")),
+                None,
+            )
+            return total, tag
+        if last is not None:
+            raise last
+        raise BlockNotFound(key)
 
-    def _read_unit_into(self, key: str, unit: int, uln: int, dst: memoryview, crc_want: int) -> None:
-        """Fill ``dst`` (length ``uln``) from one stripe file, checking CRC."""
+    def _read_unit_into(
+        self, key: str, unit: int, uln: int, dst: memoryview, crc_want: int, replica: int = 0
+    ) -> None:
+        """Fill ``dst`` (length ``uln``) from one stripe replica, checking CRC."""
+        # Chaos site "pfs.read_unit": a ``bit_flip`` fault rots one byte of
+        # this replica *on disk* before the CRC is folded — the manifest
+        # convicts the flipped copy now and on every later read (including
+        # the scrubber's verification pass) until repair rewrites it.
+        flip = None
+        if self.chaos is not None:
+            spec = self.chaos.at("pfs.read_unit", key=key, unit=unit, replica=replica)
+            if spec is not None and spec.kind == "bit_flip":
+                flip = spec
+        path = self._stripe_path(key, unit, replica)
         crc = 0
         try:
-            with open(self._stripe_path(key, unit), "rb") as fh:
+            with open(path, "rb") as fh:
                 pos = 0
                 while pos < uln:
                     n = fh.readinto(dst[pos : pos + min(self.io_buffer_bytes, uln - pos)])
                     if not n:
                         raise IntegrityError(f"truncated stripe unit {unit} of {key!r}")
+                    if flip is not None:
+                        dst[pos] ^= 0xFF
+                        with open(path, "r+b") as rot:
+                            rot.seek(pos)
+                            rot.write(bytes(dst[pos : pos + 1]))
+                        flip = None
                     crc = zlib.crc32(dst[pos : pos + n], crc)
                     pos += n
         except FileNotFoundError:
             raise IntegrityError(f"missing stripe unit {unit} of {key!r}") from None
         if crc != crc_want:
-            raise IntegrityError(f"CRC mismatch on stripe unit {unit} of {key!r}")
+            raise IntegrityError(
+                f"CRC mismatch on stripe unit {unit} of {key!r} (replica {replica})"
+            )
+
+    def _read_unit_any(
+        self, key: str, unit: int, uln: int, dst: memoryview, crc_want: int, repl: int
+    ) -> None:
+        """Read-any failover: fill ``dst`` from the first intact replica.
+
+        A replica that is missing, truncated, or CRC-convicted is skipped
+        (each failed attempt is fully overwritten by the next — the unit
+        read loop always writes all ``uln`` bytes or raises).  Serving from
+        a non-primary copy counts one degraded read and pokes
+        ``on_degraded`` so the scrubber queues this key for repair.  Every
+        replica failing is data loss: the last error surfaces.
+        """
+        last: IntegrityError | None = None
+        for j in range(repl):
+            try:
+                self._read_unit_into(key, unit, uln, dst, crc_want, replica=j)
+            except IntegrityError as exc:
+                last = exc
+                continue
+            if j:
+                with self._stats_lock:
+                    self.stats.degraded_reads += 1
+                self._note_degraded(key)
+            return
+        assert last is not None
+        raise last
 
     def readinto(
         self, key: str, buf, offset: int = 0, length: int | None = None
@@ -676,9 +929,10 @@ class PFSTier:
         read, ``None`` for a partial range.
         """
         t0 = time.perf_counter()
+        self._maybe_chaos_server_down()
         out = memoryview(buf)
         with self._key_lock(key):
-            total, crcs = self._read_manifest(key)
+            total, crcs, repl = self._read_manifest(key)
             end = total if length is None else min(total, offset + length)
             want = max(0, end - offset)
             if len(out) < want:
@@ -689,7 +943,7 @@ class PFSTier:
                 if uoff >= offset and uoff + uln <= end:
                     # Fast path: the whole unit lands inside the request —
                     # read it straight into place.
-                    self._read_unit_into(key, unit, uln, out[uoff - offset :], crcs[unit])
+                    self._read_unit_any(key, unit, uln, out[uoff - offset :], crcs[unit], repl)
                 else:
                     # Boundary unit: CRC covers the whole unit, so stage it
                     # once, verify, then copy only the overlapping slice.
@@ -698,7 +952,7 @@ class PFSTier:
                     # fresh bytearray each time is pure allocator churn.
                     stage = self._buf_pool.acquire(uln)
                     try:
-                        self._read_unit_into(key, unit, uln, memoryview(stage), crcs[unit])
+                        self._read_unit_any(key, unit, uln, memoryview(stage), crcs[unit], repl)
                         lo = max(offset - uoff, 0)
                         hi = min(end - uoff, uln)
                         out[uoff + lo - offset : uoff + hi - offset] = stage[lo:hi]
@@ -722,7 +976,7 @@ class PFSTier:
         # concurrent put growing the key can't invalidate the buffer size
         # between the two manifest reads.
         with self._key_lock(key):
-            total, _ = self._read_manifest(key)
+            total, _, _ = self._read_manifest(key)
             end = total if length is None else min(total, offset + length)
             out = self._buf_pool.acquire(max(0, end - offset))
             try:
@@ -734,39 +988,205 @@ class PFSTier:
     def delete(self, key: str) -> bool:
         with self._key_lock(key):
             try:
-                total, _ = self._read_manifest(key)
+                total, _, _ = self._read_manifest(key)
             except BlockNotFound:
                 return False
+            except IntegrityError:
+                # No parsable manifest anywhere: fall back to a directory
+                # scan so a fully-corrupt key can still be reaped.
+                return self._delete_by_scan(key)
             for unit, _, _ in self._iter_units(total):
+                for j in range(self.n_servers):
+                    try:
+                        os.remove(self._stripe_path(key, unit, j))
+                    except FileNotFoundError:
+                        pass
+            for j in range(self.n_servers):
                 try:
-                    os.remove(self._stripe_path(key, unit))
+                    os.remove(self._manifest_path(key, j))
                 except FileNotFoundError:
                     pass
-            os.remove(self._manifest_path(key))
             return True
 
+    def _delete_by_scan(self, key: str) -> bool:
+        safe = self._safe(key)
+        manifest = safe + self.MANIFEST_SUFFIX
+        found = False
+        for s in range(self.n_servers):
+            d = self._server_dir(s)
+            try:
+                names = os.listdir(d)
+            except FileNotFoundError:
+                continue
+            for name in names:
+                if name == manifest or (name.startswith(safe + ".s") and not name.endswith(".tmp")):
+                    try:
+                        os.remove(os.path.join(d, name))
+                        found = True
+                    except FileNotFoundError:
+                        pass
+        return found
+
     def contains(self, key: str) -> bool:
-        return os.path.exists(self._manifest_path(key))
+        return any(
+            os.path.exists(self._manifest_path(key, j)) for j in range(self.n_servers)
+        )
 
     def size_of(self, key: str) -> int:
-        total, _ = self._read_manifest(key)
+        total, _, _ = self._read_manifest(key)
         return total
 
     def keys(self) -> list[str]:
-        out = []
-        for name in os.listdir(self._server_dir(0)):
-            if name.endswith(self.MANIFEST_SUFFIX):
-                out.append(self._unsafe(name[: -len(self.MANIFEST_SUFFIX)]))
-        return out
+        # Manifests replicate across server directories, so scan them all
+        # (dedup by key) — a key written at r=2 stays listed when the
+        # primary manifest home is a lost server directory.
+        out: set[str] = set()
+        for s in range(self.n_servers):
+            try:
+                names = os.listdir(self._server_dir(s))
+            except FileNotFoundError:
+                continue
+            for name in names:
+                if name.endswith(self.MANIFEST_SUFFIX):
+                    out.add(self._unsafe(name[: -len(self.MANIFEST_SUFFIX)]))
+        return sorted(out)
 
     def server_bytes(self) -> dict[int, int]:
         """On-disk bytes per server directory (load-balance check)."""
         out = {}
         for s in range(self.n_servers):
             d = self._server_dir(s)
-            out[s] = sum(
-                os.path.getsize(os.path.join(d, f))
-                for f in os.listdir(d)
-                if not f.endswith(self.MANIFEST_SUFFIX) and not f.endswith(".tmp")
-            )
+            try:
+                names = os.listdir(d)
+            except FileNotFoundError:
+                out[s] = 0
+                continue
+            total = 0
+            for f in names:
+                if f.endswith(self.MANIFEST_SUFFIX) or f.endswith(".tmp"):
+                    continue
+                try:
+                    total += os.path.getsize(os.path.join(d, f))
+                except FileNotFoundError:
+                    pass
+            out[s] = total
         return out
+
+    # -- repair ---------------------------------------------------------------
+
+    def verify(self, key: str) -> list[tuple[int, int]]:
+        """CRC-check every replica of every stripe unit of ``key``.
+
+        Returns the bad ``(unit, replica)`` pairs without modifying
+        anything — the scrubber's detection pass.  Raises
+        :class:`BlockNotFound`/:class:`IntegrityError` only when no
+        manifest replica is readable at all.
+        """
+        with self._key_lock(key):
+            total, crcs, repl = self._read_manifest(key)
+            units = list(self._iter_units(total))
+
+            def check_unit(u: tuple[int, int, int]) -> list[tuple[int, int]]:
+                unit, _, ln = u
+                bad = []
+                stage = self._buf_pool.acquire(ln)
+                try:
+                    for j in range(repl):
+                        try:
+                            self._read_unit_into(
+                                key, unit, ln, memoryview(stage), crcs[unit], replica=j
+                            )
+                        except IntegrityError:
+                            bad.append((unit, j))
+                finally:
+                    self._buf_pool.release(stage)
+                return bad
+
+            return [b for bads in self._map_units(check_unit, units) for b in bads]
+
+    def repair(self, key: str) -> dict:
+        """Rewrite every bad or missing replica of ``key`` from a surviving
+        good copy — the failure-model table's "re-replication from
+        surviving replicas" row as real code.
+
+        Verifies all ``r`` replicas of every stripe unit (and all manifest
+        replicas), rewrites the convicted ones (recreating lost server
+        directories), counts ``TierStats.repaired_units``, and returns a
+        summary dict.  A unit with **no** intact replica raises
+        :class:`IntegrityError` — that is genuine data loss, and the caller
+        must not believe the object is healthy.
+        """
+        t0 = time.perf_counter()
+        with self._key_lock(key):
+            total, crcs, repl = self._read_manifest(key)
+            units = list(self._iter_units(total))
+
+            def fix_unit(u: tuple[int, int, int]) -> int:
+                unit, _, ln = u
+                stage = self._buf_pool.acquire(ln)
+                scratch = self._buf_pool.acquire(ln)
+                try:
+                    good = None
+                    bad: list[int] = []
+                    for j in range(repl):
+                        dst = memoryview(stage) if good is None else memoryview(scratch)
+                        try:
+                            self._read_unit_into(key, unit, ln, dst, crcs[unit], replica=j)
+                        except IntegrityError:
+                            bad.append(j)
+                            continue
+                        if good is None:
+                            good = j
+                    if good is None:
+                        raise IntegrityError(
+                            f"stripe unit {unit} of {key!r}: no intact replica — cannot repair"
+                        )
+                    src = memoryview(stage)[:ln]
+                    for j in bad:
+                        with self._open_for_write(self._stripe_path(key, unit, j)) as fh:
+                            for b0 in range(0, ln, self.io_buffer_bytes):
+                                fh.write(src[b0 : b0 + self.io_buffer_bytes])
+                            if self.fsync:
+                                fh.flush()
+                                os.fsync(fh.fileno())
+                    return len(bad)
+                finally:
+                    self._buf_pool.release(scratch)
+                    self._buf_pool.release(stage)
+
+            repaired = sum(self._map_units(fix_unit, units))
+            # Manifest replicas heal the same way: copy the first parsable
+            # sidecar text over the missing/corrupt ones.
+            good_text: str | None = None
+            bad_manifests: list[int] = []
+            for j in range(repl):
+                try:
+                    text = self._load_manifest_text(self._manifest_path(key, j))
+                    self._parse_manifest(key, text)
+                except (FileNotFoundError, IntegrityError):
+                    bad_manifests.append(j)
+                    continue
+                if good_text is None:
+                    good_text = text
+            for j in bad_manifests:
+                assert good_text is not None  # _read_manifest above succeeded
+                self._replace_manifest_text(key, j, good_text)
+        t1 = time.perf_counter()
+        repaired_bytes = 0
+        if repaired:
+            # Approximate: repaired units are full stripes except a tail.
+            repaired_bytes = sum(min(self.stripe_bytes, total) for _ in range(repaired))
+        with self._stats_lock:
+            self.stats.repaired_units += repaired
+            # Verification reads every replica and repair rewrites the bad
+            # ones — both land in the ledger so the controller's PFS
+            # utilization estimate sees scrub traffic like any other I/O.
+            self.stats.record_read(total * repl, t1 - t0, end=t1)
+            if repaired or bad_manifests:
+                self.stats.record_write(repaired_bytes, t1 - t0, end=t1)
+        return {
+            "units": len(units),
+            "replication": repl,
+            "repaired_units": repaired,
+            "repaired_manifests": len(bad_manifests),
+        }

@@ -63,6 +63,14 @@ class FaultSpec:
       consecutive firings ≈ a pause of ``count * ttl/3``).
     * ``corrupt`` — scribble garbage over the file the site just wrote
       (lease-file corruption).
+    * ``bit_flip`` — rot one byte of the stripe replica being read, *on
+      disk*, before its CRC is folded (site ``pfs.read_unit``): the
+      manifest convicts the copy on this and every later read until the
+      repair path rewrites it.
+    * ``server_down`` — remove one PFS server directory wholesale (site
+      ``pfs.server_down``; ``where={"server": k}`` picks the victim) —
+      a lost data node that replicated reads and scrubber
+      re-replication must survive.
     * ``crash`` — raise :class:`SimulatedFailure` at the site, emulating
       process death at that exact point (e.g. mid-takeover with the
       sidecar lock held).
@@ -115,7 +123,13 @@ class ChaosInjector:
     @classmethod
     def from_specs(cls, specs: list[str], seed: int = 0) -> "ChaosInjector":
         """Parse CLI fault strings: ``site:kind[,key=value,...]`` — e.g.
-        ``peer.request:delay,prob=0.2,delay_s=0.05``."""
+        ``peer.request:delay,prob=0.2,delay_s=0.05``.
+
+        Keys that are not :class:`FaultSpec` fields become ``where``
+        context filters (int-valued when they look like ints), so a
+        victim can be named from the CLI:
+        ``pfs.server_down:server_down,server=1,count=1``.
+        """
         inj = cls(seed=seed)
         for s in specs:
             head, _, tail = s.partition(",")
@@ -123,7 +137,15 @@ class ChaosInjector:
             kw: dict = {}
             for item in filter(None, tail.split(",")):
                 k, _, v = item.partition("=")
-                field_type = FaultSpec.__dataclass_fields__[k].type
+                field = FaultSpec.__dataclass_fields__.get(k)
+                if field is None:
+                    try:
+                        val: object = int(v)
+                    except ValueError:
+                        val = v
+                    kw.setdefault("where", {})[k] = val
+                    continue
+                field_type = field.type
                 if field_type.startswith("bool"):
                     kw[k] = v.lower() in ("1", "true", "yes")
                 elif field_type.startswith("int"):

@@ -27,6 +27,11 @@ from repro.core.codec import (
 from repro.core.store import TwoLevelStore
 from repro.core.tiers import IntegrityError
 
+try:  # optional: widens the fuzz corpus when installed (CI: pip install .[test])
+    from hypothesis import HealthCheck, given, settings, strategies as st
+except ImportError:  # pragma: no cover - local runs without hypothesis
+    st = None
+
 
 def _compressible(n: int, seed: int = 0) -> bytes:
     # int32 tokens < 32768: upper bytes are zero — shuffle + zlib love it.
@@ -169,6 +174,102 @@ def test_store_corrupted_frames_raise_integrity_error(cstore, tmp_path):
     cstore.set_mem_capacity(2 * 2**20)
     with pytest.raises(IntegrityError):
         cstore.get("c")
+
+
+# ------------------------------------------------------------------ fuzz
+#
+# DESIGN.md §15's integrity contract applied to the container parser:
+# truncated or scribbled container bytes must either raise IntegrityError
+# or decode to the exact original block — never crash (struct/zlib/numpy
+# errors escaping), never return partial or garbled data.
+
+_FUZZ_FB = 64 * 1024
+_HEADER_BYTES = 20  # struct "<4sBBBBIQ" — magic, codec, filt, width, flags, ...
+
+
+def _fuzz_decode(data: bytes, blob: bytes, strict: bool = True) -> None:
+    """Decode a mutated container.  Always: no exception but IntegrityError
+    may escape.  ``strict`` additionally demands bit-identity on success —
+    waived only for mutations inside the 20-byte header, whose filter/width
+    metadata can garble the transform without changing lengths; the store
+    convicts those via the stripe CRC over the *physical* container bytes
+    before decode ever runs (see test_store_corrupted_frames_...)."""
+    try:
+        raw, crc = decode(blob, _FUZZ_FB)
+    except IntegrityError:
+        return
+    if strict:
+        assert raw == data
+        assert crc == zlib.crc32(data)
+
+
+@pytest.fixture(scope="module")
+def fuzz_container():
+    data = _compressible(300 * 1024, seed=42)  # all frames compressed
+    enc = encode(data, CodecSpec(frame_bytes=_FUZZ_FB))
+    assert enc is not None
+    return data, enc.payload
+
+
+class TestContainerFuzz:
+    def test_truncation_every_header_byte_and_sampled_payload(self, fuzz_container):
+        data, payload = fuzz_container
+        head = index_bytes(len(data), _FUZZ_FB)
+        import random as _random
+
+        rng = _random.Random(0)
+        cuts = list(range(head + 1)) + [rng.randrange(head, len(payload)) for _ in range(64)]
+        for cut in cuts:
+            _fuzz_decode(data, payload[:cut])
+
+    def test_scribbles_in_header_frame_table_and_frames(self, fuzz_container):
+        data, payload = fuzz_container
+        head = index_bytes(len(data), _FUZZ_FB)
+        import random as _random
+
+        rng = _random.Random(1)
+        positions = list(range(head)) + [rng.randrange(len(payload)) for _ in range(128)]
+        for pos in positions:
+            blob = bytearray(payload)
+            blob[pos] ^= rng.randrange(1, 256)
+            _fuzz_decode(data, bytes(blob), strict=pos >= _HEADER_BYTES)
+
+    def test_random_bytes_never_parse_as_container(self):
+        import random as _random
+
+        rng = _random.Random(2)
+        for _ in range(200):
+            blob = rng.randbytes(rng.randrange(0, 256))
+            with pytest.raises(IntegrityError):
+                parse_index(blob, _FUZZ_FB)
+
+    def test_parse_index_rejects_structured_header_lies(self, fuzz_container):
+        _, payload = fuzz_container
+        # bad filter id / width bytes in an otherwise valid header must be
+        # convicted at parse time, not crash inside the numpy un-filter
+        for offset, value in [(5, 99), (6, 0), (6, 3)]:  # filt, width, width
+            blob = bytearray(payload)
+            blob[offset] = value
+            with pytest.raises(IntegrityError):
+                parse_index(bytes(blob), _FUZZ_FB)
+
+
+if st is not None:
+
+    @settings(
+        max_examples=80,
+        deadline=None,
+        suppress_health_check=[HealthCheck.function_scoped_fixture],
+    )
+    @given(st.data())
+    def test_container_mutation_property(fuzz_container, data_st):
+        """Hypothesis sweep over splice mutations of a valid container."""
+        data, payload = fuzz_container
+        pos = data_st.draw(st.integers(0, len(payload) - 1))
+        cut = data_st.draw(st.integers(0, min(256, len(payload) - pos)))
+        insert = data_st.draw(st.binary(max_size=16))
+        blob = payload[:pos] + insert + payload[pos + cut :]
+        _fuzz_decode(data, blob, strict=pos >= _HEADER_BYTES)
 
 
 def test_codecless_reader_decodes_tagged_objects(tmp_path):

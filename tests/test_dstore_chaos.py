@@ -373,6 +373,140 @@ class TestBackgroundReclamation:
             b.close()
 
 
+class TestReadChaosAndSelfHealing:
+    """DESIGN.md §15: read-side chaos (bit rot, lost server dirs) against
+    the replicated cold tier — read-any failover, quarantine interplay,
+    scrub-driven repair, and repair-event gossip."""
+
+    def test_bit_flip_fault_fails_over_and_is_counted(self, tmp_path):
+        chaos = ChaosInjector.from_specs(["pfs.read_unit:bit_flip,replica=0,count=1"])
+        a = _shard(1, tmp_path / "pfs", chaos=chaos, replication=2)
+        try:
+            data = os.urandom(300 * 1024)
+            a.put("f", data)
+            # the flip rots replica 0 on disk mid-read; read-any serves the
+            # survivor bit-identically
+            assert a.store.get("f", mode=ReadMode.PFS_BYPASS) == data
+            assert chaos.fired_count("pfs.read_unit", "bit_flip") == 1
+            assert a.store.pfs.stats.degraded_reads >= 1
+            # the rot is persistent: the convicted replica stays convicted
+            blks = [a.store._bkey("f", i) for i in range(a.store._files["f"].n_blocks)]
+            bad = [blk for blk in blks if a.store.pfs.verify(blk)]
+            assert bad, "flipped replica should fail verification on disk"
+            for blk in bad:
+                a.store.pfs.repair(blk)
+                assert a.store.pfs.verify(blk) == []
+        finally:
+            a.close()
+
+    def test_server_down_where_filter_picks_victim_and_scrub_re_replicates(self, tmp_path):
+        w = _shard(1, tmp_path / "pfs", replication=2)
+        blobs = {f"k/{i}": os.urandom(200 * 1024 + i) for i in range(3)}
+        try:
+            for n, blob in blobs.items():
+                w.put(n, blob)
+        finally:
+            w.close()
+        # reopen under chaos: the first PFS touch wipes server_01 whole —
+        # puts already landed, so the loss hits a populated namespace
+        chaos = ChaosInjector.from_specs(["pfs.server_down:server_down,server=1,count=1"])
+        assert chaos._faults[0].where == {"server": 1}  # from_specs where-grammar
+        a = _shard(1, tmp_path / "pfs", chaos=chaos, replication=2,
+                   scrub_interval_s=3600.0)
+        try:
+            assert a.store.get("k/0", mode=ReadMode.PFS_BYPASS) == blobs["k/0"]
+            assert chaos.fired_count("pfs.server_down", "server_down") == 1
+            # zero acked bytes lost while degraded...
+            for n, blob in blobs.items():
+                assert a.store.get(n, mode=ReadMode.PFS_BYPASS) == blob
+            assert a.store.pfs.stats.degraded_reads >= 1
+            # ...and the scrubber drains the loss to full re-replication
+            a.store.scrubber.scrub_until_clean()
+            for blk in a.store.pfs.keys():
+                assert a.store.pfs.verify(blk) == []
+            assert a.stats.scrub_repairs >= 1
+        finally:
+            a.close()
+
+    def test_quarantined_memory_and_rotten_primary_served_from_survivor(self, tmp_path):
+        """Satellite regression: memory copy corrupt AND primary PFS
+        replica corrupt — the read must still be bit-identical (quarantine
+        falls through to durable, read-any skips the rotten primary), and
+        repair heals in place."""
+        a = _shard(1, tmp_path / "pfs", replication=2, scrub_interval_s=3600.0)
+        try:
+            data = os.urandom(300 * 1024)
+            a.put("f", data)
+            st = a.store
+            bkey = next(iter(st._blocks))
+            meta = st._blocks[bkey]
+            st.mem.delete(bkey)
+            st.mem.put(bkey, os.urandom(meta.length))  # rotted resident copy
+            meta.verified = False
+            pfs = st.pfs
+            for unit, _off, _ln in pfs._iter_units(pfs.size_of(bkey)):
+                p = pfs._stripe_path(bkey, unit, 0)
+                with open(p, "r+b") as fh:  # rot every primary replica too
+                    fh.seek(7)
+                    b = fh.read(1)
+                    fh.seek(7)
+                    fh.write(bytes([b[0] ^ 0xFF]))
+            assert pfs.verify(bkey) != []  # rot is real before the read
+            assert a.get("f") == data  # bit-identical from the survivors
+            assert st.stats.integrity_failures >= 1  # quarantine convicted mem
+            assert pfs.stats.degraded_reads >= 1  # read-any skipped replica 0
+            # the degraded read enqueued the key; the scrubber thread wakes
+            # immediately (repairs jump the interval) — wait for the heal
+            deadline = time.monotonic() + 10
+            while time.monotonic() < deadline and pfs.verify(bkey) != []:
+                time.sleep(0.01)
+            assert pfs.verify(bkey) == []
+            assert st.scrubber.stats.queue_repairs >= 1
+            assert a.get("f") == data
+        finally:
+            a.close()
+
+    def test_repair_events_ride_gossip(self, tmp_path):
+        a = _shard(1, tmp_path / "pfs", replication=2, scrub_interval_s=3600.0)
+        b = _shard(2, tmp_path / "pfs", replication=2, scrub_interval_s=3600.0)
+        try:
+            data = os.urandom(200 * 1024)
+            a.put("f", data)
+            bkey = next(iter(a.store._blocks))
+            os.remove(a.store.pfs._stripe_path(bkey, 0, 0))
+            a.scrub_now()
+            assert a.stats.scrub_repairs == 1
+            a.publish_gossip()
+            seen = b.cluster_repairs()
+            assert any(ev["key"] == bkey for ev in seen.get(1, []))
+        finally:
+            a.close()
+            b.close()
+
+    def test_scrub_ownership_partitions_by_lease(self, tmp_path):
+        a = _shard(1, tmp_path / "pfs", replication=2, scrub_interval_s=3600.0)
+        b = _shard(2, tmp_path / "pfs", replication=2, scrub_interval_s=3600.0)
+        try:
+            a.put("mine", os.urandom(64 * 1024))
+            b.put("yours", os.urandom(64 * 1024))
+            mine_blocks = set(a.store.pfs.keys())
+            owned_a = {k for k in mine_blocks if a._scrub_owns(k)}
+            owned_b = {k for k in mine_blocks if b._scrub_owns(k)}
+            assert owned_a | owned_b == mine_blocks  # every block scrubbed...
+            assert owned_a.isdisjoint(owned_b)  # ...by exactly one host
+        finally:
+            a.close()
+            b.close()
+
+    def test_replication_geometry_must_agree_across_hosts(self, tmp_path):
+        a = _shard(1, tmp_path / "pfs", replication=2)
+        try:
+            with pytest.raises(ValueError, match="geometry"):
+                _shard(2, tmp_path / "pfs", replication=1)
+        finally:
+            a.close()
+
+
 class TestHeartbeatAndLeaseFaults:
     def test_heartbeat_pause_gets_host_fenced(self, tmp_path):
         chaos = ChaosInjector()

@@ -1,0 +1,384 @@
+"""PFSTier replication (DESIGN.md §15): rotated replica placement,
+read-any failover, scrub/repair, and manifest parse hardening.
+
+The manifest fuzz section follows the repo's hypothesis convention
+(pyproject: property tests importorskip themselves away when hypothesis
+is absent) but keeps a deterministic seeded sweep that always runs, so
+the "IntegrityError, never crash, never partial data" contract is
+exercised in every environment.
+"""
+
+from __future__ import annotations
+
+import os
+import random
+import shutil
+import zlib
+
+import pytest
+
+from repro.core import iomodel
+from repro.core.cluster import paper_average_cluster
+from repro.core.scrub import Scrubber
+from repro.core.tiers import BlockNotFound, IntegrityError, PFSTier, TierError
+
+try:  # optional: widens the fuzz corpus when installed (CI: pip install .[test])
+    from hypothesis import HealthCheck, given, settings, strategies as st
+except ImportError:  # pragma: no cover - local runs without hypothesis
+    st = None
+
+STRIPE = 8192
+
+
+def _tier(tmp_path, r=2, n=3, **kw) -> PFSTier:
+    kw.setdefault("stripe_bytes", STRIPE)
+    kw.setdefault("io_buffer_bytes", 4096)
+    return PFSTier(str(tmp_path / "pfs"), n_servers=n, replication=r, **kw)
+
+
+def _payload(nbytes: int, seed: int = 7) -> bytes:
+    return random.Random(seed).randbytes(nbytes)
+
+
+def _flip_byte(path: str, pos: int = 100) -> None:
+    with open(path, "r+b") as fh:
+        fh.seek(pos)
+        b = fh.read(1)
+        fh.seek(pos)
+        fh.write(bytes([b[0] ^ 0xFF]))
+
+
+# ------------------------------------------------------------------ layout
+
+
+class TestReplicatedLayout:
+    def test_replication_factor_validated(self, tmp_path):
+        with pytest.raises(ValueError):
+            _tier(tmp_path, r=3, n=2)
+        with pytest.raises(ValueError):
+            _tier(tmp_path, r=0, n=2)
+
+    @pytest.mark.parametrize("r", [1, 2, 3])
+    def test_roundtrip_and_whole_object_crc(self, tmp_path, r):
+        tier = _tier(tmp_path / str(r), r=r, n=3)
+        data = _payload(2 * STRIPE + 1500, seed=r)
+        crc = tier.put("k", data)
+        assert crc == zlib.crc32(data)
+        assert tier.get("k") == data
+        assert tier.verify("k") == []
+        assert tier.size_of("k") == len(data)
+
+    def test_rotated_placement_never_colocates(self, tmp_path):
+        tier = _tier(tmp_path, r=2, n=3)
+        data = _payload(3 * STRIPE)  # units 0..2, one full rotation
+        tier.put("k", data)
+        for unit in range(3):
+            homes = [
+                j
+                for s in range(3)
+                for j in range(3)
+                if os.path.exists(tier._stripe_path("k", unit, j))
+                and tier._stripe_path("k", unit, j).startswith(tier._server_dir(s))
+                and (unit + j) % 3 == s
+            ]
+            # replica j of unit u lives on server (u + j) % n and nowhere else
+            present = [
+                j for j in range(3) if os.path.exists(tier._stripe_path("k", unit, j))
+            ]
+            assert present == [0, 1], (unit, present)
+            assert sorted(homes) == [0, 1]
+        # manifest replicas on servers 0 and 1, none on 2
+        assert os.path.exists(tier._manifest_path("k", 0))
+        assert os.path.exists(tier._manifest_path("k", 1))
+        assert not os.path.exists(tier._manifest_path("k", 2))
+
+    def test_r1_layout_is_byte_identical_to_unreplicated(self, tmp_path):
+        tier = _tier(tmp_path, r=1, n=2)
+        data = _payload(STRIPE + 10)
+        tier.put("k", data, tag="tag:x")
+        text = open(tier._manifest_path("k", 0)).read()
+        assert "#repl" not in text  # pre-replication manifest format exactly
+        assert text.startswith(f"{len(data)}\n")
+        assert not os.path.exists(tier._manifest_path("k", 1))
+        for unit in range(2):
+            assert os.path.exists(tier._stripe_path("k", unit, 0))
+            assert not os.path.exists(tier._stripe_path("k", unit, 1))
+
+    def test_server_bytes_counts_every_replica(self, tmp_path):
+        tier = _tier(tmp_path, r=2, n=3)
+        data = _payload(3 * STRIPE)
+        tier.put("k", data)
+        assert sum(tier.server_bytes().values()) >= 2 * len(data)
+
+
+# ---------------------------------------------------------------- failover
+
+
+class TestReadAnyFailover:
+    def test_missing_primary_replica_fails_over(self, tmp_path):
+        tier = _tier(tmp_path, r=2, n=3)
+        degraded_keys: list[str] = []
+        tier.on_degraded = degraded_keys.append
+        data = _payload(2 * STRIPE + 99)
+        tier.put("k", data)
+        os.remove(tier._stripe_path("k", 0, 0))
+        assert tier.get("k") == data  # served from replica 1, bit-identical
+        assert tier.stats.degraded_reads >= 1
+        assert degraded_keys == ["k"]
+
+    def test_corrupt_replica_convicted_then_repaired(self, tmp_path):
+        tier = _tier(tmp_path, r=2, n=3)
+        data = _payload(3 * STRIPE)
+        tier.put("k", data)
+        _flip_byte(tier._stripe_path("k", 1, 0))
+        assert tier.get("k") == data
+        assert tier.verify("k") == [(1, 0)]
+        out = tier.repair("k")
+        assert out["repaired_units"] == 1 and out["replication"] == 2
+        assert tier.verify("k") == []
+        assert tier.stats.repaired_units == 1
+        before = tier.stats.degraded_reads
+        assert tier.get("k") == data  # repaired primary serves cleanly
+        assert tier.stats.degraded_reads == before
+
+    def test_lost_server_dir_reads_then_re_replicates(self, tmp_path):
+        tier = _tier(tmp_path, r=2, n=3)
+        data = _payload(3 * STRIPE + 17)
+        tier.put("k", data)
+        shutil.rmtree(tier._server_dir(0))  # takes unit 0's primary AND manifest 0
+        assert tier.contains("k")
+        assert tier.get("k") == data
+        out = tier.repair("k")
+        assert out["repaired_units"] >= 1
+        assert out["repaired_manifests"] == 1
+        assert tier.verify("k") == []
+        for unit in range(4):
+            for j in range(2):
+                assert os.path.exists(tier._stripe_path("k", unit, j))
+        assert os.path.exists(tier._manifest_path("k", 0))
+
+    def test_all_replicas_bad_is_data_loss(self, tmp_path):
+        tier = _tier(tmp_path, r=2, n=3)
+        data = _payload(2 * STRIPE)
+        tier.put("k", data)
+        _flip_byte(tier._stripe_path("k", 0, 0))
+        _flip_byte(tier._stripe_path("k", 0, 1))
+        with pytest.raises(IntegrityError):
+            tier.get("k")
+        with pytest.raises(IntegrityError, match="no intact replica"):
+            tier.repair("k")
+
+    def test_manifest_replica_failover(self, tmp_path):
+        tier = _tier(tmp_path, r=2, n=3)
+        data = _payload(STRIPE + 5)
+        tier.put("k", data, tag="t:1")
+        os.remove(tier._manifest_path("k", 0))
+        assert tier.describe("k") == (len(data), "t:1")
+        assert tier.get("k") == data
+        assert tier.stats.degraded_reads >= 1
+        assert tier.repair("k")["repaired_manifests"] == 1
+        assert os.path.exists(tier._manifest_path("k", 0))
+
+
+class TestStaleReplicaHygiene:
+    def test_overwrite_at_narrower_factor_kills_stale_copies(self, tmp_path):
+        wide = _tier(tmp_path, r=2, n=3)
+        v1 = _payload(3 * STRIPE, seed=1)
+        wide.put("k", v1)
+        narrow = _tier(tmp_path, r=1, n=3)
+        v2 = _payload(2 * STRIPE, seed=2)
+        narrow.put("k", v2)
+        # replica-1 files and manifests from the r=2 past are gone: read-any
+        # can never resurrect v1 bytes, and losing the (only) primary is an
+        # honest IntegrityError rather than silent time travel.
+        for unit in range(4):
+            assert not os.path.exists(narrow._stripe_path("k", unit, 1))
+        assert not os.path.exists(narrow._manifest_path("k", 1))
+        assert narrow.get("k") == v2
+        os.remove(narrow._stripe_path("k", 0, 0))
+        with pytest.raises(IntegrityError):
+            narrow.get("k")
+
+    def test_shrinking_object_trims_tail_units_on_all_replicas(self, tmp_path):
+        tier = _tier(tmp_path, r=2, n=3)
+        tier.put("k", _payload(3 * STRIPE))
+        tier.put("k", _payload(STRIPE // 2, seed=3))
+        for unit in (1, 2):
+            for j in range(3):
+                assert not os.path.exists(tier._stripe_path("k", unit, j))
+        assert tier.get("k") == _payload(STRIPE // 2, seed=3)
+
+
+# ----------------------------------------------------------------- scrubber
+
+
+class TestScrubber:
+    def test_degraded_read_enqueues_and_scrub_heals(self, tmp_path):
+        tier = _tier(tmp_path, r=2, n=3)
+        scrub = Scrubber(tier)  # installs itself as on_degraded; no thread
+        data = _payload(2 * STRIPE)
+        tier.put("k", data)
+        _flip_byte(tier._stripe_path("k", 0, 0))
+        assert tier.get("k") == data  # degraded read queues the repair
+        out = scrub.scrub_once()
+        assert out["queue_healed"] == 1
+        assert scrub.stats.queue_repairs == 1
+        assert scrub.stats.units_repaired >= 1
+        assert tier.verify("k") == []
+
+    def test_scrub_until_clean_converges(self, tmp_path):
+        tier = _tier(tmp_path, r=2, n=3)
+        scrub = Scrubber(tier)
+        tier.put("a", _payload(STRIPE, seed=4))
+        tier.put("b", _payload(2 * STRIPE, seed=5))
+        _flip_byte(tier._stripe_path("a", 0, 0))
+        shutil.rmtree(tier._server_dir(0))
+        assert scrub.scrub_until_clean() == 2  # one dirty pass, one clean
+        assert scrub.stats.keys_repaired == 2
+        assert tier.verify("a") == [] and tier.verify("b") == []
+
+    def test_lost_object_counted_not_fatal(self, tmp_path):
+        tier = _tier(tmp_path, r=2, n=3)
+        scrub = Scrubber(tier)
+        tier.put("dead", _payload(STRIPE, seed=6))
+        tier.put("live", _payload(STRIPE, seed=7))
+        os.remove(tier._stripe_path("dead", 0, 0))
+        os.remove(tier._stripe_path("dead", 0, 1))
+        out = scrub.scrub_once()
+        assert scrub.stats.lost_objects == 1
+        assert out["scanned"] == 2  # the healthy key still got scrubbed
+        assert tier.get("live") == _payload(STRIPE, seed=7)
+
+    def test_filter_fn_partitions_ownership(self, tmp_path):
+        tier = _tier(tmp_path, r=2, n=3)
+        scrub = Scrubber(tier, filter_fn=lambda k: k.startswith("mine/"))
+        tier.put("mine/a", _payload(100, seed=8))
+        tier.put("theirs/b", _payload(100, seed=9))
+        assert scrub.scrub_once()["scanned"] == 1
+
+    def test_background_thread_services_degraded_queue(self, tmp_path):
+        import time
+
+        tier = _tier(tmp_path, r=2, n=3)
+        data = _payload(2 * STRIPE, seed=10)
+        tier.put("k", data)
+        _flip_byte(tier._stripe_path("k", 1, 0))
+        with Scrubber(tier, interval_s=60.0) as scrub:  # interval never fires
+            assert tier.get("k") == data
+            deadline = time.monotonic() + 5
+            while time.monotonic() < deadline and scrub.stats.queue_repairs < 1:
+                time.sleep(0.01)
+            assert scrub.stats.queue_repairs == 1
+        assert tier.verify("k") == []
+        assert tier.on_degraded is None  # stop() uninstalls the hook
+
+
+# ---------------------------------------------------------- Eq. 2 replicas
+
+
+class TestReplicatedIOModel:
+    def test_write_cost_divides_by_replication_factor(self):
+        spec = paper_average_cluster()
+        base = iomodel.ofs_write(spec)
+        assert iomodel.pfs_write_replicated(spec, 1) == pytest.approx(base)
+        assert iomodel.pfs_write_replicated(spec, 2) == pytest.approx(base / 2)
+        assert iomodel.pfs_write_replicated(spec, 3) == pytest.approx(base / 3)
+        with pytest.raises(ValueError):
+            iomodel.pfs_write_replicated(spec, 0)
+
+    def test_read_any_degrades_with_failed_servers(self):
+        spec = paper_average_cluster()
+        healthy = iomodel.pfs_read_any(spec, replication=2)
+        assert healthy == pytest.approx(iomodel.ofs_read(spec))
+        degraded = iomodel.pfs_read_any(spec, replication=2, failed=1)
+        assert 0 < degraded < healthy
+        assert iomodel.pfs_read_any(spec, replication=2, failed=2) == 0.0
+        with pytest.raises(ValueError):
+            iomodel.pfs_read_any(spec, replication=0)
+
+
+# ------------------------------------------------------------ manifest fuzz
+
+
+def _fuzz_one(tier: PFSTier, key: str, data: bytes, blob: bytes) -> None:
+    """Land ``blob`` as every manifest replica, then demand the contract:
+    the read either raises a clean TierError or returns the exact original
+    bytes — never a crash, never partial/garbled data."""
+    for j in range(tier.replication):
+        with open(tier._manifest_path(key, j), "wb") as fh:
+            fh.write(blob)
+    try:
+        got = tier.get(key)
+    except TierError:
+        return
+    assert got == data
+
+
+@pytest.fixture
+def fuzz_tier(tmp_path):
+    tier = _tier(tmp_path, r=2, n=3)
+    data = _payload(2 * STRIPE + 1234, seed=11)
+    tier.put("k", data)
+    good = open(tier._manifest_path("k", 0), "rb").read()
+    return tier, data, good
+
+
+class TestManifestFuzz:
+    def test_truncation_at_every_byte(self, fuzz_tier):
+        tier, data, good = fuzz_tier
+        for cut in range(len(good)):
+            _fuzz_one(tier, "k", data, good[:cut])
+
+    def test_single_byte_scribbles(self, fuzz_tier):
+        tier, data, good = fuzz_tier
+        rng = random.Random(0)
+        for pos in range(len(good)):
+            blob = bytearray(good)
+            blob[pos] ^= rng.randrange(1, 256)
+            _fuzz_one(tier, "k", data, bytes(blob))
+
+    def test_random_garbage_manifests(self, fuzz_tier):
+        tier, data, good = fuzz_tier
+        rng = random.Random(1)
+        for _ in range(200):
+            blob = rng.randbytes(rng.randrange(0, 2 * len(good)))
+            _fuzz_one(tier, "k", data, blob)
+
+    def test_parse_manifest_rejects_structured_lies(self, fuzz_tier):
+        tier, _, _ = fuzz_tier
+        bad = [
+            "",  # empty
+            "not-a-number\n",  # size line
+            "-5\n",  # negative size
+            "100\n",  # size demands 1 CRC, none present
+            "100\ndeadbeef\ncafebabe\n",  # too many CRCs
+            "100\nzzzzzzzz\n",  # CRC not hex
+            "100\ndeadbeef\n#repl=9\n",  # repl outside [1, n_servers]
+            "100\ndeadbeef\n#repl=x\n",  # repl not an int
+        ]
+        for text in bad:
+            with pytest.raises(IntegrityError):
+                tier._parse_manifest("k", text)
+
+    def test_tag_line_survives_parse(self, fuzz_tier):
+        tier, _, _ = fuzz_tier
+        total, crcs, repl = tier._parse_manifest("k", "10\n12345678\n#tag:v\n#repl=2\n")
+        assert (total, len(crcs), repl) == (10, 1, 2)
+
+
+if st is not None:
+
+    @settings(
+        max_examples=80,
+        deadline=None,
+        suppress_health_check=[HealthCheck.function_scoped_fixture],
+    )
+    @given(st.data())
+    def test_manifest_mutation_property(fuzz_tier, data_st):
+        """Hypothesis sweep over splice mutations of a valid manifest."""
+        tier, data, good = fuzz_tier
+        pos = data_st.draw(st.integers(0, len(good) - 1))
+        cut = data_st.draw(st.integers(0, len(good) - pos))
+        insert = data_st.draw(st.binary(max_size=16))
+        blob = good[:pos] + insert + good[pos + cut :]
+        _fuzz_one(tier, "k", data, blob)
